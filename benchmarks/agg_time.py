@@ -1,0 +1,82 @@
+"""Fig 2 reproduction: GAR aggregation time as a function of (n, d).
+
+Paper protocol (§V-A): n gradients ~ U(0,1)^d; 7 timed runs per (n, d);
+drop the 2 farthest from the median; report mean±std of the remaining 5.
+Hardware differs (the paper uses a GTX 1080 Ti; this container is CPU-only)
+so absolute times differ — the claims under test are the SHAPES:
+
+* O(d) scaling: aggregation time linear in d for every rule (Thm 2(ii));
+* O(n²) scaling in the number of workers for (MULTI-)KRUM/BULYAN;
+* MEDIAN's advantage shrinks as d grows (the paper's crossover argument).
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import gar
+
+# CPU-sized version of the paper's grid (paper: n up to 39, d up to 1e7)
+NS = (7, 11, 15, 19, 23)
+DS = (100_000, 1_000_000)
+RULES = ("median", "multi_krum", "multi_bulyan")
+
+
+def _f_for(n: int) -> int:
+    return max(1, (n - 3) // 4)  # the paper's f = floor((n-3)/4)
+
+
+def _timed(fn, *args, reps: int = 7, drop: int = 2) -> Tuple[float, float]:
+    out = fn(*args)
+    jax.block_until_ready(out)  # compile + warm
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times = np.asarray(times)
+    med = np.median(times)
+    keep = times[np.argsort(np.abs(times - med))][: reps - drop]
+    return float(keep.mean()), float(keep.std())
+
+
+def run(csv_rows: List[str]) -> Dict[str, Dict[Tuple[int, int], float]]:
+    rng = np.random.default_rng(0)
+    results: Dict[str, Dict[Tuple[int, int], float]] = {r: {} for r in RULES}
+    jitted = {name: jax.jit(gar.get_gar(name), static_argnames=("f",))
+              for name in RULES}
+    for d in DS:
+        for n in NS:
+            G = jnp.asarray(rng.uniform(size=(n, d)).astype(np.float32))
+            f = _f_for(n)
+            for name in RULES:
+                mean, std = _timed(lambda g: jitted[name](g, f=f), G)
+                results[name][(n, d)] = mean
+                csv_rows.append(
+                    f"agg_time/{name}/n={n}/d={d},{mean*1e6:.1f},"
+                    f"std_us={std*1e6:.1f}")
+    # derived claims
+    for name in RULES:
+        r = results[name]
+        # O(d): time(d=1e6)/time(d=1e5) ≈ 10 for linear scaling (n fixed 15)
+        ratio_d = r[(15, DS[1])] / max(r[(15, DS[0])], 1e-9)
+        csv_rows.append(f"agg_time/{name}/d_scaling_ratio,{ratio_d:.2f},"
+                        f"linear_target=10.0")
+    # crossover: median vs multi_bulyan advantage shrinking with d
+    for d in DS:
+        adv = results["median"][(15, d)] / results["multi_bulyan"][(15, d)]
+        csv_rows.append(f"agg_time/median_over_multibulyan/d={d},{adv:.3f},"
+                        "higher_means_mb_faster")
+    return results
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    run(rows)
+    print("\n".join(rows))

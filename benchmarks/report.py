@@ -1,0 +1,71 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from results/*.json."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.roofline import derive  # noqa: E402
+
+RES = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(name):
+    path = os.path.join(RES, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        rows = json.load(fh)
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+def dryrun_table(rows):
+    lines = [
+        "| arch | shape | mesh | mode | lower (s) | compile (s) | "
+        "args GB/dev | temp GB/dev | HLO GFLOPs/dev | coll GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        c = r.get("corrected", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['trainer']} | "
+            f"{r['lower_s']} | {r['compile_s']} | "
+            f"{r.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+            f"{r.get('temp_size_in_bytes', 0)/1e9:.2f} | "
+            f"{c.get('flops', 0)/1e9:.0f} | "
+            f"{c.get('coll.total', 0)/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rows):
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | MODEL_FLOPS | MODEL/HLO | what would move it |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        d = derive(r)
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['t_compute_s']*1e3:.2f} | "
+            f"{d['t_memory_s']*1e3:.2f} | {d['t_collective_s']*1e3:.2f} | "
+            f"**{d['dominant']}** | {d['model_flops']:.2e} | "
+            f"{d['useful_ratio']:.2f} | {d['advice']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    single = _load("dryrun_single_pod.json")
+    multi = _load("dryrun_multi_pod.json")
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Single-pod (16×16 = 256 chips)\n")
+        print(dryrun_table(single))
+        print("\n### Multi-pod (2×16×16 = 512 chips)\n")
+        print(dryrun_table(multi))
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single-pod)\n")
+        print(roofline_table(single))

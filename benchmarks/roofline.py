@@ -1,0 +1,155 @@
+"""§Roofline: derive compute / memory / collective terms per (arch × shape).
+
+Inputs: results/dryrun_single_pod.json produced by launch/dryrun.py — which
+records, per combination, the trip-count-corrected per-device dot FLOPs and
+collective bytes (launch/hlo_analysis.py) plus memory_analysis sizes.
+
+Terms (TPU v5e):
+  compute    = FLOPs_global / (chips · 197e12)   [bf16 peak/chip]
+  memory     = HBM_bytes_global / (chips · 819e9)
+  collective = coll_bytes_global / (chips · 50e9) [per-link ICI]
+
+With SPMD, per-device quantities × chips = global, so each term reduces to
+per-device value / per-chip rate.  HBM traffic is not recoverable from HLO
+text, so the memory term uses an explicit analytic traffic model (documented
+inline, deliberately first-order):
+
+  train:   4·params·4B (fwd read, remat re-read, bwd grad write+read)
+           + opt-state r/w + grad-stack r/w ×3 + boundaries ×4
+  prefill: params read + KV write + boundary-free activations (2 passes)
+  decode:  params read + full cache read + cache slot write   (per token)
+
+MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (prefill) /
+2·N_active·batch (decode); attention FLOPs excluded by convention (they are
+included in the HLO count — the ratio column surfaces exactly this).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_single_pod.json")
+
+
+def _tokens(shape: str, row: Dict) -> int:
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+           "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+             "long_500k": 1}[shape]
+    return seq * batch
+
+
+def model_flops(row: Dict) -> float:
+    n_act = row["active_params"]
+    toks = _tokens(row["shape"], row)
+    mult = 6.0 if row["shape"] == "train_4k" else 2.0
+    if row.get("trainer") == "stream_global":
+        # two streamed backwards (each fwd-recompute 2 + bwd 4) on top of
+        # one boundary forward: 2 + 2·(2+4) = 14 ·N·D vs the standard 6
+        mult = 14.0
+    return mult * n_act * toks
+
+
+def memory_bytes_per_dev(row: Dict, chips: int) -> float:
+    p4 = row["params"] * 4.0
+    shape = row["shape"]
+    if shape == "train_4k":
+        grad_stack = 16 * row["params"] * 4.0 * 3.0 / 1  # n workers r/w x3
+        traffic = 4 * p4 + 2 * p4 + grad_stack
+    elif shape == "prefill_32k":
+        traffic = p4 + 2 * row.get("output_size_in_bytes", 0) * chips
+    else:
+        # decode: params + cache read (arguments minus params ≈ cache)
+        cache = max(row.get("argument_size_in_bytes", 0) * chips - p4, 0)
+        traffic = p4 + cache
+    return traffic / chips
+
+
+def derive(row: Dict) -> Dict:
+    chips = row["devices"]
+    corrected = row.get("corrected", {})
+    flops_dev = corrected.get("flops", 0.0)
+    coll_dev = corrected.get("coll.total", 0.0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = memory_bytes_per_dev(row, chips) / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(row)
+    hlo_global = flops_dev * chips
+    ratio = mf / hlo_global if hlo_global else float("nan")
+    advice = {
+        "compute": "raise arithmetic intensity: larger per-step tokens or "
+                   "reduce recompute (remat policy)",
+        "memory": "cut parameter/grad traffic: lower-precision stacks, "
+                  "fuse GAR passes, shard activations",
+        "collective": "reshape collectives: reduce-scatter instead of "
+                      "all-gather, overlap with compute, relayout the "
+                      "grad stack",
+    }[dominant]
+    return {
+        "arch": row["arch"], "shape": row["shape"], "mesh": row["mesh"],
+        "trainer": row.get("trainer", ""),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": ratio, "advice": advice,
+    }
+
+
+def run(csv_rows: List[str], path: Optional[str] = None) -> List[Dict]:
+    path = path or RESULTS
+    if not os.path.exists(path):
+        csv_rows.append("roofline/skipped,0,no dryrun json (run "
+                        "repro.launch.dryrun --all --json first)")
+        return []
+    with open(path) as fh:
+        rows = json.load(fh)
+    # keep the latest entry per (arch, shape, mesh)
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    out = []
+    for r in seen.values():
+        d = derive(r)
+        out.append(d)
+        csv_rows.append(
+            f"roofline/{d['arch']}/{d['shape']}/{d['mesh']},"
+            f"{max(d['t_compute_s'], d['t_memory_s'], d['t_collective_s'])*1e6:.1f},"
+            f"compute={d['t_compute_s']*1e3:.2f}ms_memory={d['t_memory_s']*1e3:.2f}ms_"
+            f"coll={d['t_collective_s']*1e3:.2f}ms_dom={d['dominant']}_"
+            f"useful={d['useful_ratio']:.2f}")
+    return out
+
+
+def markdown(path: Optional[str] = None) -> str:
+    rows: List[str] = []
+    derived = run(rows, path)
+    derived.sort(key=lambda d: (d["arch"], d["shape"]))
+    lines = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
+             "collective (ms) | dominant | MODEL/HLO | fix |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for d in derived:
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{d['t_compute_s']*1e3:.2f} | {d['t_memory_s']*1e3:.2f} | "
+            f"{d['t_collective_s']*1e3:.2f} | **{d['dominant']}** | "
+            f"{d['useful_ratio']:.2f} | {d['advice']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--markdown":
+        print(markdown())
+    else:
+        rows: List[str] = []
+        run(rows)
+        print("\n".join(rows))

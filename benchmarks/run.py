@@ -1,0 +1,47 @@
+"""Benchmark harness — one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (value column semantics noted
+per section).  Sections:
+
+* agg_time    — Fig 2: aggregation wall-time vs (n, d), O(d)/O(n²) scaling
+* accuracy    — Fig 3: max top-1 accuracy per GAR × per-worker batch size
+* resilience  — Lemma 1 cone bound, Def-2 leeway scaling, Thm 1/2 slowdown
+* roofline    — §Roofline terms from the dry-run artifacts (if present)
+
+Env: BENCH_SECTIONS=agg_time,accuracy,... to select a subset.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import List
+
+
+def main() -> None:
+    sections = os.environ.get(
+        "BENCH_SECTIONS", "agg_time,accuracy,resilience,roofline").split(",")
+    rows: List[str] = []
+    t0 = time.time()
+    if "agg_time" in sections:
+        from benchmarks import agg_time
+        agg_time.run(rows)
+        print(f"# agg_time done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if "accuracy" in sections:
+        from benchmarks import accuracy
+        accuracy.run(rows)
+        print(f"# accuracy done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if "resilience" in sections:
+        from benchmarks import resilience
+        resilience.run(rows)
+        print(f"# resilience done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if "roofline" in sections:
+        from benchmarks import roofline
+        roofline.run(rows)
+        print(f"# roofline done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    print("name,us_per_call,derived")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

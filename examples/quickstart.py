@@ -1,0 +1,59 @@
+"""Quickstart: MULTI-BULYAN in 60 seconds.
+
+1. aggregate a stack of gradients containing byzantine rows;
+2. run one byzantine-robust distributed train step on a small LM.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, RobustConfig
+from repro.core import aggregate, apply_attack, theory
+from repro.data import lm_batches
+from repro.dist import make_train_step, split_workers
+from repro import models as MD
+from repro.optim import sgd, constant
+
+
+def part1_gar():
+    print("=== 1. the GAR itself ===")
+    n, f, d = 15, 3, 1000
+    rng = np.random.default_rng(0)
+    g_true = np.ones(d, np.float32)                      # the true gradient
+    correct = g_true + 0.1 * rng.normal(size=(n - f, d)).astype(np.float32)
+    stack = apply_attack(jnp.asarray(correct), f, "inf",
+                         jax.random.key(0))              # f byzantine rows
+    for rule in ("average", "median", "multi_krum", "multi_bulyan"):
+        agg = aggregate(stack, f, rule)
+        cos = theory.cone_cosine(agg, jnp.asarray(g_true))
+        print(f"  {rule:13s} cos(angle to true gradient) = {cos:+.3f}")
+    print(f"  theory: multi-bulyan slowdown vs averaging = "
+          f"{theory.multi_bulyan_slowdown(n, f):.2f} "
+          f"(Thm 2(iii) — and it is byzantine-proof)")
+
+
+def part2_training():
+    print("=== 2. robust distributed training ===")
+    cfg = ArchConfig(name="quickstart", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                     vocab_size=128)
+    rcfg = RobustConfig(n_workers=11, f=2, gar="multi_bulyan")
+    key = jax.random.key(0)
+    params = MD.init_model(key, cfg)
+    opt = sgd(momentum=0.9)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.05),
+                                   chunk_q=16, attack="inf"))
+    data = lm_batches(cfg.vocab_size, 22, 16)
+    for i in range(8):
+        batch = split_workers(next(data), rcfg.n_workers)
+        params, state, m = step(params, state, batch, jax.random.fold_in(key, i))
+        print(f"  step {i}: loss={float(m['loss']):.4f}  "
+              f"(2 byzantine workers sending 1e30s — training unharmed)")
+
+
+if __name__ == "__main__":
+    part1_gar()
+    part2_training()

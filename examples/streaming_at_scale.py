@@ -1,0 +1,60 @@
+"""Streaming Multi-Bulyan: exact Algorithm-1 robustness at 100B+ scale.
+
+The paper's GAR needs all n worker gradients at once — impossible at
+jamba-398B scale (DESIGN.md §5).  This example demonstrates, on a small
+model where both paths fit, that the streaming-global trainer (two manual
+backward passes, per-block plan application) produces bit-close updates to
+the stacked reference — the property that lets the dry-run lower
+jamba-1.5-large-398b×train_4k on 512 chips.
+
+Run:  PYTHONPATH=src python examples/streaming_at_scale.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig, RobustConfig, SSMConfig, HybridConfig
+from repro.data import lm_batches
+from repro.dist import make_train_step, split_workers
+from repro.dist.streaming import make_streaming_train_step
+from repro import models as MD
+from repro.optim import sgd, constant
+
+
+def main():
+    # a miniature jamba: hybrid attn/mamba with MoE every other layer
+    cfg = ArchConfig(
+        name="mini-jamba", family="hybrid", n_layers=4, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=512,
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=128, every=2,
+                      capacity_factor=8.0),
+        ssm=SSMConfig(dt_rank=8),
+        hybrid=HybridConfig(period=2, attn_index=1))
+    rcfg = RobustConfig(n_workers=11, f=2, gar="multi_bulyan")
+    key = jax.random.key(0)
+    params = MD.init_model(key, cfg)
+    opt = sgd(momentum=0.9)
+    state = opt.init(params)
+    batch = split_workers(next(lm_batches(cfg.vocab_size, 22, 32)), 11)
+
+    stacked = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.05),
+                                      chunk_q=16, attack="sign_flip"))
+    stream = jax.jit(make_streaming_train_step(
+        cfg, rcfg, opt, constant(0.05), scope="global", chunk_q=16,
+        attack="sign_flip"))
+
+    p1, _, m1 = stacked(params, state, batch, key)
+    p2, _, m2 = stream(params, state, batch, key)
+    diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                     b.astype(jnp.float32))))
+               for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    print(f"[stream] loss stacked={float(m1['loss']):.4f} "
+          f"streaming={float(m2['loss']):.4f}")
+    print(f"[stream] max |param diff| stacked vs streaming-global: {diff:.2e}")
+    print("[stream] peak gradient memory: n·d (stacked) vs n·d/n_groups "
+          "(streaming) — the 398B enabler, see DESIGN.md §5 and "
+          "EXPERIMENTS.md §Dry-run.")
+    assert diff < 5e-5, diff
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Checkpointing: npz-based save/restore of arbitrary pytrees."""
+from repro.checkpoint.store import latest_step, restore, save  # noqa: F401

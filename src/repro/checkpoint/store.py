@@ -1,0 +1,90 @@
+"""Flat-key npz checkpoint store.
+
+Pytrees are flattened with ``jax.tree_util.tree_flatten_with_path``; each
+leaf is stored under its joined key path, so restore round-trips exact tree
+structure + dtypes without pickling arbitrary objects.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "|"
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+         "float8_e5m2": np.uint8}  # dtypes numpy cannot serialise natively
+
+
+def save(directory: str, step: int, tree: PyTree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    for path, leaf in flat:
+        key = _key_str(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in _VIEW:
+            # store as a bit-view; the original dtype is tagged in the key
+            arrays[f"{key}::{arr.dtype.name}"] = arr.view(_VIEW[arr.dtype.name])
+        else:
+            arrays[key] = arr
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    import ml_dtypes
+
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        tagged = {}
+        for k in data.files:
+            if "::" in k:
+                base, dt = k.rsplit("::", 1)
+                tagged[base] = data[k].view(getattr(ml_dtypes, dt))
+            else:
+                tagged[k] = data[k]
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for kpath, leaf in flat:
+            ks = _key_str(kpath)
+            if ks not in tagged:
+                raise KeyError(f"checkpoint missing key {ks!r}")
+            arr = tagged[ks]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {ks}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,42 @@
+"""Config registry: the 10 assigned architectures + shape configs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    HybridConfig,
+    MoEConfig,
+    RobustConfig,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+)
+
+_MODULES: Dict[str, str] = {
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]

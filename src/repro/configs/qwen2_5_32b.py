@@ -1,0 +1,25 @@
+"""qwen2.5-32b [dense] — GQA, QKV bias [hf:Qwen/Qwen2.5-0.5B]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27648,
+    vocab_size=152064,
+    activation="swiglu",
+    norm="rmsnorm",
+    qkv_bias=True,
+    rope="full",
+    rope_theta=1e6,
+    # 40 heads / 8 kv heads do not divide the 16-way model axis.  Strategy
+    # search (EXPERIMENTS.md §Perf hillclimb 1): plain tp = 27.3 TB/dev
+    # collectives (hd-contraction sharding, fp32 logit all-reduce x256);
+    # zero3 = 49 TB (refuted: per-remat weight gathers dominate);
+    # tp_attn_batch (batch-shard the attention inner loop only) = 7.4 TB.
+    sharding_strategy="tp_attn_batch",
+)

@@ -1,0 +1,19 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B]."""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=0,                      # every MLP is MoE
+    vocab_size=151936,
+    activation="swiglu",
+    norm="rmsnorm",
+    rope="full",
+    rope_theta=1e6,
+    moe=MoEConfig(n_experts=128, top_k=8, d_expert=768, every=1),
+)

@@ -1,0 +1,22 @@
+"""Core: the paper's gradient aggregation rules and byzantine machinery."""
+from repro.core.gar import (  # noqa: F401
+    GARS,
+    aggregate,
+    average,
+    bulyan,
+    coordinate_median,
+    extraction_plan,
+    get_gar,
+    krum,
+    multi_bulyan,
+    multi_krum,
+    pairwise_sqdist,
+    trimmed_mean,
+)
+from repro.core.robust import (  # noqa: F401
+    RobustAggregator,
+    tree_aggregate,
+    tree_pairwise_sqdist,
+)
+from repro.core.attacks import ATTACKS, apply_attack, get_attack  # noqa: F401
+from repro.core import theory  # noqa: F401

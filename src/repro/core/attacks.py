@@ -1,0 +1,107 @@
+"""Byzantine worker attack library.
+
+An attack is a function ``(G_correct, f, key) -> G_byz`` mapping the stack of
+the n-f correct gradients ``(n-f, d)`` to the ``(f, d)`` byzantine proposals.
+Attacks may collude and may read every correct gradient first (omniscient
+adversary, as in the paper's worst-case analysis).
+
+The stack handed to the GAR is ``concat([G_byz, G_correct])`` by convention
+(GARs are permutation-invariant — property-tested).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Attack = Callable[[Array, int, Array], Array]
+
+
+def no_attack(G: Array, f: int, key: Array) -> Array:
+    """f extra honest-like gradients (resampled mean) — the 'mild' case."""
+    del key
+    g = jnp.mean(G, axis=0)
+    return jnp.broadcast_to(g, (f,) + g.shape)
+
+
+def sign_flip(G: Array, f: int, key: Array, scale: float = 1.0) -> Array:
+    """Send the negated mean gradient, scaled."""
+    del key
+    g = -scale * jnp.mean(G, axis=0)
+    return jnp.broadcast_to(g, (f,) + g.shape)
+
+
+def gaussian_noise(G: Array, f: int, key: Array, sigma: float = 10.0) -> Array:
+    """Pure noise of large magnitude."""
+    d = G.shape[-1]
+    return sigma * jax.random.normal(key, (f, d), dtype=G.dtype)
+
+
+def inf_attack(G: Array, f: int, key: Array) -> Array:
+    """Huge-magnitude vectors (hardware-fault / overflow model)."""
+    del key
+    g = jnp.mean(G, axis=0)
+    return jnp.broadcast_to(1e30 * jnp.sign(g + 1e-30), (f,) + g.shape).astype(G.dtype)
+
+
+def little_is_enough(G: Array, f: int, key: Array, z: float = 1.5) -> Array:
+    """Baruch et al. 2019 'A Little Is Enough'.
+
+    Shift the mean by z standard deviations per coordinate — small enough to
+    pass distance tests, consistently wrong in direction.  This is the attack
+    the paper's §VI discusses; it stresses the variance condition.
+    """
+    del key
+    mu = jnp.mean(G, axis=0)
+    sd = jnp.std(G, axis=0)
+    g = mu - z * sd
+    return jnp.broadcast_to(g, (f,) + g.shape)
+
+
+def mimic(G: Array, f: int, key: Array) -> Array:
+    """All byzantine workers copy one correct gradient (breaks i.i.d. spread)."""
+    del key
+    return jnp.broadcast_to(G[0], (f,) + G[0].shape)
+
+
+def omniscient_reverse(G: Array, f: int, key: Array, eps: float = 0.1) -> Array:
+    """Approximate the 'most legitimate but harmful vector' of §II-b.
+
+    Start from the true (mean) gradient and bend it toward its negation while
+    staying within the empirical point cloud radius — a cheap stand-in for
+    the Ω(nd/ε) regression attack described in the paper.
+    """
+    del key
+    mu = jnp.mean(G, axis=0)
+    radius = jnp.sqrt(jnp.max(jnp.sum((G - mu[None]) ** 2, axis=1)))
+    direction = -mu / (jnp.linalg.norm(mu) + 1e-30)
+    g = mu + (1.0 - eps) * radius * direction
+    return jnp.broadcast_to(g, (f,) + g.shape)
+
+
+ATTACKS: Dict[str, Attack] = {
+    "none": no_attack,
+    "sign_flip": sign_flip,
+    "gaussian": gaussian_noise,
+    "inf": inf_attack,
+    "little_is_enough": little_is_enough,
+    "mimic": mimic,
+    "omniscient": omniscient_reverse,
+}
+
+
+def get_attack(name: str) -> Attack:
+    try:
+        return ATTACKS[name]
+    except KeyError:
+        raise KeyError(f"unknown attack {name!r}; available: {sorted(ATTACKS)}") from None
+
+
+def apply_attack(G_correct: Array, f: int, name: str, key: Array) -> Array:
+    """Return the full (n, d) stack: byzantine rows first, then correct."""
+    if f == 0:
+        return G_correct
+    byz = get_attack(name)(G_correct, f, key)
+    return jnp.concatenate([byz.astype(G_correct.dtype), G_correct], axis=0)

@@ -1,0 +1,91 @@
+"""Literal numpy reference of Algorithm 1 (sequential pool removal).
+
+This is the oracle against which the jit-safe masked implementations in
+``gar.py`` are property-tested: the paper's pseudocode mutates a Python list
+(``[G_1..G_n] \\ G_ext``); here we do exactly that, with no lax tricks, so
+semantic drift in the fast path cannot hide.
+
+Arithmetic is float32 on purpose: the coordinate phase has *exact* ties by
+construction (with θ even, the two middle values are equidistant from their
+midpoint-median), so tie resolution is precision-dependent; the oracle must
+round like the implementation for index-order tie-breaking to be comparable.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def ref_pairwise_sqdist(G: np.ndarray) -> np.ndarray:
+    n = G.shape[0]
+    out = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                diff = G[i].astype(np.float32) - G[j].astype(np.float32)
+                out[i, j] = np.float32(diff @ diff)
+    return out
+
+
+def ref_krum_scores(G: np.ndarray, f: int, n_neighbors: int | None = None) -> np.ndarray:
+    """Score_i = sum of sq-dists to the (k - f - 2) nearest other gradients."""
+    k = G.shape[0]
+    if n_neighbors is None:
+        n_neighbors = k - f - 2
+    d2 = ref_pairwise_sqdist(G)
+    scores = np.empty((k,), dtype=np.float32)
+    for i in range(k):
+        others = np.sort(np.delete(d2[i], i))
+        scores[i] = others[:n_neighbors].sum()
+    return scores
+
+
+def ref_multi_krum(G: np.ndarray, f: int, m: int | None = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (winner, m-average) — Algorithm 1's MULTI-KRUM function.
+
+    m defaults to k - f - 2.  Ties broken by smallest index (matches
+    ``_select_smallest_mask``).
+    """
+    k = G.shape[0]
+    if m is None:
+        m = k - f - 2
+    scores = ref_krum_scores(G, f, n_neighbors=k - f - 2)
+    order = np.argsort(scores, kind="stable")
+    winner = int(order[0])
+    sel = order[:m]
+    return G[winner].astype(np.float32), G[sel].astype(np.float32).mean(axis=0)
+
+
+def ref_multi_bulyan(G: np.ndarray, f: int, multi: bool = True) -> np.ndarray:
+    """Algorithm 1 with literal list removal."""
+    n, d = G.shape
+    if n < 4 * f + 3:
+        raise ValueError("bulyan needs n >= 4f+3")
+    theta = n - 2 * f - 2
+    beta = theta - 2 * f
+    pool: List[np.ndarray] = [G[i].astype(np.float32) for i in range(n)]
+    g_ext = np.zeros((theta, d), np.float32)
+    g_agr = np.zeros((theta, d), np.float32)
+    for r in range(theta):
+        P = np.stack(pool)
+        m_r = P.shape[0] - f - 2
+        scores = ref_krum_scores(P, f, n_neighbors=m_r)
+        order = np.argsort(scores, kind="stable")
+        winner = int(order[0])
+        g_ext[r] = P[winner]
+        g_agr[r] = P[order[:m_r]].mean(axis=0) if multi else P[winner]
+        pool.pop(winner)
+    med = np.median(g_ext, axis=0)
+    out = np.zeros((d,), np.float32)
+    for j in range(d):
+        dist = np.abs(g_agr[:, j] - med[j])
+        closest = np.argsort(dist, kind="stable")[:beta]
+        out[j] = g_agr[closest, j].mean()
+    return out
+
+
+def ref_trimmed_mean(G: np.ndarray, f: int) -> np.ndarray:
+    n = G.shape[0]
+    s = np.sort(G.astype(np.float32), axis=0)
+    return s[f:n - f].mean(axis=0)

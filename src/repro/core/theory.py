@@ -1,0 +1,73 @@
+"""Theoretical quantities from the paper (Lemmas 1-2, Theorems 1-2).
+
+Used by benchmarks/resilience.py to check the empirical behaviour against the
+proved bounds, and by the trainer to surface the variance condition
+``η(n,f)·√d·σ < ||g||`` as a runtime diagnostic.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def eta(n: int, f: int, m: int | None = None) -> float:
+    """η(n, f) from Lemma 1.
+
+    η(n,f) = sqrt( 2 ( n - f + (f·m + f²·(m+1)) / (n - 2f - 2) ) ),
+    with m = n - f - 2 (the MULTI-KRUM selection size) by default.
+    """
+    if m is None:
+        m = n - f - 2
+    if n - 2 * f - 2 <= 0:
+        raise ValueError(f"need n > 2f+2 (n={n}, f={f})")
+    return math.sqrt(2.0 * (n - f + (f * m + f * f * (m + 1)) / (n - 2 * f - 2)))
+
+
+def sin_alpha(n: int, f: int, d: int, sigma: float, g_norm: float) -> float:
+    """sin α = η(n,f)·√d·σ / ||g|| (Lemma 1).  Must be < 1 for resilience."""
+    return eta(n, f) * math.sqrt(d) * sigma / g_norm
+
+
+def variance_condition(n: int, f: int, d: int, sigma: float, g_norm: float) -> bool:
+    """The paper's no-free-lunch requirement: η(n,f)·√d·σ < ||g||."""
+    return sin_alpha(n, f, d, sigma, g_norm) < 1.0
+
+
+def multi_krum_slowdown(n: int, f: int) -> float:
+    """Theorem 1(ii): byzantine-free slowdown of MULTI-KRUM vs averaging."""
+    return (n - f - 2) / n
+
+
+def multi_bulyan_slowdown(n: int, f: int) -> float:
+    """Theorem 2(iii): byzantine-free slowdown of MULTI-BULYAN vs averaging."""
+    return (n - 2 * f - 2) / n
+
+
+def strong_leeway_bound(d: int) -> float:
+    """Definition 2: per-coordinate leeway O(1/√d) for strong resilience."""
+    return 1.0 / math.sqrt(d)
+
+
+def empirical_sigma(G) -> float:
+    """Per-coordinate std σ of a stack of correct gradients (E||G-g||² = dσ²)."""
+    g = jnp.mean(G, axis=0, keepdims=True)
+    d = G.shape[1]
+    return float(jnp.sqrt(jnp.mean(jnp.sum((G - g) ** 2, axis=1)) / d))
+
+
+def cone_cosine(agg, g) -> float:
+    """cos of the angle between the aggregate and the true gradient."""
+    num = float(jnp.vdot(agg, g))
+    den = float(jnp.linalg.norm(agg) * jnp.linalg.norm(g)) + 1e-30
+    return num / den
+
+
+def min_workers(gar: str, f: int) -> int:
+    if gar in ("bulyan", "multi_bulyan"):
+        return 4 * f + 3
+    if gar in ("krum", "multi_krum"):
+        return 2 * f + 3
+    if gar == "trimmed_mean":
+        return 2 * f + 1
+    return 1

@@ -1,0 +1,6 @@
+"""Data pipeline (synthetic, deterministic — no external datasets in-container)."""
+from repro.data.synthetic import (  # noqa: F401
+    classification_batches,
+    lm_batches,
+    make_lm_batch,
+)

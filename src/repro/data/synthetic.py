@@ -1,0 +1,83 @@
+"""Synthetic deterministic data pipelines.
+
+Two generators:
+
+* :func:`lm_batches` — a *learnable* token stream for the LM architectures:
+  tokens follow a fixed random bigram automaton, so next-token entropy is far
+  below uniform and the training loss visibly decreases within a few hundred
+  steps (used by examples/byzantine_training.py).
+* :func:`classification_batches` — a separable Gaussian-mixture
+  classification task standing in for Fashion-MNIST in the Fig 3 reproduction
+  (no datasets are shipped in this container; DESIGN.md §3 table).
+
+Workers draw disjoint slices of each global batch, matching the paper's
+i.i.d.-sampling assumption; per-worker batches are what the byzantine game
+aggregates over.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _bigram_table(vocab: int, seed: int, branching: int = 4) -> np.ndarray:
+    """Each token can be followed by `branching` successors (uniformly)."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=(vocab, branching), dtype=np.int32)
+
+
+def make_lm_batch(key: Array, vocab: int, batch: int, seq: int,
+                  seed: int = 1234) -> Dict[str, Array]:
+    """One (tokens, labels) batch from the bigram automaton."""
+    table = jnp.asarray(_bigram_table(vocab, seed))
+    k0, k1 = jax.random.split(key)
+    start = jax.random.randint(k0, (batch,), 0, vocab, dtype=jnp.int32)
+    choices = jax.random.randint(k1, (batch, seq), 0, table.shape[1],
+                                 dtype=jnp.int32)
+
+    def step(tok, choice):
+        nxt = table[tok, choice]
+        return nxt, nxt
+
+    _, seqs = jax.lax.scan(
+        lambda c, ch: step(c, ch), start, choices.T)
+    toks = jnp.concatenate([start[:, None], seqs.T], axis=1)  # (B, S+1)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def lm_batches(vocab: int, batch: int, seq: int, *, seed: int = 0
+               ) -> Iterator[Dict[str, Array]]:
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.key(seed), step)
+        yield make_lm_batch(key, vocab, batch, seq, seed=seed + 77)
+        step += 1
+
+
+def classification_batches(d_in: int, n_classes: int, batch: int, *,
+                           seed: int = 0, noise: float = 1.0,
+                           center_seed: int = 7777
+                           ) -> Iterator[Tuple[Array, Array]]:
+    """Gaussian mixture: class c centred at a fixed random unit vector.
+
+    ``center_seed`` fixes the mixture itself — train and test iterators must
+    share it (only ``seed`` varies the sampling stream), otherwise they are
+    different tasks.
+    """
+    rng = np.random.default_rng(center_seed)
+    centers = rng.normal(size=(n_classes, d_in)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    centers = jnp.asarray(centers) * 2.0
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.key(seed + 1), step)
+        kx, ky = jax.random.split(key)
+        labels = jax.random.randint(ky, (batch,), 0, n_classes, dtype=jnp.int32)
+        x = centers[labels] + noise * jax.random.normal(kx, (batch, d_in))
+        yield x, labels
+        step += 1

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused BULYAN coordinate phase.
+
+Per coordinate j (Algorithm 1 lines 21-24): median of the θ extracted
+winners, then the average of the β entries of the θ aggregates closest to
+that median.  Embarrassingly parallel over coordinates → grid over d-tiles,
+each step loads two (θ, d_tile) blocks into VMEM and writes a (1, d_tile)
+output row.  θ ≤ n − 2f − 2 is small (≤ 32 on our meshes), so both the
+median (sorting network via ``jnp.sort`` over the θ axis) and the β-smallest
+selection (O(θ²) rank-by-counting, which vectorises better on the VPU than a
+data-dependent top-k) stay register/VMEM-local.
+
+Fusing median + selection + masked mean into one kernel avoids three (θ, d)
+HBM round-trips of the unfused XLA path — the memory-roofline win measured
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(ext_ref, agr_ref, o_ref, *, beta: int):
+    ext = ext_ref[...].astype(jnp.float32)           # (theta, dt)
+    agr = agr_ref[...].astype(jnp.float32)           # (theta, dt)
+    theta = ext.shape[0]
+
+    srt = jnp.sort(ext, axis=0)
+    if theta % 2:
+        med = srt[theta // 2]
+    else:
+        med = 0.5 * (srt[theta // 2 - 1] + srt[theta // 2])   # (dt,)
+
+    dist = jnp.abs(agr - med[None, :])               # (theta, dt)
+    # rank by counting: rank[i] = #{k: dist[k] < dist[i]} + #{k<i: ==}
+    lt = (dist[None, :, :] < dist[:, None, :]).astype(jnp.int32)
+    eq = (dist[None, :, :] == dist[:, None, :]).astype(jnp.int32)
+    row = jax.lax.broadcasted_iota(jnp.int32, (theta, theta, 1), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (theta, theta, 1), 1)
+    eq_lower = eq * (col < row).astype(jnp.int32)    # ties -> smaller index first
+    rank = jnp.sum(lt + eq_lower, axis=1)            # (theta, dt)
+    sel = (rank < beta).astype(jnp.float32)
+    o_ref[...] = (jnp.sum(sel * agr, axis=0) / float(beta))[None, :]
+
+
+def coord_select_pallas(g_ext: Array, g_agr: Array, beta: int, *,
+                        d_tile: int = 2048, interpret: bool = False) -> Array:
+    """(theta, d) x2 -> (d,) fp32 fused coordinate phase."""
+    assert g_ext.shape == g_agr.shape, (g_ext.shape, g_agr.shape)
+    theta, d = g_agr.shape
+    assert 1 <= beta <= theta, (beta, theta)
+    d_tile = min(d_tile, max(128, ((d - 1) // 128 + 1) * 128))
+    d_pad = (-d) % d_tile
+    if d_pad:
+        g_ext = jnp.pad(g_ext, ((0, 0), (0, d_pad)))
+        g_agr = jnp.pad(g_agr, ((0, 0), (0, d_pad)))
+    dp = g_agr.shape[1]
+    grid = (dp // d_tile,)
+    import functools
+    out = pl.pallas_call(
+        functools.partial(_kernel, beta=beta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((theta, d_tile), lambda i: (0, i)),
+            pl.BlockSpec((theta, d_tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, d_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        interpret=interpret,
+    )(g_ext, g_agr)
+    return out[0, :d]

@@ -1,0 +1,36 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs in Python on the same BlockSpec schedule, which is the
+validation story for the TPU target.  On TPU backends the compiled kernels
+run as written.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.coord_select import coord_select_pallas
+from repro.kernels.pairwise_sqdist import pairwise_sqdist_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile",))
+def pairwise_sqdist(x: Array, *, d_tile: int = 2048) -> Array:
+    """(n, d) -> (n, n) fp32 squared distances (Pallas)."""
+    return pairwise_sqdist_pallas(x, d_tile=d_tile, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "d_tile"))
+def coord_select(g_ext: Array, g_agr: Array, beta: int, *,
+                 d_tile: int = 2048) -> Array:
+    """Fused Bulyan coordinate phase (Pallas)."""
+    return coord_select_pallas(g_ext, g_agr, beta, d_tile=d_tile,
+                               interpret=_interpret())

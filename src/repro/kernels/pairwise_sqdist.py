@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: pairwise squared euclidean distances over d-tiles.
+
+The paper's §V identifies the O(n²·d) pairwise-distance computation as the
+dominant cost of (MULTI-)KRUM/BULYAN; its CUDA implementation was limited to
+n ≤ 24 by on-die shared memory.  The TPU formulation (DESIGN.md §3/§6)
+streams the (n, d) gradient matrix HBM→VMEM in ``(n, d_tile)`` blocks,
+computes the tile's Gram matrix on the MXU (``x @ x.T`` — the only O(n²·d)
+term) plus row norms on the VPU, and accumulates
+``‖a‖² + ‖b‖² − 2·gram`` into the (n, n) output block, which stays resident
+in VMEM across the whole grid (output revisiting).
+
+VMEM budget per grid step: n·d_tile·4 B (x tile, fp32) + n²·4 B (acc).
+With n ≤ 64 and d_tile = 2048 that is ≤ 0.5 MB + 16 KB — far below the
+~16 MB VMEM of a v5e core, so d_tile can be raised to trade grid steps for
+pipelining (swept in tests/bench).  The MXU contraction dim is the d_tile
+axis → keep it a multiple of 128; n is padded to a multiple of 8 (sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)              # (n, d_tile)
+    gram = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (n, n) — MXU
+    sq = jnp.sum(x * x, axis=1)                      # (n,)   — VPU
+    tile = sq[:, None] + sq[None, :] - 2.0 * gram
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = tile
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += tile
+
+
+def pairwise_sqdist_pallas(x: Array, *, d_tile: int = 2048,
+                           interpret: bool = False) -> Array:
+    """(n, d) -> (n, n) fp32 squared distances (diagonal zeroed).
+
+    Pads n up to a multiple of 8 and d up to a multiple of ``d_tile``
+    (zero padding is exact for distances).
+    """
+    n, d = x.shape
+    n_pad = (-n) % 8
+    d_tile = min(d_tile, max(128, ((d - 1) // 128 + 1) * 128))
+    d_pad = (-d) % d_tile
+    if n_pad or d_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, d_pad)))
+    np_, dp = x.shape
+    grid = (dp // d_tile,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((np_, d_tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((np_, np_), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
+        interpret=interpret,
+    )(x)
+    out = out[:n, :n]
+    out = jnp.maximum(out, 0.0)
+    return out * (1.0 - jnp.eye(n, dtype=jnp.float32))

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pairwise_sqdist_ref(x: Array) -> Array:
+    """(n, d) -> (n, n) squared euclidean distances, fp32, zero diagonal."""
+    xf = x.astype(jnp.float32)
+    sq = jnp.sum(xf * xf, axis=-1)
+    gram = jnp.matmul(xf, xf.T, precision=jax.lax.Precision.HIGHEST)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+    return d2 * (1.0 - jnp.eye(x.shape[0], dtype=jnp.float32))
+
+
+def coord_select_ref(g_ext: Array, g_agr: Array, beta: int) -> Array:
+    """Bulyan coordinate phase: median of g_ext, avg of beta closest g_agr.
+
+    g_ext, g_agr: (theta, d) fp32 -> (d,) fp32.  Ties broken by row index
+    (matches both gar.bulyan_coordinate_phase and the kernel).
+    """
+    med = jnp.median(g_ext.astype(jnp.float32), axis=0)
+    dist = jnp.abs(g_agr.astype(jnp.float32) - med[None, :])
+    order = jnp.argsort(dist, axis=0)
+    ranks = jnp.argsort(order, axis=0)
+    sel = ranks < beta
+    return jnp.sum(jnp.where(sel, g_agr.astype(jnp.float32), 0.0), axis=0) / beta

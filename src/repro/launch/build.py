@@ -1,0 +1,276 @@
+"""Builders: (step_fn, argument ShapeDtypeStructs, shardings) per workload.
+
+Shared by the dry-run (``.lower().compile()`` on the production mesh), the
+real training/serving drivers, and the roofline benchmark.  Nothing here
+allocates device memory for the full configs — parameters and caches are
+``jax.eval_shape`` stand-ins until a driver decides to materialise them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RobustConfig, ShapeConfig
+from repro import models as MD
+from repro.dist import sharding as SH
+from repro.dist.trainer import make_train_step
+from repro.dist.streaming import make_streaming_train_step
+from repro.dist.serving import make_serve_step
+from repro.launch.mesh import data_parallel_size
+from repro.models import api as MAPI
+from repro.optim import sgd
+
+PyTree = Any
+
+# archs whose n×d stacked gradient cannot exist on the mesh (DESIGN.md §5):
+# they default to the streaming-global trainer (exact Algorithm 1, 2 passes).
+STREAMING_ARCHS = ("qwen3-moe-235b-a22b", "jamba-1.5-large-398b")
+# archs large enough that params+momentum need FSDP (both-axes) sharding.
+FSDP_MIN_PARAMS = 8e9
+
+
+@dataclasses.dataclass
+class Workload:
+    """Everything needed to lower one (arch × shape × mesh) combination."""
+    name: str
+    fn: Any                      # the step function (to be jit'ed)
+    args: Tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: Tuple          # NamedSharding pytrees (same structure)
+    donate: Tuple[int, ...] = ()
+    static: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def default_robust_config(mesh: Mesh, gar: str = "multi_bulyan",
+                          use_pallas: bool = False) -> RobustConfig:
+    n = data_parallel_size(mesh)
+    f = max(1, (n - 3) // 4)     # the paper's f = floor((n-3)/4) (§V setup)
+    return RobustConfig(n_workers=n, f=f, gar=gar, use_pallas=use_pallas)
+
+
+def wants_fsdp(cfg: ArchConfig) -> bool:
+    return cfg.param_count() >= FSDP_MIN_PARAMS
+
+
+def wants_streaming(cfg: ArchConfig) -> bool:
+    return cfg.name in STREAMING_ARCHS
+
+
+def param_shapes(cfg: ArchConfig) -> PyTree:
+    return jax.eval_shape(
+        functools.partial(MD.init_model, cfg=cfg), jax.random.key(0))
+
+
+def _strategy_param_specs(cfg: ArchConfig, pshapes: PyTree,
+                          mesh: Mesh, fsdp: bool) -> PyTree:
+    """Dispatch parameter sharding per the arch's strategy.
+
+    "zero3" (kept selectable for experiments) was REFUTED as a default for
+    qwen2.5: per-remat layer-group weight all-gathers dominate (49 TB/dev
+    vs 7.4 TB for tp_attn_batch — EXPERIMENTS.md §Perf hillclimb 1).
+    "tp_attn_batch" = megatron specs + vocab-sharded embedding (the
+    d-sharded gather trips a multi-pod SPMD partitioner bug) + the
+    batch-sharded attention constraint applied inside the model.
+    """
+    if cfg.sharding_strategy == "zero3":
+        return SH.zero3_param_specs(pshapes, mesh)
+    pspecs = SH.param_specs(pshapes, mesh)
+    if cfg.sharding_strategy == "tp_attn_batch":
+        pspecs = dict(pspecs)
+        vocab = pshapes["embed"]["table"].shape[0]
+        spec = P("model", None) if vocab % 16 == 0 else P(None, None)
+        pspecs["embed"] = {"table": spec}
+    if fsdp:
+        pspecs = _fsdp_specs(pshapes, pspecs, mesh)
+    return pspecs
+
+
+def _named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _fsdp_specs(params: PyTree, base: PyTree, mesh: Mesh) -> PyTree:
+    """Extend the megatron specs with 'data' on the largest unsharded dim.
+
+    Embedding tables are exempt: gathers from a vocab-data-sharded table
+    trip an SPMD partitioner bug on the multi-pod mesh (hlo-verifier slice
+    shape mismatch) and the table is small relative to the stack.
+    """
+    dp = mesh.shape["data"]
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_s = treedef.flatten_up_to(base)
+    out = []
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        spec = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+        if "embed" not in keys and leaf.ndim >= 2 and leaf.size >= (1 << 20):
+            dims = [i for i, s in enumerate(spec)
+                    if s is None and leaf.shape[i] % dp == 0]
+            if dims:
+                best = max(dims, key=lambda i: leaf.shape[i])
+                spec = tuple("data" if i == best else s
+                             for i, s in enumerate(spec))
+        out.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def train_workload(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+                   rcfg: Optional[RobustConfig] = None,
+                   trainer: str = "auto",       # auto|stacked|stream_block|stream_global
+                   fsdp: Optional[bool] = None,
+                   gar: str = "multi_bulyan",
+                   use_pallas: bool = False,
+                   chunk_q: int = 1024,
+                   grad_constraints: bool = True) -> Workload:
+    assert shape.kind == "train"
+    rcfg = rcfg or default_robust_config(mesh, gar, use_pallas)
+    if fsdp is None:
+        fsdp = wants_fsdp(cfg)
+    if trainer == "auto":
+        trainer = "stream_global" if wants_streaming(cfg) else "stacked"
+
+    n = rcfg.n_workers
+    opt = sgd(momentum=0.9)
+    pshapes = param_shapes(cfg)
+    oshapes = jax.eval_shape(opt.init, pshapes)
+
+    # batch specs: (n_workers, per_worker, ...)
+    assert shape.global_batch % n == 0, (shape.global_batch, n)
+    per_worker = shape.global_batch // n
+    flat_batch = MAPI.make_batch(cfg, "train", shape.global_batch,
+                                 shape.seq_len, as_spec=True)
+    batch = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, per_worker) + s.shape[1:], s.dtype),
+        flat_batch)
+
+    pspecs = _strategy_param_specs(cfg, pshapes, mesh, fsdp)
+    bspecs = SH.batch_specs(batch, mesh, worker_stacked=True)
+    if grad_constraints:
+        if cfg.sharding_strategy == "zero3":
+            gspecs = jax.tree.map(lambda s: P(None, *tuple(s)), pspecs)
+        else:
+            gspecs = SH.grad_stack_specs(pshapes, mesh)
+    else:
+        gspecs = None
+
+    window = cfg.attn_window
+    lr_fn = lambda s: jnp.float32(1e-2)  # noqa: E731
+    # Remat-boundary sharding: REFUTED hypothesis (EXPERIMENTS.md §Perf it-2).
+    # Constraining the scan carry to a seq-sharded layout leaks into the
+    # attention dataflow: GSPMD unshards the heads and all-gathers full
+    # (B, H, cq, S) fp32 logits inside the q-chunk loop (+30 TB collectives
+    # on nemotron; +300 GB/device temp on falcon's mamba scan).  Boundaries
+    # stay replicated; activation memory is instead controlled by the
+    # q-chunk/xent remat and the transposed grad-stack layout.
+    bspec = None
+    if trainer == "stacked":
+        axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        fn = make_train_step(cfg, rcfg, opt, lr_fn, window=window,
+                             chunk_q=chunk_q, grad_specs=gspecs,
+                             boundary_spec=bspec,
+                             shard_map_mesh=mesh, shard_map_axes=axes)
+    else:
+        scope = "global" if trainer.endswith("global") else "block"
+        axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        lead = axes if len(axes) > 1 else axes[0]
+        d_ax = "model" if cfg.d_model % mesh.shape["model"] == 0 else None
+        dx_spec = P(lead, None, None, d_ax)
+        fn = make_streaming_train_step(cfg, rcfg, opt, lr_fn, scope=scope,
+                                       window=window, chunk_q=chunk_q,
+                                       boundary_spec=bspec, dx_spec=dx_spec)
+
+    key_spec = jax.eval_shape(lambda: jax.random.key(0))
+    mu_shardings = _named(mesh, pspecs) if oshapes.mu is not None else None
+    opt_shardings = type(oshapes)(NamedSharding(mesh, P()), mu_shardings, None)
+    args = (pshapes, oshapes, batch, key_spec)
+    shardings = (
+        _named(mesh, pspecs),
+        opt_shardings,
+        _named(mesh, bspecs),
+        NamedSharding(mesh, P()),
+    )
+    return Workload(
+        name=f"{cfg.name}×{shape.name}",
+        fn=fn, args=args, in_shardings=shardings,
+        static={"trainer": trainer, "fsdp": fsdp, "rcfg": rcfg},
+    )
+
+
+def prefill_workload(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+                     chunk_q: int = 1024) -> Workload:
+    assert shape.kind == "prefill"
+    pshapes = param_shapes(cfg)
+    pspecs = _strategy_param_specs(cfg, pshapes, mesh, wants_fsdp(cfg))
+    batch = MAPI.make_batch(cfg, "prefill", shape.global_batch,
+                            shape.seq_len, as_spec=True)
+    bspecs = SH.batch_specs(batch, mesh, worker_stacked=False)
+    window = MAPI.decode_window(cfg, shape)
+
+    def fn(params, b):
+        return MD.prefill_fn(params, cfg, b, window=window, chunk_q=chunk_q,
+                             cache_len=shape.seq_len + 64)
+
+    args = (pshapes, batch)
+    shardings = (_named(mesh, pspecs), _named(mesh, bspecs))
+    return Workload(name=f"{cfg.name}×{shape.name}", fn=fn, args=args,
+                    in_shardings=shardings, static={"window": window})
+
+
+def decode_workload(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                    ) -> Workload:
+    assert shape.kind == "decode"
+    b = shape.global_batch
+    window = MAPI.decode_window(cfg, shape)
+    cache_len = window if window else shape.seq_len
+    pshapes = param_shapes(cfg)
+    pspecs = _strategy_param_specs(cfg, pshapes, mesh, wants_fsdp(cfg))
+
+    if cfg.is_encdec:
+        mem_spec = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model),
+                                        jnp.bfloat16)
+        cshapes = jax.eval_shape(
+            lambda p, m: MAPI.init_cache_fn(p, cfg, b, cache_len,
+                                            window=window, memory=m),
+            pshapes, mem_spec)
+    else:
+        cshapes = jax.eval_shape(
+            lambda: MAPI.init_cache_fn(None, cfg, b, cache_len, window=window))
+
+    dp = data_parallel_size(mesh)
+    shard_batch = (b % dp == 0) and b >= dp
+    cspecs = SH.cache_specs(cshapes, mesh, shard_batch=shard_batch)
+
+    # seq-chunked decode attention: the cache length axis is sharded over
+    # 'model' (cache_specs); chunk-local partial softmax + tiny combine
+    # replaces the per-step cache all-gather (EXPERIMENTS.md §Perf #13)
+    chunks = mesh.shape["model"] if cache_len % mesh.shape["model"] == 0 else 1
+    step = make_serve_step(cfg, window=window, seq_chunks=chunks)
+
+    def fn(params, cache, token, pos):
+        return step(params, cache, token, pos)
+
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    lead = axes if len(axes) > 1 else axes[0]
+    tok_spec = P(lead) if shard_batch else P()
+    args = (pshapes, cshapes, tok, pos)
+    shardings = (_named(mesh, pspecs), _named(mesh, cspecs),
+                 NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()))
+    return Workload(name=f"{cfg.name}×{shape.name}", fn=fn, args=args,
+                    in_shardings=shardings,
+                    static={"window": window, "shard_batch": shard_batch})
+
+
+def build_workload(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                   **kw) -> Workload:
+    if shape.kind == "train":
+        return train_workload(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return prefill_workload(cfg, shape, mesh)
+    return decode_workload(cfg, shape, mesh)

@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combination.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step, in_shardings=…).lower(*ShapeDtypeStructs).compile()`` on the
+16×16 single-pod mesh and the 2×16×16 multi-pod mesh.  No arrays are ever
+allocated.  For each combination we record:
+
+* ``compiled.memory_analysis()``  — per-device bytes (does it fit 16 GB?)
+* ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline
+* collective bytes parsed from the optimized HLO (all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute operand sizes)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, get_shape
+from repro.launch.build import build_workload
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "e4m3": 1, "e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of one 'dtype[dims]' or a (tuple, of, them)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO.
+
+    The result shape is what lands on the wire to first order (all-reduce:
+    operand==result; all-gather: result is the gathered buffer; the
+    (k-1)/k ring factor is folded into the roofline's link-bandwidth term).
+    Counts are whole-program (all devices' instruction stream is SPMD — the
+    per-device figure is bytes/num_partitions for sharded ops, reported
+    as-is and normalised by the roofline derivation).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '%name = <shape> <op>(' with op a collective (start or fused)
+        for kind in _COLLECTIVES:
+            if re.search(rf"\)?\s{kind}(-start|-done)?\(", s) or \
+               re.search(rf"=\s*\S+\s+{kind}(-start)?\(", s):
+                if f"{kind}-done" in s:
+                    continue  # avoid double count of async pairs
+                eq = s.split("=", 1)
+                if len(eq) != 2:
+                    continue
+                rhs = eq[1]
+                shape_part = rhs.split(kind)[0]
+                out[kind] += _shape_bytes(shape_part)
+                counts[kind] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["ops"] = sum(counts.values())
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            trainer: str = "auto", gar: str = "multi_bulyan",
+            verbose: bool = True, hlo_out: Optional[str] = None) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    kw = {}
+    if shape.kind == "train":
+        kw = {"trainer": trainer, "gar": gar}
+    wl = build_workload(cfg, shape, mesh, **kw)
+    with mesh:
+        jitted = jax.jit(wl.fn, in_shardings=wl.in_shardings)
+        lowered = jitted.lower(*wl.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # trip-count-corrected per-device dot FLOPs + collective bytes
+    # (cost_analysis counts while bodies once — see launch/hlo_analysis.py)
+    from repro.launch.hlo_analysis import analyze
+    corrected = analyze(hlo)
+    if hlo_out:
+        with open(hlo_out, "w") as fh:
+            fh.write(hlo)
+
+    n_dev = mesh.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "trainer": wl.static.get("trainer", shape.kind),
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collectives": coll,
+        "corrected": {k: float(v) for k, v in corrected.items()},
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            result[attr] = int(v)
+    if verbose:
+        arg_gb = result.get("argument_size_in_bytes", 0) / 1e9
+        tmp_gb = result.get("temp_size_in_bytes", 0) / 1e9
+        print(f"[dryrun] {arch:24s} {shape_name:12s} {result['mesh']:8s} "
+              f"OK  lower={t_lower:5.1f}s compile={t_compile:6.1f}s "
+              f"args={arg_gb:7.2f}GB temp={tmp_gb:7.2f}GB "
+              f"flops={corrected.get('flops', 0):.3e} "
+              f"coll={corrected.get('coll.total', 0)/1e9:8.2f}GB",
+              flush=True)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) combination")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--trainer", default="auto",
+                    choices=("auto", "stacked", "stream_block", "stream_global"))
+    ap.add_argument("--gar", default="multi_bulyan")
+    ap.add_argument("--json", default=None, help="append results to this file")
+    ap.add_argument("--hlo-out", default=None)
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ARCH_NAMES for s in SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape (or --all) required")
+        combos = [(args.arch, args.shape)]
+
+    results, failures = [], []
+    for arch, shape in combos:
+        try:
+            results.append(run_one(arch, shape, multi_pod=args.multi_pod,
+                                   trainer=args.trainer, gar=args.gar,
+                                   hlo_out=args.hlo_out))
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, repr(e)))
+            print(f"[dryrun] {arch:24s} {shape:12s} FAIL {e!r}", flush=True)
+            traceback.print_exc()
+    if args.json:
+        existing = []
+        if os.path.exists(args.json):
+            with open(args.json) as fh:
+                existing = json.load(fh)
+        with open(args.json, "w") as fh:
+            json.dump(existing + results, fh, indent=1)
+    print(f"[dryrun] {len(results)} OK, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

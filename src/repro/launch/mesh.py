@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run overrides the
+device count via XLA_FLAGS before first jax init while tests/benches must
+see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256 chips per pod; 2 pods = 512 chips when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate 1×1 mesh over the real local device (tests/examples)."""
+    n = len(jax.devices())
+    if n >= 2:
+        return jax.make_mesh((1, n), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_parallel_size(mesh: Mesh) -> int:
+    """Number of byzantine-game workers the mesh supports (pod×data)."""
+    size = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        size *= mesh.shape["pod"]
+    return size

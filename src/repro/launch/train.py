@@ -1,0 +1,111 @@
+"""End-to-end training driver.
+
+Runs byzantine-robust training of a selectable architecture on the local
+device(s).  On this CPU container it is used with reduced configs
+(``--reduced``) and the ~100M example (examples/byzantine_training.py); on a
+real TPU slice the same driver takes the production mesh path.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \\
+      --steps 100 --workers 12 --f 2 --gar multi_bulyan --attack sign_flip
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save
+from repro.configs import ARCH_NAMES, RobustConfig, get_config
+from repro.data import lm_batches
+from repro.dist import make_train_step, split_workers
+from repro.dist.streaming import make_streaming_train_step
+from repro import models as MD
+from repro.optim import make_optimizer, warmup_cosine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke-scale variant (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--per-worker-batch", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=11)
+    ap.add_argument("--f", type=int, default=2)
+    ap.add_argument("--gar", default="multi_bulyan")
+    ap.add_argument("--attack", default="none")
+    ap.add_argument("--trainer", default="stacked",
+                    choices=("stacked", "stream_block", "stream_global"))
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.is_encdec and args.trainer != "stacked":
+        raise SystemExit("enc-dec supports only the stacked trainer")
+
+    rcfg = RobustConfig(n_workers=args.workers, f=args.f, gar=args.gar)
+    key = jax.random.key(args.seed)
+    params = MD.init_model(key, cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params:,} workers={args.workers} "
+          f"f={args.f} gar={args.gar} attack={args.attack} trainer={args.trainer}")
+
+    opt = make_optimizer(args.optimizer,
+                         **({"momentum": 0.9} if args.optimizer == "sgd" else {}))
+    state = opt.init(params)
+    lr_fn = warmup_cosine(args.lr, warmup=max(args.steps // 20, 1),
+                          total_steps=args.steps)
+    chunk_q = min(args.seq, 512)
+    if args.trainer == "stacked":
+        step_fn = make_train_step(cfg, rcfg, opt, lr_fn, chunk_q=chunk_q,
+                                  attack=args.attack)
+    else:
+        scope = "global" if args.trainer.endswith("global") else "block"
+        step_fn = make_streaming_train_step(cfg, rcfg, opt, lr_fn,
+                                            scope=scope, chunk_q=chunk_q,
+                                            attack=args.attack)
+    step_fn = jax.jit(step_fn)
+
+    global_batch = args.workers * args.per_worker_batch
+    data = lm_batches(cfg.vocab_size, global_batch, args.seq, seed=args.seed)
+    t0 = time.time()
+    loss = float("nan")
+    for i in range(args.steps):
+        batch = next(data)
+        if cfg.is_encdec:
+            b = batch["tokens"].shape[0]
+            batch["frames"] = jax.random.normal(
+                jax.random.fold_in(key, 10_000 + i),
+                (b, cfg.n_frames, cfg.d_model), dtype=jnp.bfloat16)
+        if cfg.n_patches:
+            b = batch["tokens"].shape[0]
+            batch["prefix_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, 20_000 + i),
+                (b, cfg.n_patches, cfg.d_model), dtype=jnp.bfloat16)
+        wb = split_workers(batch, args.workers)
+        params, state, metrics = step_fn(params, state, wb,
+                                         jax.random.fold_in(key, i))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            print(f"[train] step {i:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.ckpt_dir:
+        path = save(args.ckpt_dir, args.steps, {"params": params})
+        print(f"[train] checkpoint -> {path}")
+    print(f"[train] done: final loss {loss:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

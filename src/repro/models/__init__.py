@@ -1,0 +1,11 @@
+"""Model substrate: functional transformer/MoE/SSM/hybrid/enc-dec stacks."""
+from repro.models.api import (  # noqa: F401
+    decode_fn,
+    decode_window,
+    forward_fn,
+    init_cache_fn,
+    init_model,
+    loss_fn,
+    make_batch,
+    prefill_fn,
+)

@@ -1,0 +1,133 @@
+"""Family-dispatching model API.
+
+One uniform surface over all 10 assigned architectures:
+
+* ``init_model(key, cfg)``                      -> param pytree
+* ``loss_fn(params, cfg, batch)``               -> scalar (training)
+* ``prefill_fn(params, cfg, batch)``            -> (logits, cache)
+* ``decode_fn(params, cfg, token, cache, pos)`` -> (logits, cache)
+* ``make_batch_spec(cfg, shape, ...)``          -> ShapeDtypeStructs (dry-run)
+
+The batch dict is the single currency: ``tokens``/``labels`` always; plus
+``prefix_embeds`` (vlm), ``frames`` (audio), ``loss_mask`` (vlm).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+
+Array = jax.Array
+PyTree = Any
+
+
+def init_model(key, cfg: ArchConfig) -> PyTree:
+    if cfg.is_encdec:
+        return ED.init_encdec(key, cfg)
+    return T.init_lm(key, cfg)
+
+
+def loss_fn(params: PyTree, cfg: ArchConfig, batch: Dict[str, Array], *,
+            window: int = 0, chunk_q: int = 1024, boundary_spec=None) -> Array:
+    if cfg.is_encdec:
+        return ED.encdec_loss(params, cfg, batch, chunk_q=chunk_q)
+    return T.lm_loss(params, cfg, batch, window=window, chunk_q=chunk_q,
+                     boundary_spec=boundary_spec)
+
+
+def forward_fn(params: PyTree, cfg: ArchConfig, batch: Dict[str, Array], *,
+               window: int = 0, chunk_q: int = 1024,
+               logits_tail: int = 1) -> Array:
+    """Inference forward (no cache emission) — logits for the tail positions."""
+    if cfg.is_encdec:
+        memory = ED.encode(params, cfg, batch["frames"], chunk_q=chunk_q)
+        return ED.decode_train(params, cfg, batch["tokens"], memory,
+                               window=window, chunk_q=chunk_q,
+                               logits_tail=logits_tail)
+    logits, _ = T.apply_lm(params, cfg, batch["tokens"],
+                           prefix_embeds=batch.get("prefix_embeds"),
+                           train=False, window=window, chunk_q=chunk_q,
+                           logits_tail=logits_tail)
+    return logits
+
+
+def prefill_fn(params: PyTree, cfg: ArchConfig, batch: Dict[str, Array], *,
+               window: int = 0, chunk_q: int = 1024, cache_len: int = 0
+               ) -> Tuple[Array, PyTree]:
+    if cfg.is_encdec:
+        return ED.encdec_prefill(params, cfg, batch["frames"],
+                                 batch["tokens"], window=window,
+                                 chunk_q=chunk_q, cache_len=cache_len)
+    return T.prefill(params, cfg, batch["tokens"],
+                     prefix_embeds=batch.get("prefix_embeds"),
+                     window=window, chunk_q=chunk_q, cache_len=cache_len)
+
+
+def decode_fn(params: PyTree, cfg: ArchConfig, token: Array, cache: PyTree,
+              pos: Array, *, window: int = 0,
+              seq_chunks: int = 1) -> Tuple[Array, PyTree]:
+    if cfg.is_encdec:
+        return ED.encdec_decode_step(params, cfg, token, cache, pos,
+                                     window=window, seq_chunks=seq_chunks)
+    return T.decode_step(params, cfg, token, cache, pos, window=window,
+                         seq_chunks=seq_chunks)
+
+
+def init_cache_fn(params: PyTree, cfg: ArchConfig, batch: int,
+                  cache_len: int, *, window: int = 0,
+                  memory: Optional[Array] = None) -> PyTree:
+    if cfg.is_encdec:
+        assert memory is not None
+        return ED.init_decode_cache(params, cfg, memory, batch, cache_len,
+                                    window=window)
+    return T.init_cache(cfg, batch, cache_len, window=window)
+
+
+# ----------------------------------------------------------------- shapes
+def decode_window(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Sliding window used for a decode shape (0 = exact full cache).
+
+    ``long_500k`` uses the ring buffer for every attention layer
+    (sub-quadratic requirement, DESIGN.md §4); shorter contexts stay exact.
+    """
+    if shape.kind == "decode" and shape.seq_len > 65536 and not cfg.is_attention_free:
+        return cfg.long_context_window
+    return 0
+
+
+def make_batch(cfg: ArchConfig, shape_kind: str, batch: int, seq: int,
+               key=None, as_spec: bool = False) -> Dict[str, Any]:
+    """Concrete batch (smoke tests) or ShapeDtypeStruct batch (dry-run)."""
+    i32 = jnp.int32
+
+    def tok(shape):
+        if as_spec:
+            return jax.ShapeDtypeStruct(shape, i32)
+        k = jax.random.fold_in(key, hash(str(shape)) % (2 ** 31))
+        return jax.random.randint(k, shape, 0, cfg.vocab_size, dtype=i32)
+
+    def emb(shape):
+        if as_spec:
+            return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+        k = jax.random.fold_in(key, (hash(str(shape)) + 1) % (2 ** 31))
+        return jax.random.normal(k, shape, dtype=jnp.bfloat16)
+
+    out: Dict[str, Any] = {}
+    if cfg.is_encdec:
+        out["frames"] = emb((batch, cfg.n_frames, cfg.d_model))
+        out["tokens"] = tok((batch, seq))
+    elif cfg.n_patches:
+        n_text = seq - cfg.n_patches
+        assert n_text > 0, (seq, cfg.n_patches)
+        out["prefix_embeds"] = emb((batch, cfg.n_patches, cfg.d_model))
+        out["tokens"] = tok((batch, n_text))
+    else:
+        out["tokens"] = tok((batch, seq))
+    if shape_kind == "train":
+        out["labels"] = tok(out["tokens"].shape)
+    return out

@@ -1,0 +1,315 @@
+"""Attention: GQA multi-head attention with RoPE, KV caches, sliding window.
+
+Three entry points:
+* :func:`attend_full`   — training / prefill self-attention over a whole
+  sequence, query-chunked so the (S, S) logit matrix never materialises
+  beyond ``(chunk_q, S)`` per head (memory roofline control for 32k prefill).
+* :func:`attend_cached` — one-token decode against a KV cache (full cache or
+  sliding-window ring buffer; the ring buffer is what makes ``long_500k``
+  sub-quadratic for full-attention families — DESIGN.md §4).
+* :func:`attend_cross`  — encoder-decoder cross attention (whisper).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import modules as M
+
+Array = jax.Array
+
+_NEG = -1e30  # additive mask value (fp32 logits)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, fraction: float, theta: float) -> Array:
+    """Inverse frequencies for the rotating sub-dimension."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: Array, positions: Array, cfg: ArchConfig) -> Array:
+    """Rotate ``x`` (..., S, H, head_dim) by absolute ``positions`` (..., S).
+
+    ``rope='full'`` rotates the whole head dim (llama/qwen style, half-split
+    layout); ``rope='partial'`` rotates only ``rope_fraction`` of it
+    (chatglm3's 2d-RoPE: half the head dim carries rotary phase, the other
+    half is position-free).  ``rope='none'`` is the identity (whisper uses
+    learned/sinusoid absolute embeddings instead).
+    """
+    if cfg.rope == "none":
+        return x
+    hd = x.shape[-1]
+    fraction = 1.0 if cfg.rope == "full" else cfg.rope_fraction
+    inv = rope_freqs(hd, fraction, cfg.rope_theta)          # (rot/2,)
+    rot = 2 * inv.shape[0]
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, rot/2)
+    sin = jnp.sin(ang)[..., None, :]                        # (..., S, 1, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if xp.shape[-1] else out
+
+
+# ------------------------------------------------------------- projection
+def attn_init(key, cfg: ArchConfig, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    bias = cfg.qkv_bias
+    return {
+        "q": M.linear_init(kq, d, cfg.n_heads * hd, bias=bias),
+        "k": M.linear_init(kk, d, cfg.n_kv_heads * hd, bias=bias),
+        "v": M.linear_init(kv, d, cfg.n_kv_heads * hd, bias=bias),
+        "o": M.linear_init(ko, cfg.n_heads * hd, d, bias=False,
+                           stddev=1.0 / math.sqrt(cfg.n_heads * hd * 2 * cfg.n_layers)),
+    }
+
+
+def _split_heads(x: Array, n_heads: int) -> Array:
+    return x.reshape(x.shape[:-1] + (n_heads, x.shape[-1] // n_heads))
+
+
+def project_qkv(p: dict, x: Array, cfg: ArchConfig,
+                positions: Optional[Array] = None,
+                rope_on_q: bool = True) -> Tuple[Array, Array, Array]:
+    """x (B, S, d) -> q (B, S, H, hd), k/v (B, S, Hkv, hd), roped."""
+    q = _split_heads(M.linear_apply(p["q"], x), cfg.n_heads)
+    k = _split_heads(M.linear_apply(p["k"], x), cfg.n_kv_heads)
+    v = _split_heads(M.linear_apply(p["v"], x), cfg.n_kv_heads)
+    if positions is not None:
+        if rope_on_q:
+            q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B, S, Hkv, hd) -> (B, S, H, hd) by group broadcast."""
+    b, s, hkv, hd = k.shape
+    rep = n_heads // hkv
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, rep, hd)).reshape(
+        b, s, n_heads, hd
+    )
+
+
+def batch_shard_qkv(q: Array, k: Array, v: Array):
+    """Constrain q/k/v (B, S, H, hd) to batch-sharding over the model axis.
+
+    Strategy knob for archs whose head count does not divide the
+    tensor-parallel degree: the attention inner product then runs fully
+    head-local per shard (one batch slice each), with a single relayout
+    before and after instead of per-chunk logit all-reduces.  No-op when no
+    'model' mesh axis is in scope (CPU tests).
+    """
+    from jax.sharding import PartitionSpec as P
+    spec = P("model", None, None, None)
+    try:
+        # resolves against the mesh context at trace time; raises when no
+        # mesh / no 'model' axis / non-divisible batch -> graceful no-op
+        qc = jax.lax.with_sharding_constraint(q, spec)
+        kc = jax.lax.with_sharding_constraint(k, spec)
+        vc = jax.lax.with_sharding_constraint(v, spec)
+    except Exception:
+        return q, k, v
+    return qc, kc, vc
+
+
+def unshard_residual(x: Array) -> Array:
+    """Constrain (B, S, d) back to the replicated-over-model layout."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(None, None, None))
+    except Exception:
+        return x
+
+
+# ----------------------------------------------------------- full attention
+def attend_full(q: Array, k: Array, v: Array, *, causal: bool = True,
+                window: int = 0, chunk_q: int = 1024) -> Array:
+    """Self attention over full sequences, query-chunked.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd).  Returns (B, Sq, H, hd).
+    ``window > 0`` restricts each query to the ``window`` most recent keys
+    (sliding-window variant).
+    """
+    n_heads = q.shape[2]
+    k = _expand_kv(k, n_heads)
+    v = _expand_kv(v, n_heads)
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    kt = k.transpose(0, 2, 3, 1)      # (B, H, hd, Sk)
+    vt = v.transpose(0, 2, 1, 3)      # (B, H, Sk, hd)
+    kpos = jnp.arange(sk)
+
+    def block(args):
+        qc, q0 = args                  # (B, cq, H, hd), scalar start index
+        cq = qc.shape[1]
+        qct = qc.transpose(0, 2, 1, 3)                       # (B, H, cq, hd)
+        logits = jnp.einsum(
+            "bhqd,bhdk->bhqk", qct.astype(jnp.float32),
+            kt.astype(jnp.float32), precision=jax.lax.Precision.DEFAULT,
+        ) * scale                                            # (B, H, cq, Sk)
+        qpos = q0 + jnp.arange(cq)
+        mask = jnp.ones((cq, sk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, _NEG)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs, vt.astype(jnp.float32))
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B, cq, H, hd)
+
+    if sq <= chunk_q:
+        return block((q, jnp.int32(0)))
+    pad = (-sq) % chunk_q
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    sqp = sq + pad
+    nc = sqp // chunk_q
+    qs = qp.reshape(b, nc, chunk_q, h, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nc, dtype=jnp.int32) * chunk_q
+    # remat each chunk: backward recomputes its probs instead of saving the
+    # full (S, S) attention matrix across chunks (memory roofline control)
+    out = jax.lax.map(jax.checkpoint(block), (qs, starts))   # (nc, B, cq, H, hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sqp, h, hd)
+    return out[:, :sq] if pad else out
+
+
+# ---------------------------------------------------------- cached decode
+def cache_from_prefill(k: Array, v: Array, cache_len: int, window: int,
+                       dtype=jnp.bfloat16) -> dict:
+    """Pack prompt K/V (B, S, Hkv, hd) into a decode cache.
+
+    Full cache: placed at [0, S) of a ``cache_len``-slot buffer.
+    Ring buffer: the last ``min(window, S)`` tokens land in their ring slots
+    (slot of absolute position p is ``p % window``).
+    """
+    b, s = k.shape[:2]
+    if window:
+        keep = min(window, s)
+        kw = jnp.zeros((b, window) + k.shape[2:], dtype)
+        vw = jnp.zeros_like(kw)
+        pos_tail = jnp.arange(s - keep, s)
+        kw = kw.at[:, pos_tail % window].set(k[:, -keep:].astype(dtype))
+        vw = vw.at[:, pos_tail % window].set(v[:, -keep:].astype(dtype))
+        return {"k": kw, "v": vw}
+    assert cache_len >= s, (cache_len, s)
+    kc = jnp.zeros((b, cache_len) + k.shape[2:], dtype).at[:, :s].set(k.astype(dtype))
+    vc = jnp.zeros((b, cache_len) + v.shape[2:], dtype).at[:, :s].set(v.astype(dtype))
+    return {"k": kc, "v": vc}
+
+
+def init_kv_cache(batch: int, length: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    """Cache for one attention layer.  ``length`` is the max context (full
+    cache) or the window size (ring buffer)."""
+    shape = (batch, length, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attend_cached(p: dict, x: Array, cache: dict, pos: Array,
+                  cfg: ArchConfig, *, window: int = 0,
+                  seq_chunks: int = 1) -> Tuple[Array, dict]:
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 absolute position.
+
+    Full cache (window == 0): write at index ``pos``, attend to [0, pos].
+    Ring buffer (window > 0): write at ``pos % window``; slot validity and
+    causality are reconstructed from absolute slot positions.
+    """
+    q, k_new, v_new = project_qkv(p, x, cfg, positions=pos[None, None]
+                                  * jnp.ones((x.shape[0], 1), jnp.int32))
+    slot = pos % window if window else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+
+    length = k.shape[1]
+    sidx = jnp.arange(length)
+    if window:
+        # absolute position held by slot s after the write at `pos`:
+        abs_pos = pos - ((pos - sidx) % window)
+        valid = abs_pos >= 0                      # since abs_pos <= pos always
+    else:
+        valid = sidx <= pos
+
+    n_heads = cfg.n_heads
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    bsz = x.shape[0]
+    if seq_chunks > 1 and length % seq_chunks == 0:
+        # flash-style partial softmax over seq chunks: with the cache length
+        # axis sharded over 'model' in `seq_chunks` blocks, the (L-sized)
+        # logit/exp/value work stays shard-local and only (B, H, c, hd)
+        # combine statistics cross shards — replaces the per-step all-gather
+        # of the whole KV cache.  Grouped-query einsums keep the kv-head dim
+        # as-is: materialising _expand_kv here all-gathers a 16×-expanded
+        # cache copy per layer (measured 15 GB/step on chatglm decode —
+        # EXPERIMENTS.md §Perf #13).
+        lc = length // seq_chunks
+        hkv = cfg.n_kv_heads
+        rep = n_heads // hkv
+        hd = cfg.resolved_head_dim
+        kc = k.astype(jnp.float32).reshape(bsz, seq_chunks, lc, hkv, hd)
+        vc = v.astype(jnp.float32).reshape(bsz, seq_chunks, lc, hkv, hd)
+        qg = q.astype(jnp.float32).reshape(bsz, 1, hkv, rep, hd)
+        logits = jnp.einsum("bqgrd,bckgd->bgrck", qg, kc) * scale
+        vmask = valid.reshape(seq_chunks, lc)                    # (c, Lc)
+        logits = jnp.where(vmask[None, None, None], logits, _NEG)
+        m_c = jnp.max(logits, axis=-1)                           # (B,g,r,c)
+        e = jnp.exp(logits - m_c[..., None])
+        e = jnp.where(vmask[None, None, None], e, 0.0)
+        s_c = jnp.sum(e, axis=-1)                                # (B,g,r,c)
+        o_c = jnp.einsum("bgrck,bckgd->bgrcd", e, vc)            # (B,g,r,c,hd)
+        m_g = jnp.max(m_c, axis=-1, keepdims=True)
+        w_c = jnp.exp(m_c - m_g)                                 # (B,g,r,c)
+        denom = jnp.sum(w_c * s_c, axis=-1)                      # (B,g,r)
+        out = jnp.sum(w_c[..., None] * o_c, axis=3) / denom[..., None]
+        out = out.reshape(bsz, n_heads, hd).astype(x.dtype)[:, None]
+    else:
+        ke = _expand_kv(k, n_heads).astype(jnp.float32)   # (B, L, H, hd)
+        ve = _expand_kv(v, n_heads).astype(jnp.float32)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), ke) * scale
+        logits = jnp.where(valid[None, None, None, :], logits, _NEG)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, ve).astype(x.dtype)
+    out = out.reshape(bsz, 1, -1)
+    y = M.linear_apply(p["o"], out)
+    return y, {"k": k, "v": v}
+
+
+def self_attention(p: dict, x: Array, cfg: ArchConfig, *,
+                   positions: Optional[Array] = None, causal: bool = True,
+                   window: int = 0, chunk_q: int = 1024) -> Array:
+    """Full-sequence self attention block (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q, k, v = project_qkv(p, x, cfg, positions=positions)
+    out = attend_full(q, k, v, causal=causal, window=window, chunk_q=chunk_q)
+    return M.linear_apply(p["o"], out.reshape(b, s, -1))
+
+
+# ------------------------------------------------------------------ cross
+def attend_cross(p: dict, x: Array, memory_kv: Tuple[Array, Array],
+                 cfg: ArchConfig) -> Array:
+    """Cross attention against precomputed encoder K/V (B, Sm, Hkv, hd)."""
+    b, s, _ = x.shape
+    q = _split_heads(M.linear_apply(p["q"], x), cfg.n_heads)
+    k, v = memory_kv
+    out = attend_full(q, k, v, causal=False, chunk_q=max(s, 1))
+    return M.linear_apply(p["o"], out.reshape(b, s, -1))
+
+
+def cross_kv(p: dict, memory: Array, cfg: ArchConfig) -> Tuple[Array, Array]:
+    """Precompute cross-attention K/V from encoder output (done at prefill)."""
+    k = _split_heads(M.linear_apply(p["k"], memory), cfg.n_kv_heads)
+    v = _split_heads(M.linear_apply(p["v"], memory), cfg.n_kv_heads)
+    return k, v

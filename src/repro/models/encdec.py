@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+Per the task carve-out, the audio frontend (mel spectrogram + conv feature
+extractor) is a STUB: the encoder consumes precomputed frame embeddings
+``(B, n_frames, d_model)`` supplied by ``input_specs()``.  Everything from
+there on is real: bidirectional encoder, causal decoder with cross attention,
+prefill/decode with self-attention KV cache + precomputed cross K/V.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import modules as M
+from repro.models import mlp as F
+
+Array = jax.Array
+PyTree = Any
+
+
+def _enc_layer_init(key, cfg: ArchConfig) -> dict:
+    ka, kf = jax.random.split(key)
+    return {
+        "norm1": M.norm_init(cfg.norm, cfg.d_model),
+        "attn": A.attn_init(ka, cfg),
+        "norm2": M.norm_init(cfg.norm, cfg.d_model),
+        "mlp": F.mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def _dec_layer_init(key, cfg: ArchConfig) -> dict:
+    ka, kc, kf = jax.random.split(key, 3)
+    return {
+        "norm1": M.norm_init(cfg.norm, cfg.d_model),
+        "self": A.attn_init(ka, cfg),
+        "norm_x": M.norm_init(cfg.norm, cfg.d_model),
+        "cross": A.attn_init(kc, cfg),
+        "norm2": M.norm_init(cfg.norm, cfg.d_model),
+        "mlp": F.mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig) -> dict:
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    enc = [_enc_layer_init(k, cfg) for k in jax.random.split(kenc, cfg.n_encoder_layers)]
+    dec = [_dec_layer_init(k, cfg) for k in jax.random.split(kdec, cfg.n_layers)]
+    return {
+        "embed": M.embedding_init(ke, cfg.vocab_size, cfg.d_model),
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": M.norm_init(cfg.norm, cfg.d_model),
+        "final_norm": M.norm_init(cfg.norm, cfg.d_model),
+        "lm_head": M.linear_init(kh, cfg.d_model, cfg.vocab_size,
+                                 stddev=1.0 / math.sqrt(cfg.d_model)),
+    }
+
+
+def encode(params: dict, cfg: ArchConfig, frames: Array,
+           chunk_q: int = 1024, remat: bool = False) -> Array:
+    """frames: (B, n_frames, d_model) stub embeddings -> encoder memory."""
+    x = frames.astype(jnp.bfloat16)
+    x = x + M.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, lp):
+        h = M.norm_apply(cfg.norm, lp["norm1"], x)
+        q, k, v = A.project_qkv(lp["attn"], h, cfg, positions=None)
+        out = A.attend_full(q, k, v, causal=False, chunk_q=chunk_q)
+        x = x + M.linear_apply(lp["attn"]["o"], out.reshape(b, s, -1))
+        h2 = M.norm_apply(cfg.norm, lp["norm2"], x)
+        x = x + F.mlp_apply(lp["mlp"], h2, cfg.activation)
+        return x, ()
+
+    x, _ = jax.lax.scan(jax.checkpoint(body) if remat else body,
+                        x, params["enc_layers"])
+    return M.norm_apply(cfg.norm, params["enc_norm"], x)
+
+
+def decode_train(params: dict, cfg: ArchConfig, tokens: Array, memory: Array,
+                 *, window: int = 0, chunk_q: int = 1024,
+                 logits_tail: int = 0, emit_cache: bool = False,
+                 cache_len: int = 0, return_hidden: bool = False) -> Array:
+    """Teacher-forced decoder pass.  tokens: (B, S); memory: (B, Sm, d).
+
+    ``emit_cache`` additionally returns the packed self-attn KV caches
+    (prefill path)."""
+    x = M.embedding_apply(params["embed"], tokens)
+    x = x + M.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    b, s, _ = x.shape
+    if not cache_len:
+        cache_len = s + 64
+
+    def body(x, lp):
+        h = M.norm_apply(cfg.norm, lp["norm1"], x)
+        q, k, v = A.project_qkv(lp["self"], h, cfg, positions=None)
+        out = A.attend_full(q, k, v, causal=True, window=window, chunk_q=chunk_q)
+        x = x + M.linear_apply(lp["self"]["o"], out.reshape(b, s, -1))
+        hx = M.norm_apply(cfg.norm, lp["norm_x"], x)
+        mkv = A.cross_kv(lp["cross"], memory, cfg)
+        x = x + A.attend_cross(lp["cross"], hx, mkv, cfg)
+        h2 = M.norm_apply(cfg.norm, lp["norm2"], x)
+        x = x + F.mlp_apply(lp["mlp"], h2, cfg.activation)
+        y = A.cache_from_prefill(k, v, cache_len, window) if emit_cache else ()
+        return x, y
+
+    scan_body = body if emit_cache or logits_tail else jax.checkpoint(body)
+    x, caches = jax.lax.scan(scan_body, x, params["dec_layers"])
+    x = M.norm_apply(cfg.norm, params["final_norm"], x)
+    if return_hidden:
+        return (x, caches) if emit_cache else x
+    if logits_tail:
+        x = x[:, -logits_tail:]
+    logits = M.linear_apply(params["lm_head"], x)
+    return (logits, caches) if emit_cache else logits
+
+
+def encdec_loss(params: dict, cfg: ArchConfig, batch: Dict[str, Array], *,
+                chunk_q: int = 1024) -> Array:
+    from repro.models.losses import chunked_xent
+    memory = encode(params, cfg, batch["frames"], chunk_q=chunk_q, remat=True)
+    x = decode_train(params, cfg, batch["tokens"], memory, chunk_q=chunk_q,
+                     return_hidden=True)
+    return chunked_xent(x, batch["labels"], {"lm_head": params["lm_head"]},
+                        tied=False)
+
+
+# ---------------------------------------------------------------- serving
+def _cross_kv_stack(params: dict, cfg: ArchConfig, memory: Array):
+    def per_layer(lp):
+        return A.cross_kv(lp["cross"], memory, cfg)
+
+    return jax.vmap(per_layer)(params["dec_layers"])  # stacked over layers
+
+
+def init_decode_cache(params: dict, cfg: ArchConfig, memory: Array,
+                      batch: int, cache_len: int, *, window: int = 0) -> PyTree:
+    """Empty self-attn KV cache + precomputed cross K/V per decoder layer."""
+    length = window if window else cache_len
+    self_c = [A.init_kv_cache(batch, length, cfg.n_kv_heads, cfg.resolved_head_dim)
+              for _ in range(cfg.n_layers)]
+    self_c = jax.tree.map(lambda *xs: jnp.stack(xs), *self_c)
+    return {"self": self_c, "cross": _cross_kv_stack(params, cfg, memory)}
+
+
+def encdec_prefill(params: dict, cfg: ArchConfig, frames: Array,
+                   tokens: Array, *, window: int = 0, chunk_q: int = 1024,
+                   cache_len: int = 0) -> Tuple[Array, PyTree]:
+    """Encode + teacher-forced warm-up of the decoder self-attn cache."""
+    memory = encode(params, cfg, frames, chunk_q=chunk_q)
+    logits, self_c = decode_train(
+        params, cfg, tokens, memory, window=window, chunk_q=chunk_q,
+        logits_tail=1, emit_cache=True, cache_len=cache_len)
+    cache = {"self": self_c, "cross": _cross_kv_stack(params, cfg, memory)}
+    return logits[:, 0], cache
+
+
+def encdec_decode_step(params: dict, cfg: ArchConfig, token: Array,
+                       cache: PyTree, pos: Array, *, window: int = 0,
+                       seq_chunks: int = 1) -> Tuple[Array, PyTree]:
+    """One decoder token.  token: (B,); pos scalar int32."""
+    x = M.embedding_apply(params["embed"], token[:, None])
+    d = cfg.d_model
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = jnp.exp(-math.log(10000.0) * 2.0 * dim / d)
+    ang = pos.astype(jnp.float32) * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+    x = x + pe.astype(x.dtype)
+
+    def body(x, xs):
+        lp, sc, ckv = xs
+        h = M.norm_apply(cfg.norm, lp["norm1"], x)
+        out, new_sc = A.attend_cached(lp["self"], h, sc, pos, cfg,
+                                      window=window, seq_chunks=seq_chunks)
+        x = x + out
+        hx = M.norm_apply(cfg.norm, lp["norm_x"], x)
+        x = x + A.attend_cross(lp["cross"], hx, ckv, cfg)
+        h2 = M.norm_apply(cfg.norm, lp["norm2"], x)
+        x = x + F.mlp_apply(lp["mlp"], h2, cfg.activation)
+        return x, new_sc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    x = M.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = M.linear_apply(params["lm_head"], x)[:, 0]
+    return logits, {"self": new_self, "cross": cache["cross"]}

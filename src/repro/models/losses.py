@@ -1,0 +1,65 @@
+"""Memory-bounded cross entropy.
+
+The naive loss materialises (tokens × vocab) logits in fp32 — at 65k tokens
+× 152k vocab that is ~40 GB per device, twice (forward residual + backward
+dlogits).  ``chunked_xent`` computes the loss over token chunks inside a
+rematerialised ``lax.map``: the backward pass recomputes each chunk's logits
+on the fly, so peak logit memory is one chunk (~0.3 GB at chunk 512).
+
+This is load-bearing for the dry-run memory budget of every train_4k
+combination (EXPERIMENTS.md §Perf, iteration 0).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as M
+
+Array = jax.Array
+
+
+def _chunk_nll(readout_params: dict, tied: bool, xc: Array, yc: Array,
+               wc: Array) -> Array:
+    """Sum of masked NLL over one chunk.  xc: (c, d); yc, wc: (c,)."""
+    if tied:
+        logits = M.embedding_attend(readout_params["embed"], xc)
+    else:
+        logits = M.linear_apply(readout_params["lm_head"], xc)
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, yc[:, None], axis=-1)[:, 0]
+    return jnp.sum((logz - gold) * wc)
+
+
+def chunked_xent(x: Array, labels: Array, readout_params: dict, *,
+                 tied: bool, mask: Optional[Array] = None,
+                 chunk: int = 4096) -> Array:
+    """Mean next-token NLL.  x: (B, S, d); labels: (B, S)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    yf = labels.reshape(t)
+    wf = jnp.ones((t,), jnp.float32) if mask is None else mask.reshape(t).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(wf), 1.0)
+
+    if t <= chunk:
+        return _chunk_nll(readout_params, tied, xf, yf, wf) / denom
+
+    pad = (-t) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        yf = jnp.pad(yf, (0, pad))
+        wf = jnp.pad(wf, (0, pad))
+    nc = xf.shape[0] // chunk
+    xs = xf.reshape(nc, chunk, d)
+    ys = yf.reshape(nc, chunk)
+    ws = wf.reshape(nc, chunk)
+
+    body = jax.checkpoint(
+        functools.partial(_chunk_nll, readout_params, tied))
+    sums = jax.lax.map(lambda args: body(*args), (xs, ys, ws))
+    return jnp.sum(sums) / denom

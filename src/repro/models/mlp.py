@@ -1,0 +1,28 @@
+"""Dense MLP blocks: swiglu (qwen/jamba), squared-relu (nemotron), gelu (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as M
+
+Array = jax.Array
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "in": M.linear_init(k1, d_model, d_ff),
+        "out": M.linear_init(k2, d_ff, d_model),
+    }
+    if activation == "swiglu":
+        p["gate"] = M.linear_init(k3, d_model, d_ff)
+    return p
+
+
+def mlp_apply(p: dict, x: Array, activation: str) -> Array:
+    if activation == "swiglu":
+        h = jax.nn.silu(M.linear_apply(p["gate"], x)) * M.linear_apply(p["in"], x)
+    else:
+        h = M.ACTIVATIONS[activation](M.linear_apply(p["in"], x))
+    return M.linear_apply(p["out"], h)

@@ -1,0 +1,110 @@
+"""Functional parameter-pytree building blocks (no flax — per task scope).
+
+Every module is a pair of functions: ``<name>_init(key, ...) -> params`` and
+``<name>_apply(params, x, ...) -> y``.  Params are plain nested dicts of
+``jnp.ndarray`` so they compose with ``jax.tree`` utilities, our sharding
+rules (dist/sharding.py matches on dict paths) and the robust aggregator.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def truncated_normal(key, shape, stddev, dtype=jnp.float32) -> Array:
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ----------------------------------------------------------------- linear
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                stddev: Optional[float] = None, dtype=jnp.float32) -> dict:
+    if stddev is None:
+        stddev = 1.0 / math.sqrt(d_in)
+    p = {"w": truncated_normal(key, (d_in, d_out), stddev, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p: dict, x: Array) -> Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# -------------------------------------------------------------- embedding
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    # ~N(0, 1/sqrt(d)): keeps tied-readout logits O(1) at init
+    return {"table": truncated_normal(key, (vocab, d), 1.0 / math.sqrt(d), dtype)}
+
+
+def embedding_apply(p: dict, ids: Array, dtype=jnp.bfloat16) -> Array:
+    return jnp.take(p["table"].astype(dtype), ids, axis=0)
+
+
+def embedding_attend(p: dict, x: Array) -> Array:
+    """Tied readout: x @ table.T."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int) -> dict:
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def norm_apply(kind: str, p: dict, x: Array) -> Array:
+    return rmsnorm_apply(p, x) if kind == "rmsnorm" else layernorm_apply(p, x)
+
+
+# ------------------------------------------------------------ activations
+def relu2(x: Array) -> Array:
+    """Squared ReLU (nemotron-4)."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu2": relu2,
+    "relu": jax.nn.relu,
+}
+
+
+# ------------------------------------------------------------- positional
+def sinusoidal_positions(n: int, d: int, dtype=jnp.float32) -> Array:
+    """Classic transformer sinusoid table (whisper encoder)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * 2.0 * dim / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer (qwen3-moe 128e/top-8, jamba 16e/top-2).
+
+TPU-native expert-parallel design (DESIGN.md §3/§4): experts live on the
+``model`` mesh axis.  Dispatch is *capacity-based gather/scatter* rather than
+the classic mesh-tf one-hot einsum — the one-hot dispatch einsum costs
+``O(T·E·C·d)`` FLOPs (quadratic in tokens), whereas index gather/scatter is
+pure data movement, so ``cost_analysis`` FLOPs stay ≈ active-expert FLOPs
+(top_k/E of the dense-equivalent), which is what the roofline needs to see.
+
+Tokens overflowing an expert's capacity ``C = ceil(T·k/E·cf)`` are dropped
+(standard practice; the router aux loss keeps load balanced).  Dropped slots
+combine as zeros, preserving the residual path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import modules as M
+
+Array = jax.Array
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, activation: str) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    e, dff = cfg.n_experts, cfg.d_expert
+    std_in = 1.0 / math.sqrt(d_model)
+    std_out = 1.0 / math.sqrt(dff)
+    p = {
+        "router": M.linear_init(kr, d_model, e, stddev=0.02),
+        # expert-stacked weights: leading E axis shards over the model axis
+        "w_in": M.truncated_normal(k1, (e, d_model, dff), std_in),
+        "w_out": M.truncated_normal(k2, (e, dff, d_model), std_out),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = M.truncated_normal(k3, (e, d_model, dff), std_in)
+    return p
+
+
+def _constrain_expert_parallel(t: Array) -> Array:
+    """Pin (E, C, d) dispatch buffers to expert-parallel sharding over the
+    model axis (no-op outside a mesh context / non-divisible E)."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(t, P("model", None, None))
+    except Exception:
+        return t
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # multiple of 8 for lane alignment
+
+
+def moe_apply(p: dict, x: Array, cfg: MoEConfig, activation: str
+              ) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, cfg)
+
+    logits = M.linear_apply(p["router"], xf).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_ids = jax.lax.top_k(probs, k)                     # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=1), axis=0
+    )                                                              # (E,) frac routed
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_weight * e * jnp.sum(density / k * mean_prob)
+
+    # ---- position-in-expert via cumulative one-hot over the (T*k) stream
+    eid = expert_ids.reshape(t * k)                                # (T*k,)
+    onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)               # (T*k, E)
+    pos_in_e = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1
+    keep = pos_in_e < c
+    dest = eid * c + pos_in_e                                      # (T*k,) in [0, E*C)
+    dest = jnp.where(keep, dest, e * c)                            # overflow -> dropped
+
+    token_of = jnp.arange(t * k, dtype=jnp.int32) // k
+    # slot -> token index (sentinel t for empty slots)
+    slot_token = jnp.full((e * c + 1,), t, jnp.int32).at[dest].set(
+        token_of, mode="drop")[: e * c]
+    slot_gate = jnp.zeros((e * c + 1,), jnp.float32).at[dest].set(
+        gate.reshape(t * k), mode="drop")[: e * c]
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    expert_in = jnp.take(xpad, slot_token, axis=0).reshape(e, c, d)
+    expert_in = _constrain_expert_parallel(expert_in)
+
+    # ---- expert FFN, batched over the (sharded) expert axis
+    w_in = p["w_in"].astype(x.dtype)
+    w_out = p["w_out"].astype(x.dtype)
+    if activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * jnp.einsum("ecd,edf->ecf", expert_in, w_in)
+    else:
+        h = M.ACTIVATIONS[activation](jnp.einsum("ecd,edf->ecf", expert_in, w_in))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, w_out)              # (E, C, d)
+    expert_out = _constrain_expert_parallel(expert_out)
+
+    # ---- combine: scatter-add weighted slots back to tokens
+    # (gate cast BEFORE the multiply: an fp32 gate upcasts the whole (E·C, d)
+    # buffer — measured as the dominant temp term on jamba, §Perf hc-2)
+    gate_cast = slot_gate.astype(x.dtype)
+    flat_out = expert_out.reshape(e * c, d) * gate_cast[:, None]
+    y = jnp.zeros((t + 1, d), x.dtype).at[slot_token].add(flat_out)[:t]
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,169 @@
+"""Mamba-1 selective state-space mixer (falcon-mamba-7b, jamba mixers).
+
+TPU adaptation (DESIGN.md §3): the recurrence
+``h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t`` is evaluated with a *chunked
+associative scan* — ``lax.scan`` over sequence chunks carrying the (B, d_i,
+d_state) state, ``lax.associative_scan`` (log-depth, VPU-friendly) inside a
+chunk.  This bounds the live (B, chunk, d_i, d_state) buffer instead of
+materialising the full (B, S, d_i, d_state) tensor (which at 4k×8192×16 would
+be ~2 GB/device) while avoiding a 4096-step sequential scan.
+
+Decode is the O(1) single-step update with a (conv window, ssm state) cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import modules as M
+
+Array = jax.Array
+
+
+def mamba_init(key, cfg: ArchConfig) -> dict:
+    ssm = cfg.ssm
+    assert ssm is not None
+    d = cfg.d_model
+    di = ssm.expand * d
+    dtr = ssm.resolved_dt_rank(d)
+    st = ssm.d_state
+    k_in, k_conv, k_x, k_dt, k_out = jax.random.split(key, 5)
+    # S4D-real initialisation of A
+    a = jnp.broadcast_to(jnp.arange(1, st + 1, dtype=jnp.float32)[None], (di, st))
+    dt_std = dtr ** -0.5
+    return {
+        "in_proj": M.linear_init(k_in, d, 2 * di),
+        "conv_w": M.truncated_normal(k_conv, (ssm.d_conv, di), 1.0 / math.sqrt(ssm.d_conv)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": M.linear_init(k_x, di, dtr + 2 * st),
+        "dt_proj": {
+            "w": M.truncated_normal(k_dt, (dtr, di), dt_std),
+            # bias init so softplus(b) spans [1e-3, 1e-1] — standard mamba
+            "b": jnp.log(jnp.expm1(
+                jnp.exp(jax.random.uniform(k_dt, (di,),
+                                           minval=math.log(1e-3),
+                                           maxval=math.log(1e-1))))),
+        },
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": M.linear_init(k_out, di, d),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 history: Optional[Array] = None) -> Array:
+    """Depthwise causal conv1d.  x: (B, S, di); w: (K, di).
+
+    ``history``: optional (B, K-1, di) left context (decode path).
+    """
+    k = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B, S+K-1, di)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # K is 4: unrolled taps beat a conv op at this size
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(p: dict, xc: Array, ssm: SSMConfig, d_model: int):
+    """Shared projections: xc (B, S, di) -> (decay, inp, C, Dx)."""
+    dtr = ssm.resolved_dt_rank(d_model)
+    st = ssm.d_state
+    proj = M.linear_apply(p["x_proj"], xc)                    # (B, S, dtr+2st)
+    dt_low, b_mat, c_mat = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(
+        dt_low.astype(jnp.float32) @ p["dt_proj"]["w"] + p["dt_proj"]["b"]
+    )                                                         # (B, S, di) fp32
+    a = -jnp.exp(p["A_log"])                                  # (di, st)
+    decay = jnp.exp(dt[..., None] * a)                        # (B, S, di, st)
+    inp = (dt * xc.astype(jnp.float32))[..., None] * \
+        b_mat.astype(jnp.float32)[:, :, None, :]              # (B, S, di, st)
+    return decay, inp, c_mat.astype(jnp.float32)
+
+
+def _scan_chunk(h0: Array, decay: Array, inp: Array) -> Tuple[Array, Array]:
+    """Associative scan within a chunk.  h0: (B, di, st); others (B, C, di, st).
+
+    Returns (h_all (B, C, di, st), h_last).
+    """
+    def combine(a, b):
+        (da, xa), (db, xb) = a, b
+        return da * db, xa * db + xb
+
+    d_cum, x_cum = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+    h_all = x_cum + d_cum * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_apply(p: dict, x: Array, cfg: ArchConfig, *,
+                chunk: int = 256) -> Array:
+    """Full-sequence mixer (train / prefill).  x: (B, S, d)."""
+    ssm = cfg.ssm
+    assert ssm is not None
+    b, s, d = x.shape
+    di = ssm.expand * d
+    xz = M.linear_apply(p["in_proj"], x)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xc, p["conv_w"], p["conv_b"]))
+
+    decay, inp, c_mat = _ssm_inputs(p, xc, ssm, d)
+
+    st = ssm.d_state
+    if s > chunk and s % chunk == 0:
+        nc = s // chunk
+        dch = decay.reshape(b, nc, chunk, di, st).transpose(1, 0, 2, 3, 4)
+        ich = inp.reshape(b, nc, chunk, di, st).transpose(1, 0, 2, 3, 4)
+
+        def step(h, xs):
+            dc, ic = xs
+            h_all, h_last = _scan_chunk(h, dc, ic)
+            return h_last, h_all
+
+        h0 = jnp.zeros((b, di, st), jnp.float32)
+        _, h_chunks = jax.lax.scan(step, h0, (dch, ich))
+        h_seq = h_chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, di, st)
+    else:
+        h_seq, _ = _scan_chunk(jnp.zeros((b, di, st), jnp.float32), decay, inp)
+
+    y = jnp.sum(h_seq * c_mat[:, :, None, :], axis=-1)        # (B, S, di)
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return M.linear_apply(p["out_proj"], y.astype(x.dtype))
+
+
+# ------------------------------------------------------------------ decode
+def init_mamba_cache(batch: int, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, ssm.d_state), jnp.float32),
+    }
+
+
+def mamba_step(p: dict, x: Array, cache: dict, cfg: ArchConfig
+               ) -> Tuple[Array, dict]:
+    """Single-token decode.  x: (B, 1, d)."""
+    ssm = cfg.ssm
+    b, _, d = x.shape
+    xz = M.linear_apply(p["in_proj"], x)
+    x_raw, z = jnp.split(xz, 2, axis=-1)                      # pre-conv input
+    xc = jax.nn.silu(_causal_conv(x_raw, p["conv_w"], p["conv_b"],
+                                  history=cache["conv"]))
+    new_conv = jnp.concatenate(
+        [cache["conv"][:, 1:], x_raw.astype(cache["conv"].dtype)], axis=1
+    ) if ssm.d_conv > 1 else cache["conv"]
+    decay, inp, c_mat = _ssm_inputs(p, xc, ssm, d)
+    h = decay[:, 0] * cache["h"] + inp[:, 0]                  # (B, di, st)
+    y = jnp.sum(h * c_mat[:, 0, None, :], axis=-1)            # (B, di)
+    y = y + p["D"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = M.linear_apply(p["out_proj"], y.astype(x.dtype))[:, None]
+    return out, {"conv": new_conv, "h": h}

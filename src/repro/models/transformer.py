@@ -1,0 +1,378 @@
+"""Decoder-only LM assembly: dense / GQA / MoE / SSM / hybrid / VLM-prefix.
+
+Layers are grouped into *superblocks* of ``period`` layers (period = 1 for
+homogeneous stacks, = hybrid period (lcm'd with the MoE interleave) for
+jamba-style models).  Superblock parameters are stacked along a leading axis
+and the stack is traversed with ``lax.scan`` — a 94-layer model lowers to a
+single scanned block, keeping HLO size and compile time flat (required for
+the 40-combo dry-run).
+
+Three execution modes share the same parameters:
+* ``apply_lm``    — full-sequence forward (training loss / logits).
+* ``prefill``     — full-sequence forward that also emits the layer caches
+                    and only the last-position logits.
+* ``decode_step`` — one token against the cache (full or ring-buffer window).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import modules as M
+from repro.models import mlp as F
+from repro.models import moe as E
+from repro.models import ssm as S
+
+Array = jax.Array
+PyTree = Any
+
+
+# ------------------------------------------------------------ layer specs
+def layer_specs(cfg: ArchConfig) -> List[Tuple[str, Optional[str]]]:
+    """Per-layer (mixer, mlp) kinds for one superblock period."""
+    if cfg.family == "ssm":
+        return [("mamba", None)]
+    period = 1
+    if cfg.hybrid is not None:
+        period = cfg.hybrid.period
+    if cfg.moe is not None:
+        period = math.lcm(period, cfg.moe.every)
+    specs: List[Tuple[str, Optional[str]]] = []
+    for i in range(period):
+        if cfg.hybrid is not None:
+            mixer = "attn" if (i % cfg.hybrid.period) == cfg.hybrid.attn_index else "mamba"
+        else:
+            mixer = "attn"
+        if cfg.d_ff == 0 and cfg.moe is None:
+            mlp_kind: Optional[str] = None
+        elif cfg.moe is not None and (i % cfg.moe.every) == cfg.moe.every - 1:
+            mlp_kind = "moe"
+        else:
+            mlp_kind = "dense"
+        specs.append((mixer, mlp_kind))
+    return specs
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    period = len(layer_specs(cfg))
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    return cfg.n_layers // period
+
+
+# ------------------------------------------------------------------ init
+def _layer_init(key, cfg: ArchConfig, mixer: str, mlp_kind: Optional[str]) -> dict:
+    km, kf = jax.random.split(key)
+    p: dict = {"norm1": M.norm_init(cfg.norm, cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = A.attn_init(km, cfg)
+    else:
+        p["mamba"] = S.mamba_init(km, cfg)
+    if mlp_kind is not None:
+        p["norm2"] = M.norm_init(cfg.norm, cfg.d_model)
+        if mlp_kind == "moe":
+            p["moe"] = E.moe_init(kf, cfg.d_model, cfg.moe, cfg.activation)
+        else:
+            p["mlp"] = F.mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.activation)
+    return p
+
+
+def _group_init(key, cfg: ArchConfig) -> dict:
+    specs = layer_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    return {f"l{i}": _layer_init(k, cfg, mx, mk)
+            for i, (k, (mx, mk)) in enumerate(zip(keys, specs))}
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    ng = n_groups(cfg)
+    groups = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_group_init(k, cfg) for k in jax.random.split(kb, ng)],
+    )
+    params = {
+        "embed": M.embedding_init(ke, cfg.vocab_size, cfg.d_model),
+        "groups": groups,
+        "final_norm": M.norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = M.linear_init(kh, cfg.d_model, cfg.vocab_size,
+                                          stddev=1.0 / math.sqrt(cfg.d_model))
+    return params
+
+
+# --------------------------------------------------------------- forward
+def _layer_apply(p: dict, x: Array, cfg: ArchConfig, mixer: str,
+                 mlp_kind: Optional[str], *, positions: Array,
+                 window: int, chunk_q: int, emit_cache: bool,
+                 cache_len: int = 0) -> Tuple[Array, Array, Optional[dict]]:
+    """Returns (x, aux_loss, cache_or_None)."""
+    h = M.norm_apply(cfg.norm, p["norm1"], x)
+    cache = None
+    if mixer == "attn":
+        b, s, _ = h.shape
+        q, k, v = A.project_qkv(p["attn"], h, cfg, positions=positions)
+        if cfg.sharding_strategy == "tp_attn_batch":
+            # batch-shard the attention inner loop over the model axis
+            # (heads don't divide the mesh — EXPERIMENTS.md §Perf hc-1)
+            q, k, v = A.batch_shard_qkv(q, k, v)
+        out = A.attend_full(q, k, v, causal=True, window=window, chunk_q=chunk_q)
+        out = M.linear_apply(p["attn"]["o"], out.reshape(b, s, -1))
+        if emit_cache:
+            cache = A.cache_from_prefill(k, v, cache_len, window)
+    else:
+        out = S.mamba_apply(p["mamba"], h, cfg)
+        if emit_cache:
+            # prefill emits the final recurrent state for decode continuation
+            cache = _mamba_prefill_cache(p["mamba"], h, cfg)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if mlp_kind is not None:
+        h2 = M.norm_apply(cfg.norm, p["norm2"], x)
+        if mlp_kind == "moe":
+            y, aux = E.moe_apply(p["moe"], h2, cfg.moe, cfg.activation)
+        else:
+            y = F.mlp_apply(p["mlp"], h2, cfg.activation)
+        x = x + y
+    return x, aux, cache
+
+
+def _mamba_prefill_cache(p: dict, h_normed: Array, cfg: ArchConfig) -> dict:
+    """Recompute the final (conv, h) state after a full-sequence pass.
+
+    Cheap relative to the mixer itself: one extra pass over the projections
+    for the last few tokens plus a state reduction; exactness is tested in
+    tests/test_serving.py.
+    """
+    ssm = cfg.ssm
+    b, s, d = h_normed.shape
+    di = ssm.expand * d
+    xz = M.linear_apply(p["in_proj"], h_normed)
+    x_raw, _ = jnp.split(xz, 2, axis=-1)
+    conv_hist = x_raw[:, -(ssm.d_conv - 1):].astype(jnp.float32)
+    xc = jax.nn.silu(S._causal_conv(x_raw, p["conv_w"], p["conv_b"]))
+    decay, inp, _ = S._ssm_inputs(p, xc, ssm, d)
+    # final state = sum_t (prod_{u>t} decay_u) inp_t — do it as a scan over
+    # chunks to bound memory (same trick as the forward pass).
+    h0 = jnp.zeros((b, di, ssm.d_state), jnp.float32)
+    chunk = 256
+    if s > chunk and s % chunk == 0:
+        nc = s // chunk
+        dch = decay.reshape(b, nc, chunk, di, ssm.d_state).transpose(1, 0, 2, 3, 4)
+        ich = inp.reshape(b, nc, chunk, di, ssm.d_state).transpose(1, 0, 2, 3, 4)
+
+        def step(hc, xs):
+            dc, ic = xs
+            _, h_last = S._scan_chunk(hc, dc, ic)
+            return h_last, ()
+
+        h_final, _ = jax.lax.scan(step, h0, (dch, ich))
+    else:
+        _, h_final = S._scan_chunk(h0, decay, inp)
+    return {"conv": conv_hist, "h": h_final}
+
+
+def _group_apply(gp: dict, x: Array, cfg: ArchConfig, *, positions: Array,
+                 window: int, chunk_q: int, emit_cache: bool,
+                 cache_len: int = 0) -> Tuple[Array, Array, Optional[dict]]:
+    specs = layer_specs(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+    for i, (mx, mk) in enumerate(specs):
+        x, aux, cache = _layer_apply(
+            gp[f"l{i}"], x, cfg, mx, mk, positions=positions,
+            window=window, chunk_q=chunk_q, emit_cache=emit_cache,
+            cache_len=cache_len)
+        aux_total = aux_total + aux
+        if emit_cache:
+            caches[f"l{i}"] = cache if cache is not None else {}
+    return x, aux_total, (caches if emit_cache else None)
+
+
+def _embed_inputs(params: dict, cfg: ArchConfig, tokens: Array,
+                  prefix_embeds: Optional[Array]) -> Tuple[Array, int]:
+    x = M.embedding_apply(params["embed"], tokens)
+    n_prefix = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        n_prefix = prefix_embeds.shape[1]
+    if cfg.rope == "none":  # absolute sinusoid (whisper-style decoder)
+        x = x + M.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    return x, n_prefix
+
+
+def apply_lm(params: dict, cfg: ArchConfig, tokens: Array, *,
+             prefix_embeds: Optional[Array] = None, train: bool = False,
+             window: int = 0, chunk_q: int = 1024,
+             logits_tail: int = 0, return_hidden: bool = False,
+             boundary_spec=None) -> Tuple[Array, Array]:
+    """Full-sequence forward.
+
+    Returns ``(logits, aux_loss)`` — or ``(hidden, aux_loss)`` after the
+    final norm when ``return_hidden`` (the chunked loss does its own
+    readout).  ``logits_tail > 0`` restricts the readout to the last
+    positions (prefill wants 1; training wants 0 = all).
+
+    ``boundary_spec``: optional PartitionSpec for the rematerialisation
+    boundaries (the scan carry).  Sharding the saved residual stream over
+    the model axis (ZeRO-R partitioned activations) trades one all-gather
+    per group for n_groups× less activation memory — load-bearing for the
+    deep/ssm archs on 16 GB chips (EXPERIMENTS.md §Perf).
+    """
+    x, _ = _embed_inputs(params, cfg, tokens, prefix_embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, gp):
+        x, aux = carry
+        x, aux_g, _ = _group_apply(gp, x, cfg, positions=positions,
+                                   window=window, chunk_q=chunk_q,
+                                   emit_cache=False)
+        if boundary_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, boundary_spec)
+        return (x, aux + aux_g), ()
+
+    scan_body = body
+    if train:
+        scan_body = jax.checkpoint(body)  # remat each superblock
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                               params["groups"])
+    x = M.norm_apply(cfg.norm, params["final_norm"], x)
+    if return_hidden:
+        return x, aux
+    if logits_tail:
+        x = x[:, -logits_tail:]
+    logits = _readout(params, cfg, x)
+    return logits, aux
+
+
+def _readout(params: dict, cfg: ArchConfig, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        return M.embedding_attend(params["embed"], x)
+    return M.linear_apply(params["lm_head"], x)
+
+
+# ------------------------------------------------------------------ loss
+def _readout_params(params: dict, cfg: ArchConfig) -> Tuple[dict, bool]:
+    if cfg.tie_embeddings:
+        return {"embed": params["embed"]}, True
+    return {"lm_head": params["lm_head"]}, False
+
+
+def lm_loss(params: dict, cfg: ArchConfig, batch: Dict[str, Array], *,
+            window: int = 0, chunk_q: int = 1024,
+            xent_chunk: int = 4096, boundary_spec=None) -> Array:
+    """Next-token cross entropy (+ MoE aux), chunk-rematerialised readout.
+
+    batch: tokens, labels, optional prefix_embeds, optional loss_mask."""
+    from repro.models.losses import chunked_xent
+    x, aux = apply_lm(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"), train=True,
+        window=window, chunk_q=chunk_q, return_hidden=True,
+        boundary_spec=boundary_spec)
+    labels = batch["labels"]
+    n_prefix = x.shape[1] - labels.shape[1]
+    if n_prefix > 0:
+        x = x[:, n_prefix:]
+    rp, tied = _readout_params(params, cfg)
+    loss = chunked_xent(x, labels, rp, tied=tied,
+                        mask=batch.get("loss_mask"), chunk=xent_chunk)
+    return loss + aux
+
+
+# ----------------------------------------------------------------- caches
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+               window: int = 0) -> PyTree:
+    """Stacked per-group cache pytree (leading axis = n_groups)."""
+    specs = layer_specs(cfg)
+    length = window if window else cache_len
+
+    def one_group():
+        c = {}
+        for i, (mx, _) in enumerate(specs):
+            if mx == "attn":
+                c[f"l{i}"] = A.init_kv_cache(batch, length, cfg.n_kv_heads,
+                                             cfg.resolved_head_dim)
+            else:
+                c[f"l{i}"] = S.init_mamba_cache(batch, cfg)
+        return c
+
+    ng = n_groups(cfg)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[one_group() for _ in range(ng)])
+
+
+def prefill(params: dict, cfg: ArchConfig, tokens: Array, *,
+            prefix_embeds: Optional[Array] = None, window: int = 0,
+            chunk_q: int = 1024, cache_len: int = 0) -> Tuple[Array, PyTree]:
+    """Process the prompt; return (last-token logits (B, vocab), cache).
+
+    ``cache_len``: total cache capacity (prompt + future decode steps);
+    defaults to prompt length + 64.
+    """
+    x, _ = _embed_inputs(params, cfg, tokens, prefix_embeds)
+    b, s, _ = x.shape
+    if not cache_len:
+        cache_len = s + 64
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, gp):
+        x, _, cache = _group_apply(gp, x, cfg, positions=positions,
+                                   window=window, chunk_q=chunk_q,
+                                   emit_cache=True, cache_len=cache_len)
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, params["groups"])
+    x = M.norm_apply(cfg.norm, params["final_norm"], x[:, -1:])
+    return _readout(params, cfg, x)[:, 0], caches
+
+
+def decode_step(params: dict, cfg: ArchConfig, token: Array, cache: PyTree,
+                pos: Array, *, window: int = 0,
+                seq_chunks: int = 1) -> Tuple[Array, PyTree]:
+    """One decode step.  token: (B,) int32; pos: scalar int32 (absolute).
+
+    Returns (logits (B, vocab), updated cache).
+    """
+    x = M.embedding_apply(params["embed"], token[:, None])
+    if cfg.rope == "none":
+        # sinusoid for the current absolute position
+        d = cfg.d_model
+        dim = jnp.arange(d // 2, dtype=jnp.float32)
+        inv = jnp.exp(-math.log(10000.0) * 2.0 * dim / d)
+        ang = pos.astype(jnp.float32) * inv
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        x = x + pe.astype(x.dtype)
+    specs = layer_specs(cfg)
+
+    def body(x, xs):
+        gp, gc = xs
+        new_c = {}
+        for i, (mx, mk) in enumerate(specs):
+            lp, lc = gp[f"l{i}"], gc[f"l{i}"]
+            h = M.norm_apply(cfg.norm, lp["norm1"], x)
+            if mx == "attn":
+                out, new_c[f"l{i}"] = A.attend_cached(lp["attn"], h, lc, pos,
+                                                      cfg, window=window,
+                                                      seq_chunks=seq_chunks)
+            else:
+                out, new_c[f"l{i}"] = S.mamba_step(lp["mamba"], h, lc, cfg)
+            x = x + out
+            if mk is not None:
+                h2 = M.norm_apply(cfg.norm, lp["norm2"], x)
+                if mk == "moe":
+                    y, _ = E.moe_apply(lp["moe"], h2, cfg.moe, cfg.activation)
+                else:
+                    y = F.mlp_apply(lp["mlp"], h2, cfg.activation)
+                x = x + y
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["groups"], cache))
+    x = M.norm_apply(cfg.norm, params["final_norm"], x)
+    return _readout(params, cfg, x)[:, 0], new_cache

@@ -1,0 +1,8 @@
+"""Optimizers (hand-rolled; optax is not available in this container)."""
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine  # noqa: F401

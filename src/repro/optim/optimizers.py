@@ -1,0 +1,107 @@
+"""SGD(+momentum) and AdamW over parameter pytrees.
+
+API mirrors optax minimally: ``init(params) -> state``;
+``update(grads, state, params, lr) -> (new_params, new_state)``.
+The paper's Fig 3 experiment uses SGD momentum 0.9 lr 0.1 — reproduced in
+benchmarks/accuracy.py with these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree            # first moment / momentum
+    nu: Optional[PyTree]  # second moment (adam only)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[..., tuple]
+
+
+def _zeros_like_f32(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = _zeros_like_f32(params) if momentum else None
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state, params, lr):
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if momentum:
+                m = momentum * m + g
+                step_dir = (g + momentum * m) if nesterov else m
+            else:
+                step_dir = g
+            new_p = p.astype(jnp.float32) - lr * step_dir
+            return new_p.astype(p.dtype), (m if momentum else None)
+
+        if momentum:
+            out = jax.tree.map(upd, params, grads, state.mu)
+            new_params = jax.tree.map(lambda _, o: o[0], params, out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+            new_mu = jax.tree.map(lambda _, o: o[1], params, out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            new_params = jax.tree.map(
+                lambda p, g: upd(p, g, None)[0], params, grads)
+            new_mu = None
+        return new_params, OptState(state.step + 1, new_mu, None)
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        _zeros_like_f32(params), _zeros_like_f32(params))
+
+    def update(grads, state, params, lr):
+        t = state.step + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            step_dir = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step_dir = step_dir + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step_dir
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        is_l = lambda x: isinstance(x, tuple)  # noqa: E731
+        new_params = jax.tree.map(lambda _, o: o[0], params, out, is_leaf=is_l)
+        new_mu = jax.tree.map(lambda _, o: o[1], params, out, is_leaf=is_l)
+        new_nu = jax.tree.map(lambda _, o: o[2], params, out, is_leaf=is_l)
+        return new_params, OptState(t, new_mu, new_nu)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise KeyError(f"unknown optimizer {name!r}")

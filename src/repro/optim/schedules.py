@@ -1,0 +1,27 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    decay = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.float32(lr) * s / max(warmup, 1)
+        return jnp.where(s < warmup, warm, decay(step - warmup))
+    return fn

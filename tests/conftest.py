@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# strictly dryrun.py-local).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

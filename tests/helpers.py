@@ -1,0 +1,10 @@
+"""Shared test fixtures: reduced configs for every family."""
+from __future__ import annotations
+
+from repro.configs import ARCH_NAMES, get_config
+
+REDUCED = {name: get_config(name).reduced() for name in ARCH_NAMES}
+
+
+def reduced_cfg(name: str):
+    return REDUCED[name]

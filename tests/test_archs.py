@@ -1,0 +1,89 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned architecture, as a REDUCED same-family variant (2 layers,
+d_model<=256, <=4 experts), runs one forward and one robust train step on
+CPU; output shapes and finiteness are asserted.  The FULL configs are
+exercised by launch/dryrun.py (lowering only).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, RobustConfig, get_config
+from repro import models as MD
+from repro.dist import make_train_step, split_workers
+from repro.data import lm_batches
+from repro.optim import sgd, constant
+
+from helpers import reduced_cfg
+
+KEY = jax.random.key(0)
+SEQ, BATCH = 32, 2
+
+
+def _batch_for(cfg, kind, batch, seq):
+    return MD.make_batch(cfg, kind, batch, seq, key=KEY)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_full_config_values(name):
+    cfg = get_config(name)
+    assert cfg.name == name
+    assert cfg.param_count() > 0
+    assert cfg.source
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name):
+    cfg = reduced_cfg(name)
+    params = MD.init_model(KEY, cfg)
+    b = _batch_for(cfg, "prefill", BATCH, SEQ)
+    logits = MD.forward_fn(params, cfg, b, chunk_q=16, logits_tail=1)
+    assert logits.shape[0] == BATCH and logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_loss_and_grad_finite(name):
+    cfg = reduced_cfg(name)
+    params = MD.init_model(KEY, cfg)
+    b = _batch_for(cfg, "train", BATCH, SEQ)
+    loss, grads = jax.value_and_grad(
+        lambda p: MD.loss_fn(p, cfg, b, chunk_q=16))(params)
+    assert bool(jnp.isfinite(loss))
+    assert loss > 0
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_one_robust_train_step(name):
+    cfg = reduced_cfg(name)
+    n, f = 11, 2
+    rcfg = RobustConfig(n_workers=n, f=f, gar="multi_bulyan")
+    params = MD.init_model(KEY, cfg)
+    opt = sgd(momentum=0.9)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.01), chunk_q=16))
+    batch = _batch_for(cfg, "train", n * BATCH, SEQ)
+    wb = split_workers(batch, n)
+    new_params, new_state, metrics = step(params, state, wb, KEY)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert metrics["loss_per_worker"].shape == (n,)
+    assert int(new_state.step) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params)))
+    assert moved
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_count_analytic_matches_actual(name):
+    """ArchConfig.param_count() (used for roofline MODEL_FLOPS) must match
+    the materialised reduced model exactly."""
+    cfg = reduced_cfg(name)
+    params = MD.init_model(KEY, cfg)
+    actual = sum(x.size for x in jax.tree.leaves(params))
+    assert actual == cfg.param_count(), (actual, cfg.param_count())

@@ -1,0 +1,66 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import coord_select_ref, pairwise_sqdist_ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("n", [3, 8, 11, 16, 33])
+@pytest.mark.parametrize("d", [1, 100, 257, 2048, 5000])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_pairwise_sqdist_sweep(n, d, dtype):
+    x = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32)).astype(dtype)
+    got = ops.pairwise_sqdist(x)
+    want = pairwise_sqdist_ref(x)
+    assert got.shape == (n, n)
+    assert got.dtype == jnp.float32
+    scale = max(float(jnp.max(want)), 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-5 * scale)
+    assert np.all(np.diag(np.asarray(got)) == 0.0)
+
+
+@pytest.mark.parametrize("d_tile", [128, 512, 2048])
+def test_pairwise_sqdist_tile_invariance(d_tile):
+    x = jnp.asarray(RNG.normal(size=(9, 3000)).astype(np.float32))
+    got = ops.pairwise_sqdist(x, d_tile=d_tile)
+    want = pairwise_sqdist_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("theta,beta", [(5, 1), (8, 2), (16, 4), (30, 10),
+                                        (7, 7)])
+@pytest.mark.parametrize("d", [1, 64, 1000, 2049])
+def test_coord_select_sweep(theta, beta, d):
+    ge = jnp.asarray(RNG.normal(size=(theta, d)).astype(np.float32))
+    ga = jnp.asarray(RNG.normal(size=(theta, d)).astype(np.float32))
+    got = ops.coord_select(ge, ga, beta)
+    want = coord_select_ref(ge, ga, beta)
+    assert got.shape == (d,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-5)
+
+
+def test_coord_select_ties():
+    """Equal distances must break ties by row index (matches oracle)."""
+    theta, d = 6, 10
+    ge = jnp.zeros((theta, d), jnp.float32)
+    ga = jnp.ones((theta, d), jnp.float32)      # all equidistant from median 0
+    got = ops.coord_select(ge, ga, 3)
+    want = coord_select_ref(ge, ga, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_coord_select_beta_equals_theta_is_mean():
+    theta, d = 9, 33
+    ge = jnp.asarray(RNG.normal(size=(theta, d)).astype(np.float32))
+    ga = jnp.asarray(RNG.normal(size=(theta, d)).astype(np.float32))
+    got = ops.coord_select(ge, ga, theta)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.mean(ga, axis=0)),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,123 @@
+"""Serving-path correctness: prefill + decode ≡ full forward, per family."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import models as MD
+from repro.dist.serving import generate
+
+from helpers import reduced_cfg
+
+KEY = jax.random.key(0)
+SEQ, BATCH = 16, 2
+# decode-vs-forward tolerance: bf16 cache roundtrip + differing summation
+# order (mamba associative vs sequential scan) — relative to logit scale ~5
+TOL = 5e-2
+
+
+def _extended(cfg, b, new_tok):
+    b2 = dict(b)
+    b2["tokens"] = jnp.concatenate([b["tokens"], new_tok[:, None]], axis=1)
+    return b2
+
+
+@pytest.mark.parametrize("name", ["nemotron-4-15b", "qwen2-1.5b",
+                                  "chatglm3-6b", "qwen3-moe-30b-a3b",
+                                  "falcon-mamba-7b", "jamba-1.5-large-398b",
+                                  "internvl2-1b", "whisper-tiny"])
+@pytest.mark.parametrize("window", [0, 8])
+def test_prefill_decode_matches_forward(name, window):
+    cfg = reduced_cfg(name)
+    if window and cfg.family in ("ssm",):
+        pytest.skip("window is attention-only")
+    params = MD.init_model(KEY, cfg)
+    b = MD.make_batch(cfg, "prefill", BATCH, SEQ, key=KEY)
+    last, cache = MD.prefill_fn(params, cfg, b, chunk_q=SEQ, window=window)
+    full = MD.forward_fn(params, cfg, b, chunk_q=SEQ, logits_tail=1,
+                         window=window)[:, -1]
+    np.testing.assert_allclose(np.asarray(last, np.float32),
+                               np.asarray(full, np.float32), atol=TOL, rtol=0)
+    # two decode steps against growing forward
+    pos = SEQ
+    cur = b
+    for step in range(2):
+        tok = jax.random.randint(jax.random.fold_in(KEY, step), (BATCH,), 0,
+                                 cfg.vocab_size)
+        cur = _extended(cfg, cur, tok)
+        want = MD.forward_fn(params, cfg, cur, chunk_q=1, logits_tail=1,
+                             window=window)[:, -1]
+        got, cache = MD.decode_fn(params, cfg, tok, cache,
+                                  jnp.int32(pos + step), window=window)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=TOL, rtol=0)
+
+
+def test_ring_buffer_matches_full_under_window():
+    """Sliding-window ring cache == recomputing windowed attention fully,
+    beyond the wrap-around point."""
+    cfg = reduced_cfg("qwen2.5-32b")
+    params = MD.init_model(KEY, cfg)
+    W = 8
+    b = MD.make_batch(cfg, "prefill", 1, 12, key=KEY)
+    _, cache = MD.prefill_fn(params, cfg, b, chunk_q=12, window=W)
+    cur = b
+    for step in range(6):  # crosses the ring wrap at pos >= W
+        tok = jax.random.randint(jax.random.fold_in(KEY, 100 + step), (1,), 0,
+                                 cfg.vocab_size)
+        cur = _extended(cfg, cur, tok)
+        want = MD.forward_fn(params, cfg, cur, chunk_q=1, logits_tail=1,
+                             window=W)[:, -1]
+        got, cache = MD.decode_fn(params, cfg, tok, cache,
+                                  jnp.int32(12 + step), window=W)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=TOL, rtol=0)
+
+
+@pytest.mark.parametrize("name", ["chatglm3-6b", "falcon-mamba-7b",
+                                  "whisper-tiny", "internvl2-1b"])
+def test_generate_shapes(name):
+    cfg = reduced_cfg(name)
+    params = MD.init_model(KEY, cfg)
+    prompt = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size, jnp.int32)
+    extra = {}
+    if cfg.is_encdec:
+        extra["frames"] = jax.random.normal(
+            KEY, (2, cfg.n_frames, cfg.d_model), dtype=jnp.bfloat16)
+    if cfg.n_patches:
+        extra["prefix_embeds"] = jax.random.normal(
+            KEY, (2, cfg.n_patches, cfg.d_model), dtype=jnp.bfloat16)
+    out = generate(params, cfg, prompt, 5, chunk_q=8,
+                   extra_batch=extra or None)
+    assert out.shape == (2, 5)
+    assert out.dtype == jnp.int32
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+
+
+@pytest.mark.parametrize("name", ["chatglm3-6b", "qwen2-1.5b",
+                                  "jamba-1.5-large-398b", "whisper-tiny"])
+@pytest.mark.parametrize("chunks", [2, 4])
+def test_chunked_decode_attention_exact(name, chunks):
+    """Flash-style chunk-local partial softmax (§Perf #13) must equal the
+    plain full-cache decode path exactly (same fp32 math, reordered)."""
+    cfg = reduced_cfg(name)
+    params = MD.init_model(KEY, cfg)
+    b = MD.make_batch(cfg, "prefill", 2, 16, key=KEY)
+    _, cache = MD.prefill_fn(params, cfg, b, chunk_q=16, cache_len=32)
+    tok = jax.random.randint(jax.random.key(5), (2,), 0, cfg.vocab_size)
+    l1, _ = MD.decode_fn(params, cfg, tok, cache, jnp.int32(16), seq_chunks=1)
+    l2, _ = MD.decode_fn(params, cfg, tok, cache, jnp.int32(16),
+                         seq_chunks=chunks)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), atol=2e-2, rtol=0)
+
+
+def test_greedy_generation_deterministic():
+    cfg = reduced_cfg("qwen2-1.5b")
+    params = MD.init_model(KEY, cfg)
+    prompt = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size, jnp.int32)
+    a = generate(params, cfg, prompt, 6, chunk_q=8)
+    b = generate(params, cfg, prompt, 6, chunk_q=8)
+    assert np.array_equal(np.asarray(a), np.asarray(b))

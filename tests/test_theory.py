@@ -1,0 +1,53 @@
+"""Unit tests for the paper's analytic quantities."""
+import math
+
+import pytest
+
+from repro.core import theory
+
+
+def test_eta_formula():
+    # η(n,f) = sqrt(2 (n - f + (f·m + f²(m+1)) / (n-2f-2))), m = n-f-2
+    n, f = 15, 3
+    m = n - f - 2
+    expect = math.sqrt(2 * (n - f + (f * m + f * f * (m + 1)) / (n - 2 * f - 2)))
+    assert theory.eta(n, f) == pytest.approx(expect)
+
+
+def test_eta_no_byzantine():
+    # f=0: η = sqrt(2n) — pure sampling-noise cone
+    assert theory.eta(10, 0) == pytest.approx(math.sqrt(20))
+
+
+def test_eta_invalid():
+    with pytest.raises(ValueError):
+        theory.eta(8, 3)  # n - 2f - 2 = 0
+
+
+def test_slowdowns():
+    assert theory.multi_krum_slowdown(15, 3) == pytest.approx(10 / 15)
+    assert theory.multi_bulyan_slowdown(15, 3) == pytest.approx(7 / 15)
+    # f << n: slowdown -> 1 (the paper's headline)
+    assert theory.multi_bulyan_slowdown(1000, 3) > 0.99
+
+
+def test_variance_condition_monotone_in_sigma():
+    ok = theory.variance_condition(15, 3, 64, sigma=0.01, g_norm=1.0)
+    bad = theory.variance_condition(15, 3, 64, sigma=10.0, g_norm=1.0)
+    assert ok and not bad
+
+
+def test_min_workers():
+    assert theory.min_workers("multi_bulyan", 3) == 15
+    assert theory.min_workers("multi_krum", 3) == 9
+    assert theory.min_workers("trimmed_mean", 3) == 7
+    assert theory.min_workers("average", 3) == 1
+
+
+def test_empirical_sigma():
+    import numpy as np
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    G = rng.normal(scale=2.0, size=(64, 1000)).astype(np.float32)
+    est = theory.empirical_sigma(jnp.asarray(G))
+    assert est == pytest.approx(2.0, rel=0.1)

@@ -1,0 +1,112 @@
+"""Trainer integration: learning, byzantine defence, streaming equivalence."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig, RobustConfig, SSMConfig, HybridConfig
+from repro.data import lm_batches
+from repro.dist import inject_byzantine, make_train_step, split_workers
+from repro.dist.streaming import make_streaming_train_step
+from repro import models as MD
+from repro.optim import sgd, constant
+
+KEY = jax.random.key(0)
+N, F = 12, 2
+
+DENSE = ArchConfig(name="t-dense", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                   qkv_bias=True)
+HYB = ArchConfig(name="t-hyb", family="hybrid", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                 moe=MoEConfig(n_experts=4, top_k=2, d_expert=32, every=2),
+                 ssm=SSMConfig(dt_rank=8),
+                 hybrid=HybridConfig(period=2, attn_index=1))
+
+
+def _run(cfg, gar, attack, steps=14, lr=0.05, trainer="stacked", scope="block"):
+    rcfg = RobustConfig(n_workers=N, f=F, gar=gar)
+    params = MD.init_model(KEY, cfg)
+    opt = sgd(momentum=0.9)
+    state = opt.init(params)
+    if trainer == "stacked":
+        fn = make_train_step(cfg, rcfg, opt, constant(lr), chunk_q=16,
+                             attack=attack)
+    else:
+        fn = make_streaming_train_step(cfg, rcfg, opt, constant(lr),
+                                       scope=scope, chunk_q=16, attack=attack)
+    step = jax.jit(fn)
+    it = lm_batches(cfg.vocab_size, N * 2, 16, seed=3)
+    losses = []
+    for i in range(steps):
+        b = split_workers(next(it), N)
+        params, state, m = step(params, state, b, jax.random.fold_in(KEY, i))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_loss_decreases_no_attack():
+    losses = _run(DENSE, "multi_bulyan", "none")
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_multibulyan_survives_inf_attack_averaging_does_not():
+    robust = _run(DENSE, "multi_bulyan", "inf")
+    assert np.isfinite(robust[-1]) and robust[-1] < robust[0] + 0.1, robust
+    broken = _run(DENSE, "average", "inf")
+    assert (not np.isfinite(broken[-1])) or broken[-1] > robust[-1] + 0.5, \
+        (broken, robust)
+
+
+def test_krum_family_survives_lie_attack():
+    for gar in ("multi_krum", "multi_bulyan"):
+        losses = _run(DENSE, gar, "little_is_enough")
+        assert np.isfinite(losses[-1]) and losses[-1] < losses[0] + 0.2, \
+            (gar, losses)
+
+
+def test_streaming_global_exact_vs_stacked():
+    rcfg = RobustConfig(n_workers=N, f=F, gar="multi_bulyan")
+    params = MD.init_model(KEY, HYB)
+    opt = sgd(momentum=0.9)
+    state = opt.init(params)
+    b = split_workers(next(lm_batches(HYB.vocab_size, N * 2, 16)), N)
+    p1, _, _ = jax.jit(make_train_step(
+        HYB, rcfg, opt, constant(0.05), chunk_q=16))(params, state, b, KEY)
+    p2, _, _ = jax.jit(make_streaming_train_step(
+        HYB, rcfg, opt, constant(0.05), scope="global", chunk_q=16))(
+            params, state, b, KEY)
+    for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   rtol=0, atol=5e-5)
+
+
+def test_streaming_block_learns_under_attack():
+    losses = _run(DENSE, "multi_bulyan", "sign_flip", trainer="stream",
+                  scope="block")
+    assert np.isfinite(losses[-1]) and losses[-1] < losses[0] + 0.1, losses
+
+
+def test_inject_byzantine_shapes_and_rows():
+    grads = {"w": jnp.ones((N, 3, 4)), "b": jnp.zeros((N, 5))}
+    out = inject_byzantine(grads, F, "sign_flip", KEY)
+    assert jax.tree.map(lambda x: x.shape, out) == \
+        jax.tree.map(lambda x: x.shape, grads)
+    # correct rows untouched
+    np.testing.assert_array_equal(np.asarray(out["w"][F:]),
+                                  np.asarray(grads["w"][F:]))
+    # byzantine rows replaced (negated mean of correct = -1)
+    np.testing.assert_allclose(np.asarray(out["w"][:F]), -1.0)
+
+
+def test_per_worker_losses_reported():
+    rcfg = RobustConfig(n_workers=N, f=F, gar="median")
+    params = MD.init_model(KEY, DENSE)
+    opt = sgd(momentum=0.0)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(DENSE, rcfg, opt, constant(0.01), chunk_q=16))
+    b = split_workers(next(lm_batches(DENSE.vocab_size, N * 2, 16)), N)
+    _, _, m = step(params, state, b, KEY)
+    assert m["loss_per_worker"].shape == (N,)
+    assert float(m["agg_grad_norm"]) > 0
