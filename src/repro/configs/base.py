@@ -278,17 +278,35 @@ class RobustConfig:
 
     n_workers: int = 16
     f: int = 3
-    gar: str = "multi_bulyan"  # average|median|trimmed_mean|krum|multi_krum|bulyan|multi_bulyan
+    gar: str = "multi_bulyan"  # any name registered in repro.core.api
     use_pallas: bool = False   # route pairwise distances / coord select via kernels
 
     def __post_init__(self):
-        if self.gar in ("bulyan", "multi_bulyan"):
-            if self.n_workers < 4 * self.f + 3:
-                raise ValueError(
-                    f"{self.gar} requires n >= 4f+3 (n={self.n_workers}, f={self.f})"
-                )
-        elif self.gar in ("krum", "multi_krum"):
-            if self.n_workers < 2 * self.f + 3:
-                raise ValueError(
-                    f"{self.gar} requires n >= 2f+3 (n={self.n_workers}, f={self.f})"
-                )
+        self.validate()
+
+    def validate(self) -> "RobustConfig":
+        """Enforce the paper's resilience preconditions at construction time.
+
+        Krum-family rules need n >= 2f+3 (Blanchard et al.), Bulyan-family
+        n >= 4f+3 (El-Mhamdi et al.) — checked here against the rule's
+        registered ``min_n`` capability so a bad (n, f, gar) combination
+        fails with a clear error instead of deep inside aggregation.
+        Returns self so call sites can chain (``cfg.validate().gar``).
+        """
+        if self.n_workers <= 0:
+            raise ValueError(f"n_workers must be positive, got {self.n_workers}")
+        if self.f < 0:
+            raise ValueError(f"f must be nonnegative, got {self.f}")
+        if self.f >= self.n_workers:
+            raise ValueError(
+                f"need more workers than byzantine ones "
+                f"(n={self.n_workers}, f={self.f})")
+        # lazy import: repro.core.api depends on jax; configs stay light and
+        # the core package itself imports this module.
+        from repro.core.api import get_aggregator
+        try:
+            rule = get_aggregator(self.gar)
+        except KeyError as e:
+            raise ValueError(e.args[0]) from None
+        rule.validate(self.n_workers, self.f)
+        return self

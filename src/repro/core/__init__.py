@@ -1,4 +1,27 @@
-"""Core: the paper's gradient aggregation rules and byzantine machinery."""
+"""Core: the paper's gradient aggregation rules and byzantine machinery.
+
+The public aggregation surface is the plan/apply ``Aggregator`` registry in
+:mod:`repro.core.api`; ``aggregate``/``tree_aggregate`` are legacy shims.
+"""
+from repro.core.api import (  # noqa: F401
+    AggPlan,
+    AggStats,
+    Aggregator,
+    ClipByNorm,
+    NearestNeighborMix,
+    REGISTRY,
+    TRANSFORMS,
+    Transform,
+    WorkerMomentum,
+    aggregate_matrix,
+    aggregate_tree,
+    apply_transforms,
+    available_gars,
+    compute_stats,
+    get_aggregator,
+    init_transform_states,
+    register_gar,
+)
 from repro.core.gar import (  # noqa: F401
     GARS,
     aggregate,

@@ -1,0 +1,597 @@
+"""Plan/apply aggregation API — the public seam of the whole system.
+
+The paper's O(d) claim for multi-Bulyan rests on a structural split that this
+module promotes to the public API (DESIGN.md §3):
+
+* ``plan(stats)``  — runs on the replicated ``(n, n)`` squared-distance
+  matrix / per-worker norms only.  O(n²·θ·log n) scalar work, no touch of
+  the d axis, returns *static-shape* weight matrices.
+* ``apply(plan, grads)`` — sharding-preserving per-leaf einsums plus the
+  purely coordinate-local phase over the d axis.  No communication on the
+  model axis.
+
+Every GAR is an :class:`Aggregator` registered via :func:`register_gar` with
+capability flags (``needs_dists``, ``coordinate_local``, ``min_n``).  The
+legacy entry points ``core.gar.aggregate`` and ``core.robust.tree_aggregate``
+are thin shims over this registry (bitwise-identical outputs — tested in
+``tests/test_agg_api.py``).
+
+A composable pre-aggregation :class:`Transform` stage runs on the stacked
+gradients *before* the GAR sees them — worker momentum (Farhadkhani et al.
+2022), per-worker clipping, nearest-neighbour mixing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gar as G
+
+Array = jax.Array
+PyTree = Any
+
+
+# ==========================================================================
+# statistics (the plan's only input)
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class AggStats:
+    """Replicated per-round statistics the selection plan is computed from.
+
+    ``dists`` is the global (n, n) squared-distance matrix (fp32), present
+    only when the rule's ``needs_dists`` flag is set; ``sq_norms`` the per
+    worker squared l2 norms.  Both are O(n²) scalars — tiny next to d.
+    """
+
+    n: int
+    f: int
+    dists: Optional[Array] = None
+    sq_norms: Optional[Array] = None
+
+
+def leaf_sqdist_contrib(leaf: Array, *, use_pallas: bool = False) -> Array:
+    """One leaf's raw contribution to the global (n, n) distance matrix.
+
+    Contraction over all parameter dims: sharded dims reduce locally + one
+    psum under GSPMD.  Raw (unclamped) so cross-leaf accumulation stays a
+    plain sum; callers finalise with :func:`_finalize_dists`.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.pairwise_sqdist(_leaf2d(leaf))
+    x = leaf.astype(jnp.float32)
+    axes = _param_axes(x)
+    sq = jnp.sum(x * x, axis=axes)
+    # HIGHEST: distances between near-identical honest gradients must not
+    # lose bits to bf16-pass matmuls on TPU — score order decides selection
+    gram = jax.lax.dot_general(
+        x, x, ((axes, axes), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32) if x.ndim == 2 else \
+        jnp.tensordot(x, x, axes=(axes, axes),
+                      precision=jax.lax.Precision.HIGHEST)
+    return sq[:, None] + sq[None, :] - 2.0 * gram
+
+
+def finalize_dists(total: Array) -> Array:
+    """Numerical floor + exact-zero diagonal on an accumulated (n, n) sum."""
+    total = jnp.maximum(total, 0.0)
+    n = total.shape[0]
+    return total * (1.0 - jnp.eye(n, dtype=total.dtype))
+
+
+def tree_pairwise_sqdist(grads: PyTree, *, use_pallas: bool = False) -> Array:
+    """Sum of per-leaf pairwise squared distances -> global (n, n) matrix."""
+    leaves = jax.tree.leaves(grads)
+    if not leaves:
+        raise ValueError("empty gradient pytree")
+    n = leaves[0].shape[0]
+    total = jnp.zeros((n, n), dtype=jnp.float32)
+    for leaf in leaves:
+        total = total + leaf_sqdist_contrib(leaf, use_pallas=use_pallas)
+    return finalize_dists(total)
+
+
+def tree_sq_norms(grads: PyTree) -> Array:
+    """Per-worker squared l2 norms across every leaf -> (n,) fp32."""
+    leaves = jax.tree.leaves(grads)
+    n = leaves[0].shape[0]
+    total = jnp.zeros((n,), dtype=jnp.float32)
+    for leaf in leaves:
+        x = leaf.astype(jnp.float32)
+        total = total + jnp.sum(x * x, axis=_param_axes(x))
+    return total
+
+
+def compute_stats(grads: PyTree, f: int, *, needs_dists: bool = True,
+                  needs_norms: bool = False, use_pallas: bool = False,
+                  dists: Optional[Array] = None) -> AggStats:
+    """Build the :class:`AggStats` a rule's ``plan`` consumes.
+
+    Only what the capability flags ask for is computed — ``average`` pays
+    zero extra collectives, distance rules pay the one (n, n) all-reduce.
+    """
+    leaves = jax.tree.leaves(grads)
+    if not leaves:
+        raise ValueError("empty gradient pytree")
+    n = leaves[0].shape[0]
+    for leaf in leaves:
+        if leaf.shape[0] != n:
+            raise ValueError("all leaves must share the worker axis size")
+    if needs_dists and dists is None:
+        dists = tree_pairwise_sqdist(grads, use_pallas=use_pallas)
+    norms = tree_sq_norms(grads) if needs_norms else None
+    return AggStats(n=n, f=f, dists=dists, sq_norms=norms)
+
+
+# ==========================================================================
+# plans
+# ==========================================================================
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("weights", "w_ext", "w_agr"),
+    meta_fields=("kind", "n", "f", "beta"))
+@dataclasses.dataclass(frozen=True)
+class AggPlan:
+    """Static-shape output of a rule's selection phase.
+
+    ``kind`` picks the apply path:
+    * ``"mean"``       — plain per-leaf mean over the worker axis;
+    * ``"weighted"``   — one (n,) convex weight vector, per-leaf tensordot;
+    * ``"coordinate"`` — no weights; the rule is purely coordinate-local
+      over the raw stack (median / trimmed mean);
+    * ``"bulyan"``     — (θ, n) extraction + aggregate weight matrices and
+      the β count for the coordinate phase.
+
+    Every field is either a static python int/str or an array whose shape
+    depends only on (n, f) — never on d — so plans jit cleanly and replicate
+    for free.
+    """
+
+    kind: str
+    n: int
+    f: int
+    weights: Optional[Array] = None       # (n,) for kind == "weighted"
+    w_ext: Optional[Array] = None         # (theta, n) for kind == "bulyan"
+    w_agr: Optional[Array] = None         # (theta, n) for kind == "bulyan"
+    beta: int = 0
+
+
+# --------------------------------------------------------------- leaf math
+def _leaf2d(x: Array) -> Array:
+    """(n, ...) -> (n, numel) view — Pallas/coord-chunk paths only.
+
+    Under pjit, reshaping a param-dim-sharded leaf is NOT sharding
+    preserving (GSPMD replicates the flattened stack); the default paths
+    operate on the unreshaped leaves via tensordot.
+    """
+    return x.reshape((x.shape[0], -1))
+
+
+def _param_axes(leaf: Array):
+    return tuple(range(1, leaf.ndim))
+
+
+def _weighted_mean_leaf(w: Array, leaf: Array) -> Array:
+    """(n,) weights (summing to 1) applied over the worker axis of a leaf."""
+    x = leaf.astype(jnp.float32)
+    return jnp.tensordot(w, x, axes=(0, 0)).astype(leaf.dtype)
+
+
+def _bulyan_leaf(w_ext: Array, w_agr: Array, beta: int,
+                 leaf: Array, coord_chunk: int = 0,
+                 use_pallas: bool = False) -> Array:
+    """Apply an extraction plan + coordinate phase to one gradient leaf.
+
+    Default path is sharding-preserving: (theta, n) @ (n, ...) tensordots
+    keep the parameter-dim sharding, and the coordinate phase is purely
+    elementwise/axis-0 over (theta, ...).
+    """
+    if use_pallas or coord_chunk:
+        x = _leaf2d(leaf).astype(jnp.float32)      # (n, numel)
+
+        def phase(xc: Array) -> Array:             # (n, c) -> (c,)
+            g_ext = w_ext @ xc                     # (theta, c)
+            g_agr = w_agr @ xc
+            if use_pallas:
+                from repro.kernels import ops as kops
+                return kops.coord_select(g_ext, g_agr, beta)
+            return G.bulyan_coordinate_phase(g_ext, g_agr, beta)
+
+        numel = x.shape[1]
+        if coord_chunk and numel > coord_chunk:
+            pad = (-numel) % coord_chunk
+            xp = jnp.pad(x, ((0, 0), (0, pad)))
+            chunks = xp.reshape(x.shape[0], -1, coord_chunk).transpose(1, 0, 2)
+            out = jax.lax.map(phase, chunks).reshape(-1)[:numel]
+        else:
+            out = phase(x)
+        return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+    x = leaf.astype(jnp.float32)
+    g_ext = jnp.tensordot(w_ext, x, axes=(1, 0))   # (theta, ...)
+    g_agr = jnp.tensordot(w_agr, x, axes=(1, 0))
+    return G.bulyan_coordinate_phase(g_ext, g_agr, beta).astype(leaf.dtype)
+
+
+# ==========================================================================
+# the Aggregator protocol + registry
+# ==========================================================================
+class Aggregator:
+    """Two-phase GAR: ``plan`` on the (n, n) statistics, ``apply`` on d.
+
+    Capability flags (class attributes):
+    * ``needs_dists``       — plan consumes the pairwise-distance matrix;
+    * ``coordinate_local``  — apply never mixes coordinates (shards freely);
+    * ``min_n(f)``          — the paper's resilience precondition, with its
+      human-readable ``min_n_formula`` for error messages.
+    """
+
+    name: str = ""
+    needs_dists: bool = False
+    coordinate_local: bool = True
+    min_n_formula: str = "1"
+
+    @staticmethod
+    def min_n(f: int) -> int:
+        return 1
+
+    # ------------------------------------------------------------- phases
+    def validate(self, n: int, f: int) -> None:
+        if n < self.min_n(f):
+            raise ValueError(
+                f"{self.name} requires n >= {self.min_n_formula} "
+                f"(n={n}, f={f}, need n >= {self.min_n(f)})")
+
+    def plan(self, stats: AggStats) -> AggPlan:
+        raise NotImplementedError
+
+    def apply(self, plan: AggPlan, grads: PyTree, *, coord_chunk: int = 0,
+              use_pallas: bool = False) -> PyTree:
+        """Plan application — shared across rules, dispatched on plan.kind."""
+        if plan.kind == "mean":
+            return jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
+        if plan.kind == "weighted":
+            return jax.tree.map(
+                functools.partial(_weighted_mean_leaf, plan.weights), grads)
+        if plan.kind == "bulyan":
+            fn = functools.partial(_bulyan_leaf, plan.w_ext, plan.w_agr,
+                                   plan.beta, coord_chunk=coord_chunk,
+                                   use_pallas=use_pallas)
+            return jax.tree.map(fn, grads)
+        if plan.kind == "coordinate":
+            return jax.tree.map(
+                functools.partial(self._coordinate_leaf, plan), grads)
+        raise ValueError(f"unknown plan kind {plan.kind!r}")
+
+    def _coordinate_leaf(self, plan: AggPlan, leaf: Array) -> Array:
+        raise NotImplementedError
+
+    # --------------------------------------------------------- convenience
+    def __call__(self, grads: PyTree, f: int, *,
+                 dists: Optional[Array] = None, coord_chunk: int = 0,
+                 use_pallas: bool = False) -> PyTree:
+        stats = compute_stats(grads, f, needs_dists=self.needs_dists,
+                              use_pallas=use_pallas, dists=dists)
+        self.validate(stats.n, stats.f)
+        return self.apply(self.plan(stats), grads, coord_chunk=coord_chunk,
+                          use_pallas=use_pallas)
+
+
+REGISTRY: Dict[str, Aggregator] = {}
+
+
+def register_gar(cls):
+    """Class decorator: instantiate and register a GAR by its ``name``."""
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"{cls.__name__} must set a registry name")
+    if inst.name in REGISTRY:
+        # every consumer dispatches by name; silent replacement of e.g.
+        # multi_bulyan would change results with no indication why
+        raise ValueError(
+            f"GAR {inst.name!r} is already registered "
+            f"({type(REGISTRY[inst.name]).__name__}); pick a distinct name "
+            f"or REGISTRY.pop() the old rule first")
+    REGISTRY[inst.name] = inst
+    return cls
+
+
+def get_aggregator(name: str) -> Aggregator:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown GAR {name!r}; available: {sorted(REGISTRY)}") from None
+
+
+def available_gars() -> Tuple[str, ...]:
+    return tuple(sorted(REGISTRY))
+
+
+# ==========================================================================
+# the seven rules
+# ==========================================================================
+@register_gar
+class Average(Aggregator):
+    """Plain averaging — fastest, non-byzantine-resilient baseline."""
+
+    name = "average"
+
+    def plan(self, stats: AggStats) -> AggPlan:
+        return AggPlan(kind="mean", n=stats.n, f=stats.f)
+
+
+@register_gar
+class CoordinateMedian(Aggregator):
+    """Coordinate-wise median (the MEDIAN baseline of §V)."""
+
+    name = "median"
+
+    def plan(self, stats: AggStats) -> AggPlan:
+        return AggPlan(kind="coordinate", n=stats.n, f=stats.f)
+
+    def _coordinate_leaf(self, plan: AggPlan, leaf: Array) -> Array:
+        return G._median_axis0(leaf.astype(jnp.float32)).astype(leaf.dtype)
+
+
+@register_gar
+class TrimmedMean(Aggregator):
+    """Coordinate-wise trimmed mean: drop the f largest and f smallest."""
+
+    name = "trimmed_mean"
+    min_n_formula = "2f+1"
+
+    @staticmethod
+    def min_n(f: int) -> int:
+        return 2 * f + 1
+
+    def plan(self, stats: AggStats) -> AggPlan:
+        if stats.n <= 2 * stats.f:
+            raise ValueError(
+                f"trimmed_mean needs n > 2f (n={stats.n}, f={stats.f})")
+        return AggPlan(kind="coordinate", n=stats.n, f=stats.f)
+
+    def _coordinate_leaf(self, plan: AggPlan, leaf: Array) -> Array:
+        s = G._sort_by_value(leaf.astype(jnp.float32), axis=0)
+        return jnp.mean(s[plan.f:plan.n - plan.f], axis=0).astype(leaf.dtype)
+
+
+class _KrumFamily(Aggregator):
+    needs_dists = True
+    coordinate_local = False
+    min_n_formula = "2f+3"
+    _m_select: Optional[int] = None       # None -> the paper's m̃ = n-f-2
+
+    @staticmethod
+    def min_n(f: int) -> int:
+        return 2 * f + 3
+
+    def plan(self, stats: AggStats) -> AggPlan:
+        n, f = stats.n, stats.f
+        self.validate(n, f)
+        m = self._m_select if self._m_select is not None else n - f - 2
+        # selection is piecewise-constant in G: the aggregate's gradient
+        # flows through the selected average only, never through the plan
+        scores = jax.lax.stop_gradient(G.krum_scores(stats.dists, f))
+        mask = G._select_smallest_mask(scores, m)
+        w = mask.astype(jnp.float32)
+        return AggPlan(kind="weighted", n=n, f=f, weights=w / jnp.sum(w))
+
+
+@register_gar
+class Krum(_KrumFamily):
+    """Krum (Blanchard et al. 2017): the single best-scored gradient."""
+
+    name = "krum"
+    _m_select = 1
+
+
+@register_gar
+class MultiKrum(_KrumFamily):
+    """MULTI-KRUM (§III): average of the m̃ = n-f-2 best-scored."""
+
+    name = "multi_krum"
+
+
+class _BulyanFamily(Aggregator):
+    needs_dists = True
+    coordinate_local = False
+    min_n_formula = "4f+3"
+    _multi = True
+
+    @staticmethod
+    def min_n(f: int) -> int:
+        return 4 * f + 3
+
+    def plan(self, stats: AggStats) -> AggPlan:
+        n, f = stats.n, stats.f
+        self.validate(n, f)
+        theta = n - 2 * f - 2
+        beta = theta - 2 * f
+        w_ext, w_agr = G.extraction_plan(stats.dists, f, theta,
+                                         multi=self._multi)
+        return AggPlan(kind="bulyan", n=n, f=f, w_ext=w_ext, w_agr=w_agr,
+                       beta=beta)
+
+
+@register_gar
+class Bulyan(_BulyanFamily):
+    """Classic BULYAN: iterated Krum extraction + coordinate phase."""
+
+    name = "bulyan"
+    _multi = False
+
+
+@register_gar
+class MultiBulyan(_BulyanFamily):
+    """MULTI-BULYAN (Algorithm 1): BULYAN over MULTI-KRUM aggregates."""
+
+    name = "multi_bulyan"
+
+
+# ==========================================================================
+# high-level entry points (what the shims delegate to)
+# ==========================================================================
+def aggregate_tree(grads: PyTree, f: int, name: str = "multi_bulyan", *,
+                   coord_chunk: int = 0, use_pallas: bool = False,
+                   dists: Optional[Array] = None) -> PyTree:
+    """Aggregate a stacked gradient pytree with the named registered rule."""
+    agg = get_aggregator(name)
+    stats = compute_stats(grads, f, needs_dists=agg.needs_dists,
+                          use_pallas=use_pallas, dists=dists)
+    agg.validate(stats.n, stats.f)
+    return agg.apply(agg.plan(stats), grads, coord_chunk=coord_chunk,
+                     use_pallas=use_pallas)
+
+
+def aggregate_matrix(Gm: Array, f: int, name: str = "multi_bulyan", *,
+                     dists: Optional[Array] = None) -> Array:
+    """(n, d) stack -> (d,) aggregate: the single-leaf pytree special case."""
+    return aggregate_tree(Gm, f, name, dists=dists)
+
+
+# ==========================================================================
+# pre-aggregation transforms
+# ==========================================================================
+class Transform:
+    """A composable stage rewriting the stacked gradients before the GAR.
+
+    ``stateful`` transforms carry a per-worker state pytree across steps
+    (see :func:`init_transform_states`); ``needs_dists`` ones receive an
+    :class:`AggStats` with the distance matrix of the *current* stack.
+    Signature: ``(grads, stats=None, state=None, key=None) -> (grads, state)``.
+    """
+
+    name: str = ""
+    stateful: bool = False
+    needs_dists: bool = False
+
+    def init(self, grads: PyTree) -> PyTree:
+        raise NotImplementedError(f"{self.name} is stateless")
+
+    def __call__(self, grads: PyTree, *, stats: Optional[AggStats] = None,
+                 state: Optional[PyTree] = None,
+                 key: Optional[Array] = None) -> Tuple[PyTree, PyTree]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ClipByNorm(Transform):
+    """Per-worker l2 clipping: ||g_i|| <= max_norm (static-shape, jit-safe).
+
+    A cheap prefilter against magnitude attacks — the GAR still provides
+    the directional guarantee.
+    """
+
+    max_norm: float = 1.0
+    name: str = "clip"
+
+    def __call__(self, grads, *, stats=None, state=None, key=None):
+        norms = jnp.sqrt(jnp.maximum(tree_sq_norms(grads), 1e-30))   # (n,)
+        scale = jnp.minimum(1.0, self.max_norm / norms)              # (n,)
+
+        def clip_leaf(x):
+            s = scale.reshape((-1,) + (1,) * (x.ndim - 1))
+            return (x.astype(jnp.float32) * s).astype(x.dtype)
+
+        return jax.tree.map(clip_leaf, grads), state
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerMomentum(Transform):
+    """Resilient averaging of momentums (Farhadkhani et al. 2022).
+
+    Each worker's gradient is replaced by its exponential momentum
+    m_i <- β·m_i + g_i before aggregation; the GAR then runs on momentums,
+    which shrinks the honest-worker variance the no-free-lunch bound (§VI)
+    is driven by.
+    """
+
+    beta: float = 0.9
+    name: str = "worker_momentum"
+    stateful: bool = True
+
+    def init(self, grads: PyTree) -> PyTree:
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), grads)
+
+    def __call__(self, grads, *, stats=None, state=None, key=None):
+        if state is None:
+            raise ValueError("worker_momentum needs a state pytree; "
+                             "seed it with init_transform_states()")
+        new = jax.tree.map(
+            lambda m, g: self.beta * m + g.astype(jnp.float32), state, grads)
+        out = jax.tree.map(lambda m, g: m.astype(g.dtype), new, grads)
+        return out, new
+
+
+@dataclasses.dataclass(frozen=True)
+class NearestNeighborMix(Transform):
+    """Replace g_i by the mean of its k nearest neighbours (self included).
+
+    A pre-aggregation smoothing step (NNM, Allouah et al. 2023 style) that
+    provably tightens the variance condition the paper's §VI bound depends
+    on.  Plan-shaped: the (n, n) mixing matrix depends only on distances.
+    """
+
+    k: int = 3
+    name: str = "nn_mix"
+    needs_dists: bool = True
+
+    def __call__(self, grads, *, stats=None, state=None, key=None):
+        if stats is None or stats.dists is None:
+            raise ValueError("nn_mix needs AggStats with the distance matrix")
+        n = stats.n
+        k = min(self.k, n)
+        # rank each row's distances (self-distance 0 ranks first)
+        order = jnp.argsort(stats.dists, axis=1)
+        ranks = jnp.argsort(order, axis=1)
+        W = (ranks < k).astype(jnp.float32) / float(k)        # (n, n)
+        mix = functools.partial(_mix_leaf, W)
+        return jax.tree.map(mix, grads), state
+
+
+def _mix_leaf(W: Array, leaf: Array) -> Array:
+    x = leaf.astype(jnp.float32)
+    return jnp.tensordot(W, x, axes=(1, 0)).astype(leaf.dtype)
+
+
+TRANSFORMS: Dict[str, Callable[..., Transform]] = {
+    "clip": ClipByNorm,
+    "worker_momentum": WorkerMomentum,
+    "nn_mix": NearestNeighborMix,
+}
+
+
+def init_transform_states(transforms: Sequence[Transform],
+                          grads_like: PyTree) -> Tuple[PyTree, ...]:
+    """Initial state tuple (one entry per transform; None when stateless)."""
+    return tuple(t.init(grads_like) if t.stateful else None
+                 for t in transforms)
+
+
+def apply_transforms(grads: PyTree, transforms: Sequence[Transform],
+                     states: Optional[Sequence[PyTree]] = None, *,
+                     key: Optional[Array] = None,
+                     use_pallas: bool = False
+                     ) -> Tuple[PyTree, Tuple[PyTree, ...]]:
+    """Run the transform pipeline; returns (grads, new_states)."""
+    if not transforms:
+        return grads, ()
+    if states is None:
+        states = (None,) * len(transforms)
+    new_states = []
+    f0 = 0  # transforms are rule-agnostic; stats carry distances only
+    for i, (t, st) in enumerate(zip(transforms, states)):
+        stats = None
+        if t.needs_dists:
+            stats = compute_stats(grads, f0, needs_dists=True,
+                                  use_pallas=use_pallas)
+        k = jax.random.fold_in(key, i) if key is not None else None
+        grads, st = t(grads, stats=stats, state=st, key=k)
+        new_states.append(st)
+    return grads, tuple(new_states)

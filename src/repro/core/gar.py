@@ -278,7 +278,13 @@ def multi_bulyan(G: Array, f: int, dists: Optional[Array] = None) -> Array:
 
 
 # --------------------------------------------------------------------------
-# registry
+# legacy registry (deprecation shims over repro.core.api)
+#
+# The raw rule functions above stay as the numerical primitives (and the
+# reference surface for tests/test_gar_semantics.py); dispatch-by-name now
+# lives in the plan/apply Aggregator registry in ``core/api.py``.  GARS and
+# ``aggregate`` are kept so old call sites keep working — ``aggregate``
+# routes through the registry and is bitwise-identical to it.
 # --------------------------------------------------------------------------
 GARS: dict[str, Callable[..., Array]] = {
     "average": average,
@@ -299,5 +305,10 @@ def get_gar(name: str) -> Callable[..., Array]:
 
 
 def aggregate(G: Array, f: int, name: str = "multi_bulyan") -> Array:
-    """Aggregate an (n, d) gradient stack with the named rule."""
-    return get_gar(name)(G, f)
+    """Aggregate an (n, d) gradient stack with the named rule.
+
+    .. deprecated:: use :func:`repro.core.api.aggregate_matrix` / the
+       Aggregator registry (this shim delegates to it).
+    """
+    from repro.core import api  # local import: api imports this module
+    return api.aggregate_matrix(G, f, name)

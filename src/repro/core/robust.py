@@ -1,21 +1,30 @@
-"""Pytree-aware robust aggregation — the GAR applied to model gradients.
+"""Pytree-aware robust aggregation — deprecation shims over ``core.api``.
 
 The trainer hands us a *stacked gradient pytree*: every leaf has a leading
 worker axis ``n`` (sharded over the data/pod mesh axes) while the remaining
 axes carry the parameter sharding (model axis).  We never concatenate the
-gradient into a single (n, d) matrix — instead:
+gradient into a single (n, d) matrix — instead (DESIGN.md §3):
 
 1. the (n, n) squared-distance matrix is accumulated *per leaf* via the gram
    decomposition and summed across leaves (a cross-leaf ``+`` — under GSPMD
    each model shard contributes its local partial, one tiny all-reduce);
 2. the selection logic (Krum scores, Bulyan extraction plan) runs on that
-   replicated (n, n) matrix — O(n²θ) scalar work;
+   replicated (n, n) matrix — O(n²θ) scalar work (``Aggregator.plan``);
 3. the plan is applied leaf-by-leaf as einsums + the coordinate phase, both
-   purely coordinate-local → no communication on the model axis.
+   purely coordinate-local → no communication on the model axis
+   (``Aggregator.apply``).
 
-This realises the paper's O(d) claim in the distributed dimension: robustness
-costs one all-gather of the worker gradients plus O(n²) scalars, on top of
-what plain data-parallel averaging already pays.
+This realises the paper's O(d) claim in the distributed dimension.
+
+The implementation now lives in :mod:`repro.core.api` behind the registered
+plan/apply :class:`~repro.core.api.Aggregator` protocol; ``tree_aggregate``
+and :class:`RobustAggregator` are kept as thin, bitwise-identical shims for
+existing call sites (equivalence is pinned by ``tests/test_agg_api.py``).
+New code should use the registry directly::
+
+    agg = api.get_aggregator("multi_bulyan")
+    plan = agg.plan(api.compute_stats(grads, f))
+    out = agg.apply(plan, grads)
 
 ``coord_chunk``: the Bulyan pipeline momentarily materialises (θ, d) per
 leaf; for billion-parameter models we process coordinates in chunks via
@@ -24,104 +33,19 @@ exercised in EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RobustConfig
-from repro.core import gar as G
+from repro.core import api
+
+# Re-exported so old ``from repro.core.robust import tree_pairwise_sqdist``
+# call sites keep working; the implementation moved to core/api.py.
+tree_pairwise_sqdist = api.tree_pairwise_sqdist
 
 PyTree = Any
-
-
-def _leaf2d(x: jax.Array) -> jax.Array:
-    """(n, ...) -> (n, numel) view.
-
-    Only used on the Pallas/coord-chunk paths.  Under pjit, reshaping a
-    param-dim-sharded leaf to (n, numel) is NOT sharding-preserving (GSPMD
-    replicates the flattened stack — measured at +214 GB/device on
-    qwen2-1.5b, EXPERIMENTS.md §Perf iteration 1); the default paths below
-    therefore operate on the *unreshaped* leaves via tensordot.
-    """
-    return x.reshape((x.shape[0], -1))
-
-
-def _param_axes(leaf: jax.Array):
-    return tuple(range(1, leaf.ndim))
-
-
-def tree_pairwise_sqdist(grads: PyTree, *, use_pallas: bool = False) -> jax.Array:
-    """Sum of per-leaf pairwise squared distances -> global (n, n) matrix.
-
-    Per leaf: contraction over all parameter dims (sharded dims reduce
-    locally + one psum under GSPMD); the cross-leaf sum completes the global
-    squared distance.
-    """
-    leaves = jax.tree.leaves(grads)
-    if not leaves:
-        raise ValueError("empty gradient pytree")
-    n = leaves[0].shape[0]
-    total = jnp.zeros((n, n), dtype=jnp.float32)
-    if use_pallas:
-        from repro.kernels import ops as kops
-        for leaf in leaves:
-            total = total + kops.pairwise_sqdist(_leaf2d(leaf))
-    else:
-        for leaf in leaves:
-            x = leaf.astype(jnp.float32)
-            axes = _param_axes(x)
-            sq = jnp.sum(x * x, axis=axes)
-            gram = jax.lax.dot_general(
-                x, x, (( axes, axes), ((), ())),
-                preferred_element_type=jnp.float32) if x.ndim == 2 else \
-                jnp.tensordot(x, x, axes=(axes, axes))
-            total = total + (sq[:, None] + sq[None, :] - 2.0 * gram)
-    total = jnp.maximum(total, 0.0)
-    return total * (1.0 - jnp.eye(n, dtype=total.dtype))
-
-
-def _weighted_mean_leaf(w: jax.Array, leaf: jax.Array) -> jax.Array:
-    """(n,) weights (summing to 1) applied over the worker axis of a leaf."""
-    x = leaf.astype(jnp.float32)
-    return jnp.tensordot(w, x, axes=(0, 0)).astype(leaf.dtype)
-
-
-def _bulyan_leaf(w_ext: jax.Array, w_agr: jax.Array, beta: int,
-                 leaf: jax.Array, coord_chunk: int = 0,
-                 use_pallas: bool = False) -> jax.Array:
-    """Apply an extraction plan + coordinate phase to one gradient leaf.
-
-    Default path is sharding-preserving: (theta, n) @ (n, ...) tensordots
-    keep the parameter-dim sharding, and the coordinate phase is purely
-    elementwise/axis-0 over (theta, ...).
-    """
-    if use_pallas or coord_chunk:
-        x = _leaf2d(leaf).astype(jnp.float32)      # (n, numel)
-
-        def phase(xc: jax.Array) -> jax.Array:     # (n, c) -> (c,)
-            g_ext = w_ext @ xc                     # (theta, c)
-            g_agr = w_agr @ xc
-            if use_pallas:
-                from repro.kernels import ops as kops
-                return kops.coord_select(g_ext, g_agr, beta)
-            return G.bulyan_coordinate_phase(g_ext, g_agr, beta)
-
-        numel = x.shape[1]
-        if coord_chunk and numel > coord_chunk:
-            pad = (-numel) % coord_chunk
-            xp = jnp.pad(x, ((0, 0), (0, pad)))
-            chunks = xp.reshape(x.shape[0], -1, coord_chunk).transpose(1, 0, 2)
-            out = jax.lax.map(phase, chunks).reshape(-1)[:numel]
-        else:
-            out = phase(x)
-        return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
-
-    x = leaf.astype(jnp.float32)
-    g_ext = jnp.tensordot(w_ext, x, axes=(1, 0))   # (theta, ...)
-    g_agr = jnp.tensordot(w_agr, x, axes=(1, 0))
-    return G.bulyan_coordinate_phase(g_ext, g_agr, beta).astype(leaf.dtype)
 
 
 def tree_aggregate(grads: PyTree, f: int, name: str = "multi_bulyan",
@@ -129,53 +53,11 @@ def tree_aggregate(grads: PyTree, f: int, name: str = "multi_bulyan",
                    dists: Optional[jax.Array] = None) -> PyTree:
     """Aggregate a stacked gradient pytree with the named GAR.
 
-    Returns a pytree of the per-leaf shapes minus the worker axis.
+    .. deprecated:: use :func:`repro.core.api.aggregate_tree` (this shim
+       delegates to it and is bitwise-identical).
     """
-    leaves = jax.tree.leaves(grads)
-    n = leaves[0].shape[0]
-    for leaf in leaves:
-        if leaf.shape[0] != n:
-            raise ValueError("all leaves must share the worker axis size")
-
-    if name == "average":
-        return jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
-    if name == "median":
-        return jax.tree.map(
-            lambda x: G._median_axis0(x.astype(jnp.float32)).astype(x.dtype),
-            grads)
-    if name == "trimmed_mean":
-        if n <= 2 * f:
-            raise ValueError(f"trimmed_mean needs n > 2f (n={n}, f={f})")
-        def tm(x):
-            s = G._sort_by_value(x.astype(jnp.float32), axis=0)
-            return jnp.mean(s[f:n - f], axis=0).astype(x.dtype)
-        return jax.tree.map(tm, grads)
-
-    if dists is None:
-        dists = tree_pairwise_sqdist(grads, use_pallas=use_pallas)
-
-    if name in ("krum", "multi_krum"):
-        m = 1 if name == "krum" else n - f - 2
-        if n < 2 * f + 3:
-            raise ValueError(f"{name} needs n >= 2f+3 (n={n}, f={f})")
-        scores = G.krum_scores(dists, f)
-        mask = G._select_smallest_mask(scores, m)
-        w = mask.astype(jnp.float32)
-        w = w / jnp.sum(w)
-        return jax.tree.map(functools.partial(_weighted_mean_leaf, w), grads)
-
-    if name in ("bulyan", "multi_bulyan"):
-        if n < 4 * f + 3:
-            raise ValueError(f"{name} needs n >= 4f+3 (n={n}, f={f})")
-        theta = n - 2 * f - 2
-        beta = theta - 2 * f
-        w_ext, w_agr = G.extraction_plan(dists, f, theta,
-                                         multi=(name == "multi_bulyan"))
-        fn = functools.partial(_bulyan_leaf, w_ext, w_agr, beta,
-                               coord_chunk=coord_chunk, use_pallas=use_pallas)
-        return jax.tree.map(fn, grads)
-
-    raise KeyError(f"unknown GAR {name!r}")
+    return api.aggregate_tree(grads, f, name, coord_chunk=coord_chunk,
+                              use_pallas=use_pallas, dists=dists)
 
 
 class RobustAggregator:
@@ -183,17 +65,32 @@ class RobustAggregator:
 
     >>> agg = RobustAggregator(RobustConfig(n_workers=16, f=3))
     >>> g = agg(stacked_grads)          # pytree -> pytree
+
+    ``transforms`` (pre-aggregation stages, see ``core.api``) run on the
+    stack before the GAR; stateful ones need ``states=`` threaded by the
+    caller (the trainer does this automatically).
     """
 
-    def __init__(self, cfg: RobustConfig, coord_chunk: int = 0):
+    def __init__(self, cfg: RobustConfig, coord_chunk: int = 0,
+                 transforms: Sequence[api.Transform] = ()):
+        cfg.validate()
         self.cfg = cfg
         self.coord_chunk = coord_chunk
+        self.transforms = tuple(transforms)
+        self.aggregator = api.get_aggregator(cfg.gar)
 
-    def __call__(self, grads: PyTree) -> PyTree:
-        return tree_aggregate(
+    def init_transform_states(self, grads_like: PyTree):
+        return api.init_transform_states(self.transforms, grads_like)
+
+    def __call__(self, grads: PyTree, *, states=None, key=None):
+        grads, new_states = api.apply_transforms(
+            grads, self.transforms, states, key=key,
+            use_pallas=self.cfg.use_pallas)
+        out = api.aggregate_tree(
             grads, self.cfg.f, self.cfg.gar,
             coord_chunk=self.coord_chunk, use_pallas=self.cfg.use_pallas,
         )
+        return (out, new_states) if self.transforms else out
 
     def diagnostics(self, grads: PyTree) -> dict:
         """Variance-condition diagnostics (paper §VI no-free-lunch)."""

@@ -1,0 +1,81 @@
+"""Serving path: batched prefill + token-by-token decode over the KV caches.
+
+``generate`` is the driver-facing entry point (launch/serve.py, examples);
+``make_serve_step`` is the jit-ready single-token step the dry-run lowers on
+the production mesh (the cache length axis model-sharded, chunk-local
+partial-softmax decode attention).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro import models as MD
+
+PyTree = Any
+
+
+def make_serve_step(cfg: ArchConfig, *, window: int = 0,
+                    seq_chunks: int = 1):
+    """One decode step ``(params, cache, token, pos) -> (logits, cache)``."""
+
+    def step(params, cache, token, pos):
+        return MD.decode_fn(params, cfg, token, cache, pos, window=window,
+                            seq_chunks=seq_chunks)
+
+    return step
+
+
+def _select_token(logits: jax.Array, sample: str, key, step: int) -> jax.Array:
+    if sample == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if sample == "categorical":
+        if key is None:
+            raise ValueError("categorical sampling needs a PRNG key")
+        k = jax.random.fold_in(key, step)
+        return jax.random.categorical(
+            k, logits.astype(jnp.float32)).astype(jnp.int32)
+    raise ValueError(f"unknown sample mode {sample!r}")
+
+
+def generate(params: PyTree, cfg: ArchConfig, prompt: jax.Array,
+             new_tokens: int, *, window: int = 0, chunk_q: int = 512,
+             sample: str = "greedy", key=None,
+             extra_batch: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+    """Prefill ``prompt`` (B, S) and decode ``new_tokens`` continuations.
+
+    ``extra_batch`` carries the family-specific inputs: ``frames`` (audio
+    enc-dec) and/or ``prefix_embeds`` (vlm prefix).  Returns (B, new_tokens)
+    int32.  ``window > 0`` serves from the sliding-window ring cache (the
+    long_500k path); otherwise the cache holds prompt + new_tokens exactly.
+    """
+    batch: Dict[str, jax.Array] = {"tokens": prompt}
+    if extra_batch:
+        batch.update(extra_batch)
+
+    # absolute decode positions: vlm prefix embeddings occupy cache slots
+    # before the prompt tokens; the audio encoder memory does not.
+    n_prefix = 0
+    if not cfg.is_encdec and batch.get("prefix_embeds") is not None:
+        n_prefix = batch["prefix_embeds"].shape[1]
+    prompt_total = prompt.shape[1] + n_prefix
+    cache_len = prompt_total + new_tokens
+
+    logits, cache = MD.prefill_fn(params, cfg, batch, window=window,
+                                  chunk_q=chunk_q, cache_len=cache_len)
+
+    decode = jax.jit(lambda p, tok, c, pos: MD.decode_fn(
+        p, cfg, tok, c, pos, window=window))
+
+    out = []
+    for t in range(new_tokens):
+        tok = _select_token(logits, sample, key, t)
+        out.append(tok)
+        if t + 1 < new_tokens:
+            logits, cache = decode(params, tok, cache,
+                                   jnp.int32(prompt_total + t))
+    return jnp.stack(out, axis=1).astype(jnp.int32)

@@ -1,0 +1,161 @@
+"""PartitionSpec heuristics for the production mesh (DESIGN.md §3).
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  The byzantine worker axis of stacked gradients/batches shards
+over pod×data; parameter tensors shard tensor-parallel over ``model``.
+
+Every spec goes through :func:`sanitize_spec` — a sharded dim whose size
+does not divide the mesh axis product is dropped to replicated, so one
+heuristic serves every architecture (40-head qwen2.5, 51865-vocab whisper,
+…) without per-arch tables.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+# the canonical production model-axis width, used when no mesh is given
+# (param_specs(params) in tests / single-host tools)
+DEFAULT_MODEL_AXIS = 16
+
+
+def _axis_sizes(mesh) -> dict:
+    """Axis-name -> size for a Mesh (or anything with a ``.shape`` mapping)."""
+    return dict(mesh.shape)
+
+
+def _entry_size(entry, sizes: dict) -> int:
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    return math.prod(sizes.get(a, 1) for a in axes)
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop sharding on dims the mesh cannot divide evenly.
+
+    >>> sanitize_spec(P(None, "model"), (384, 51865), mesh)  # 51865 % 16 != 0
+    PartitionSpec(None, None)
+    """
+    sizes = _axis_sizes(mesh)
+    out = []
+    for dim, entry in enumerate(tuple(spec)):
+        if entry is None:
+            out.append(None)
+        elif dim < len(shape) and shape[dim] % _entry_size(entry, sizes) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _worker_axes(mesh) -> Any:
+    """Mesh axes carrying the byzantine worker dimension (pod×data)."""
+    if mesh is not None and "pod" in _axis_sizes(mesh):
+        return ("pod", "data")
+    return "data"
+
+
+# ------------------------------------------------------------------ params
+def _tp_leaf_spec(shape, msize: int) -> P:
+    """Megatron-style tensor-parallel spec for one parameter leaf.
+
+    Shard the largest divisible dim on ``model`` (ties -> the last dim, the
+    matmul output dim for the in-projections); vectors stay replicated.
+    """
+    if len(shape) < 2:
+        return P()
+    best: Optional[int] = None
+    for i, s in enumerate(shape):
+        if s % msize == 0 and (best is None or s >= shape[best]):
+            best = i
+    if best is None:
+        return P()
+    return P(*("model" if i == best else None for i in range(len(shape))))
+
+
+def param_specs(params: PyTree, mesh: Optional[Mesh] = None) -> PyTree:
+    """Tensor-parallel PartitionSpec pytree matching ``params``' structure."""
+    msize = _axis_sizes(mesh)["model"] if mesh is not None else DEFAULT_MODEL_AXIS
+    specs = jax.tree.map(lambda x: _tp_leaf_spec(x.shape, msize), params)
+    if mesh is not None:
+        specs = jax.tree.map(
+            lambda x, s: sanitize_spec(s, x.shape, mesh), params, specs)
+    return specs
+
+
+def zero3_param_specs(params: PyTree, mesh: Mesh) -> PyTree:
+    """Fully-sharded (zero-3) specs: largest dim over the whole chip count.
+
+    Batch runs over both axes; weights shard over ``("data", "model")`` on
+    their largest divisible dim and are all-gathered per layer group.
+    """
+    sizes = _axis_sizes(mesh)
+    both = ("data", "model")
+
+    def leaf(x):
+        if x.ndim == 0:
+            return P()
+        best = max(range(x.ndim), key=lambda i: x.shape[i])
+        cand = [both, "model", "data"]
+        for c in cand:
+            spec = P(*(c if i == best else None for i in range(x.ndim)))
+            s = sanitize_spec(spec, x.shape, mesh)
+            if tuple(s)[best] is not None:
+                return s
+        return P()
+
+    del sizes
+    return jax.tree.map(leaf, params)
+
+
+# ----------------------------------------------------------------- batches
+def batch_specs(batch: PyTree, mesh: Mesh, *,
+                worker_stacked: bool = False) -> PyTree:
+    """Input-batch specs: the leading (worker or batch) axis over pod×data."""
+    lead = _worker_axes(mesh)
+
+    def leaf(x):
+        spec = P(*((lead,) + (None,) * (x.ndim - 1)))
+        return sanitize_spec(spec, x.shape, mesh)
+
+    del worker_stacked  # the leading axis shards either way
+    return jax.tree.map(leaf, batch)
+
+
+def grad_stack_specs(params: PyTree, mesh: Mesh) -> PyTree:
+    """Specs for the stacked gradients: (n, *param) = worker axis over
+    pod×data + the leaf's tensor-parallel spec shifted right by one."""
+    lead = _worker_axes(mesh)
+    pspecs = param_specs(params, mesh)
+
+    def leaf(x, s):
+        spec = P(*((lead,) + tuple(s) + (None,) * (x.ndim - len(tuple(s)))))
+        return sanitize_spec(spec, (0,) + x.shape, mesh)
+
+    return jax.tree.map(leaf, params, pspecs,
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+def cache_specs(cache: PyTree, mesh: Mesh, *,
+                shard_batch: bool = True) -> PyTree:
+    """KV/state cache specs: (n_groups, batch, length, ...) leaves.
+
+    Batch over pod×data when it divides; the cache *length* axis (dim 2 of
+    attention KV leaves) over ``model`` — decode attention then runs
+    chunk-local partial softmax per length shard (EXPERIMENTS.md §Perf #13).
+    """
+    lead = _worker_axes(mesh)
+
+    def leaf(x):
+        entries = [None] * x.ndim              # dim 0: the group stack
+        if x.ndim >= 2 and shard_batch:
+            entries[1] = lead
+        if x.ndim >= 4:                        # (ng, b, length, heads, hd)
+            entries[2] = "model"
+        return sanitize_spec(P(*entries), x.shape, mesh)
+
+    return jax.tree.map(leaf, cache)

@@ -1,0 +1,176 @@
+"""Streaming Multi-Bulyan: per-block backward passes, plan reuse (DESIGN.md §5).
+
+The stacked trainer materialises the full n×d gradient stack at once —
+impossible at 398B scale.  The streaming trainer exploits the plan/apply
+split: the *plan* needs only the (n, n) distance matrix, which is a sum of
+per-leaf contributions and can therefore be accumulated block by block
+without ever holding more than one block's worker gradients; the *apply*
+phase is per-leaf anyway.  Two scopes:
+
+* ``scope="global"`` — exact Algorithm 1: pass 1 walks the parameter blocks
+  accumulating the global distance matrix (gradients discarded per block),
+  the plan is computed once, pass 2 re-walks the blocks applying it.  Two
+  backward passes, peak gradient memory n·d/n_blocks, bit-close to the
+  stacked trainer (property-tested in tests/test_trainer.py).
+* ``scope="block"`` — one pass: each block computes its own distances, plan
+  and aggregate.  Half the compute, but selection is per-block (a byzantine
+  worker can win in one block and lose in another) — the robustness
+  guarantee degrades gracefully to per-block resilience.
+
+Blocks are the top-level entries of the parameter pytree (embed / groups /
+final_norm / lm_head for the decoder-only stack).  Per-block gradients are
+taken wrt the block subtree with the rest of the parameters closed over, so
+each value equals the corresponding slice of the full gradient.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RobustConfig
+from repro.core import api
+from repro.dist.trainer import inject_byzantine
+from repro import models as MD
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+def _block_keys(params: PyTree):
+    """Top-level block names in the full tree's leaf order.
+
+    ``jax.tree.leaves`` iterates dict keys sorted, so walking sorted
+    top-level keys and concatenating each subtree's leaves reproduces the
+    global leaf order — which keeps per-leaf attack keys identical to the
+    stacked trainer's.
+    """
+    if not isinstance(params, dict):
+        return None  # degenerate: single block = the whole tree
+    return sorted(params.keys())
+
+
+def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
+                              opt: Optimizer, lr_fn, *,
+                              scope: str = "block", window: int = 0,
+                              chunk_q: int = 1024, attack: str = "none",
+                              coord_chunk: int = 0,
+                              transforms: Sequence[api.Transform] = (),
+                              boundary_spec=None, dx_spec=None):
+    """Build the streaming-trainer step function (same signature as stacked).
+
+    ``dx_spec`` (a PartitionSpec for the per-block stacked gradients) is
+    accepted for the dry-run builder's mesh plumbing; it only matters when
+    lowering on a production mesh.
+    """
+    if scope not in ("block", "global"):
+        raise ValueError(f"scope must be 'block' or 'global', got {scope!r}")
+    if transforms:
+        raise NotImplementedError(
+            "pre-aggregation transforms need the full stack; use the "
+            "stacked trainer (dist.make_train_step) with transforms")
+    del dx_spec
+    rcfg.validate()
+    aggregator = api.get_aggregator(rcfg.gar)
+
+    def worker_loss(p, wb):
+        return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
+                          boundary_spec=boundary_spec)
+
+    def step(params, opt_state, batch, key):
+        block_keys = _block_keys(params)
+
+        def block_grads(p, k, with_loss=False):
+            """Per-worker grads wrt block k of p (others closed over)."""
+            if k is None:
+                vg = jax.value_and_grad(worker_loss)
+                out = jax.vmap(lambda wb: vg(p, wb))(batch)
+                return out if with_loss else out[1]
+
+            def loss_of(bp, wb):
+                q = dict(p)
+                q[k] = bp
+                return worker_loss(q, wb)
+
+            vg = jax.value_and_grad(loss_of)
+            out = jax.vmap(lambda wb: vg(p[k], wb))(batch)
+            return out if with_loss else out[1]
+
+        blocks = [None] if block_keys is None else block_keys
+        # global leaf offsets so attack randomness matches the stacked path
+        offsets, off = {}, 0
+        for k in blocks:
+            sub = params if k is None else params[k]
+            offsets[k] = off
+            off += len(jax.tree.leaves(sub))
+
+        plan = None
+        if scope == "global" and aggregator.needs_dists:
+            # pass 1: accumulate the global (n, n) matrix block by block;
+            # raw per-leaf contributions in global leaf order, finalised
+            # once — the identical float summation the stacked path does.
+            total = jnp.zeros((rcfg.n_workers, rcfg.n_workers), jnp.float32)
+            for k in blocks:
+                g = inject_byzantine(block_grads(params, k), rcfg.f, attack,
+                                     key, leaf_offset=offsets[k])
+                for leaf in jax.tree.leaves(g):
+                    total = total + api.leaf_sqdist_contrib(
+                        leaf, use_pallas=rcfg.use_pallas)
+            stats = api.AggStats(n=rcfg.n_workers, f=rcfg.f,
+                                 dists=api.finalize_dists(total))
+            aggregator.validate(stats.n, stats.f)
+            plan = aggregator.plan(stats)
+            # The barrier is what makes this a *streaming* trainer once
+            # compiled: pass-2 recomputes byte-identical per-block gradient
+            # subgraphs, and without it XLA CSE would dedupe them against
+            # pass 1, keeping every block's gradients live across the plan
+            # computation — silently restoring the n·d peak the two-pass
+            # structure exists to avoid.  Tying params through the barrier
+            # with the plan makes pass 2 depend on pass 1's completion.
+            params, plan = jax.lax.optimization_barrier((params, plan))
+        elif not aggregator.needs_dists:
+            # distance-free rules: the plan is block-independent
+            stats = api.AggStats(n=rcfg.n_workers, f=rcfg.f)
+            aggregator.validate(stats.n, stats.f)
+            plan = aggregator.plan(stats)
+
+        # pass 2 (or the only pass): aggregate block by block; the first
+        # block's value_and_grad also yields the per-worker loss metrics
+        agg_blocks = {}
+        losses = None
+        for k in blocks:
+            if losses is None:
+                losses, g = block_grads(params, k, with_loss=True)
+            else:
+                g = block_grads(params, k)
+            g = inject_byzantine(g, rcfg.f, attack, key,
+                                 leaf_offset=offsets[k])
+            block_plan = plan
+            if block_plan is None:   # scope == "block" with a distance rule
+                stats_k = api.compute_stats(
+                    g, rcfg.f, needs_dists=True, use_pallas=rcfg.use_pallas)
+                aggregator.validate(stats_k.n, stats_k.f)
+                block_plan = aggregator.plan(stats_k)
+            agg_blocks[k] = aggregator.apply(
+                block_plan, g, coord_chunk=coord_chunk,
+                use_pallas=rcfg.use_pallas)
+
+        if block_keys is None:
+            agg = agg_blocks[None]
+        else:
+            agg = {k: agg_blocks[k] for k in block_keys}
+
+        lr = lr_fn(opt_state.step)
+        new_params, new_opt = opt.update(agg, opt_state, params, lr)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(agg)))
+        metrics = {
+            "loss": jnp.mean(losses),
+            "loss_per_worker": losses,
+            "lr": jnp.asarray(lr, jnp.float32),
+            "agg_grad_norm": gnorm,
+        }
+        return new_params, new_opt, metrics
+
+    return step

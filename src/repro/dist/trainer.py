@@ -1,0 +1,178 @@
+"""Stacked byzantine-SGD trainer built on the core plan/apply Aggregator API.
+
+One train step (DESIGN.md §3):
+
+1. forward+backward per worker (``vmap`` over the leading worker axis of the
+   batch) -> stacked gradient pytree, every leaf ``(n, ...)``;
+2. :func:`inject_byzantine` overwrites the first ``f`` worker rows with the
+   selected attack's proposals (gradient-level omniscient adversary);
+3. the optional pre-aggregation transform pipeline (worker momentum,
+   clipping, nearest-neighbour mixing — ``core.api``) rewrites the stack;
+4. ``Aggregator.plan`` on the replicated (n, n) statistics, then
+   ``Aggregator.apply`` leaf-by-leaf (sharding-preserving einsums +
+   coordinate phase);
+5. one optimizer update from the aggregated gradient.
+
+The returned step has signature ``(params, opt_state, batch, key) ->
+(params, opt_state, metrics)``; when a stateful transform is configured the
+state slot instead carries ``(opt_state, transform_states)`` — seed it with
+:func:`init_train_state`.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RobustConfig
+from repro.core import api
+from repro.core import attacks as ATK
+from repro import models as MD
+from repro.optim.optimizers import OptState, Optimizer
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------- data
+def split_workers(batch: PyTree, n_workers: int) -> PyTree:
+    """(global_batch, ...) leaves -> (n_workers, per_worker, ...) leaves."""
+
+    def sp(x):
+        b = x.shape[0]
+        if b % n_workers:
+            raise ValueError(
+                f"global batch {b} not divisible by n_workers={n_workers}")
+        return x.reshape((n_workers, b // n_workers) + x.shape[1:])
+
+    return jax.tree.map(sp, batch)
+
+
+# ------------------------------------------------------------------ attacks
+def _attack_leaf(name: str, leaf: jax.Array, f: int, key) -> jax.Array:
+    """Replace the first f worker rows of one leaf with attack proposals.
+
+    The attack sees the (n-f, numel) stack of *correct* gradients (rows
+    f..n), per the omniscient-adversary convention in ``core/attacks.py``.
+    """
+    correct = leaf[f:]
+    flat = correct.reshape((correct.shape[0], -1)).astype(jnp.float32)
+    byz = ATK.get_attack(name)(flat, f, key)
+    byz = byz.reshape((f,) + leaf.shape[1:]).astype(leaf.dtype)
+    return jnp.concatenate([byz, correct], axis=0)
+
+
+def inject_byzantine(grads: PyTree, f: int, attack: str, key,
+                     *, leaf_offset: int = 0) -> PyTree:
+    """Overwrite the first ``f`` worker rows of every leaf with the attack.
+
+    Per-leaf keys are ``fold_in(key, leaf_offset + leaf_index)`` so that a
+    streaming trainer processing blocks of leaves reproduces the stacked
+    trainer's randomness exactly (``leaf_offset`` = the block's position in
+    the full tree's leaf order).
+    """
+    if f == 0:
+        return grads
+    leaves, treedef = jax.tree.flatten(grads)
+    out = [
+        _attack_leaf(attack, leaf, f,
+                     jax.random.fold_in(key, leaf_offset + i))
+        for i, leaf in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------------------ state packing
+def _split_state(state, stateful: bool) -> Tuple[OptState, Tuple]:
+    if stateful:
+        opt_state, tstates = state
+        return opt_state, tstates
+    return state, ()
+
+
+def _merge_state(opt_state: OptState, tstates: Tuple, stateful: bool):
+    return (opt_state, tstates) if stateful else opt_state
+
+
+def init_train_state(opt: Optimizer, params: PyTree,
+                     transforms: Sequence[api.Transform] = (),
+                     n_workers: int = 0):
+    """Initial trainer state: OptState, or (OptState, transform states).
+
+    Stateful transforms (worker momentum) track one slot per worker — their
+    state mirrors the *stacked* gradient shapes, hence ``n_workers``.
+    """
+    opt_state = opt.init(params)
+    if not any(t.stateful for t in transforms):
+        return opt_state
+    if n_workers <= 0:
+        raise ValueError("stateful transforms need n_workers > 0")
+    stacked = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, p.dtype),
+        params)
+    return opt_state, api.init_transform_states(transforms, stacked)
+
+
+# ------------------------------------------------------------------ trainer
+def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
+                    lr_fn, *, window: int = 0, chunk_q: int = 1024,
+                    attack: str = "none",
+                    transforms: Sequence[api.Transform] = (),
+                    coord_chunk: int = 0,
+                    grad_specs: Optional[PyTree] = None,
+                    boundary_spec=None,
+                    shard_map_mesh=None, shard_map_axes=None):
+    """Build the stacked-trainer step function (jit it yourself).
+
+    ``grad_specs``/``shard_map_mesh``: optional PartitionSpec pytree pinned
+    onto the stacked gradients (the transposed grad-stack layout the
+    production mesh wants); ``boundary_spec`` threads to the model's remat
+    boundaries.  ``shard_map_axes`` names the worker axes (dry-run plumbing).
+    """
+    del shard_map_axes  # recorded by the builder; worker axis comes from specs
+    rcfg.validate()
+    aggregator = api.get_aggregator(rcfg.gar)
+    transforms = tuple(transforms)
+    stateful = any(t.stateful for t in transforms)
+
+    def worker_loss(p, wb):
+        return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
+                          boundary_spec=boundary_spec)
+
+    def step(params, state, batch, key):
+        opt_state, tstates = _split_state(state, stateful)
+        losses, grads = jax.vmap(
+            lambda wb: jax.value_and_grad(worker_loss)(params, wb))(batch)
+        grads = inject_byzantine(grads, rcfg.f, attack, key)
+        if grad_specs is not None and shard_map_mesh is not None:
+            from jax.sharding import NamedSharding
+            grads = jax.lax.with_sharding_constraint(
+                grads, jax.tree.map(
+                    lambda s: NamedSharding(shard_map_mesh, s), grad_specs,
+                    is_leaf=lambda x: not isinstance(x, dict)))
+        # distinct fold for transform randomness: inject_byzantine consumes
+        # fold_in(key, leaf_index), so a keyed transform must not draw from
+        # the same stream as any attack leaf
+        tkey = jax.random.fold_in(key, 2 ** 31 - 1)
+        grads, tstates = api.apply_transforms(
+            grads, transforms, tstates or None, key=tkey,
+            use_pallas=rcfg.use_pallas)
+        stats = api.compute_stats(grads, rcfg.f,
+                                  needs_dists=aggregator.needs_dists,
+                                  use_pallas=rcfg.use_pallas)
+        plan = aggregator.plan(stats)
+        agg = aggregator.apply(plan, grads, coord_chunk=coord_chunk,
+                               use_pallas=rcfg.use_pallas)
+        lr = lr_fn(opt_state.step)
+        new_params, new_opt = opt.update(agg, opt_state, params, lr)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(agg)))
+        metrics = {
+            "loss": jnp.mean(losses),
+            "loss_per_worker": losses,
+            "lr": jnp.asarray(lr, jnp.float32),
+            "agg_grad_norm": gnorm,
+        }
+        return new_params, _merge_state(new_opt, tstates, stateful), metrics
+
+    return step

@@ -1,0 +1,69 @@
+"""Minimal stand-in for the ``hypothesis`` API used by the property tests.
+
+The container does not ship hypothesis and nothing may be pip-installed, so
+this shim implements just the surface ``tests/test_gar_semantics.py`` needs
+(``given``/``settings``/``strategies.{composite,integers,booleans}``) with
+deterministic seeded example generation.  If the real hypothesis is
+available it is used instead (see the import guard in the test module).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+# cap: this shim runs eager jnp per example; keep CI time bounded
+_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mimics the hypothesis module name
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def composite(fn):
+        @functools.wraps(fn)
+        def factory(*args, **kwargs):
+            def draw_fn(rng):
+                draw = lambda strat: strat.example(rng)  # noqa: E731
+                return fn(draw, *args, **kwargs)
+            return _Strategy(draw_fn)
+        return factory
+
+
+def given(*strats):
+    def deco(fn):
+        # deliberately NOT functools.wraps: pytest must see a zero-argument
+        # signature, not the wrapped function's strategy parameters
+        def wrapper():
+            n = min(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES),
+                    _MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng(1000 + i)
+                fn(*[s.example(rng) for s in strats])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

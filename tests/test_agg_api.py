@@ -1,0 +1,216 @@
+"""Plan/apply Aggregator API: shim equivalence, capabilities, transforms.
+
+The acceptance bar for the api_redesign: the deprecated entry points
+(``gar.aggregate``, ``tree_aggregate``, ``RobustAggregator``) must be
+bitwise-identical to the registry path, for all seven GARs.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RobustConfig
+from repro.core import api, gar
+from repro.core.robust import RobustAggregator, tree_aggregate
+
+KEY = jax.random.key(0)
+N, F, D = 15, 3, 48
+RNG = np.random.default_rng(11)
+ALL_GARS = sorted(api.available_gars())
+
+
+def _stack():
+    G = RNG.normal(size=(N, D)).astype(np.float32)
+    G[:F] *= 30.0
+    return jnp.asarray(G)
+
+
+def _tree(G):
+    return {"a": G[:, :20].reshape(N, 4, 5), "b": {"c": G[:, 20:]}}
+
+
+@pytest.mark.parametrize("name", ALL_GARS)
+def test_flat_shim_bitwise_identical(name):
+    G = _stack()
+    old = np.asarray(gar.aggregate(G, F, name))
+    new = np.asarray(api.aggregate_matrix(G, F, name))
+    agg = api.get_aggregator(name)
+    direct = np.asarray(agg(G, F))
+    np.testing.assert_array_equal(old, new)
+    np.testing.assert_array_equal(old, direct)
+
+
+@pytest.mark.parametrize("name", ALL_GARS)
+def test_registry_matches_raw_primitives(name):
+    """Non-circular anchor: the registry path must agree with the raw rule
+    functions in core/gar.py (independent implementations) up to fp
+    reassociation — catches behaviour drift the delegation shims cannot."""
+    G = _stack()
+    raw = np.asarray(gar.GARS[name](G, F))
+    reg = np.asarray(api.aggregate_matrix(G, F, name))
+    scale = max(1.0, np.abs(raw).max())
+    np.testing.assert_allclose(reg, raw, rtol=0, atol=1e-5 * scale)
+
+
+@pytest.mark.parametrize("name", ALL_GARS)
+def test_tree_shim_bitwise_identical(name):
+    tree = _tree(_stack())
+    old = tree_aggregate(tree, F, name)
+    agg = api.get_aggregator(name)
+    stats = api.compute_stats(tree, F, needs_dists=agg.needs_dists)
+    new = agg.apply(agg.plan(stats), tree)
+    for a, b in zip(jax.tree.leaves(old), jax.tree.leaves(new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ALL_GARS)
+def test_robust_aggregator_bitwise_identical(name):
+    tree = _tree(_stack())
+    cfg = RobustConfig(n_workers=N, f=F, gar=name)
+    old = RobustAggregator(cfg)(tree)
+    new = api.aggregate_tree(tree, F, name)
+    for a, b in zip(jax.tree.leaves(old), jax.tree.leaves(new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plan_shapes_are_static_and_d_free():
+    """Plans depend only on (n, f) — never on d (the O(d) split)."""
+    G = _stack()
+    stats = api.compute_stats(G, F, needs_dists=True)
+    assert stats.dists.shape == (N, N)
+    plan = api.get_aggregator("multi_bulyan").plan(stats)
+    theta = N - 2 * F - 2
+    assert plan.kind == "bulyan"
+    assert plan.w_ext.shape == (theta, N)
+    assert plan.w_agr.shape == (theta, N)
+    assert plan.beta == theta - 2 * F
+    kplan = api.get_aggregator("multi_krum").plan(stats)
+    assert kplan.kind == "weighted" and kplan.weights.shape == (N,)
+    np.testing.assert_allclose(float(jnp.sum(kplan.weights)), 1.0, rtol=1e-6)
+
+
+def test_capability_flags():
+    assert not api.get_aggregator("average").needs_dists
+    assert not api.get_aggregator("median").needs_dists
+    assert api.get_aggregator("krum").needs_dists
+    assert api.get_aggregator("multi_bulyan").needs_dists
+    assert api.get_aggregator("median").coordinate_local
+    assert not api.get_aggregator("multi_krum").coordinate_local
+    assert api.get_aggregator("multi_bulyan").min_n(3) == 15
+    assert api.get_aggregator("krum").min_n(3) == 9
+
+
+def test_registry_rejects_unknown_and_validates_min_n():
+    with pytest.raises(KeyError):
+        api.get_aggregator("nope")
+    with pytest.raises(ValueError, match="4f\\+3"):
+        api.aggregate_matrix(jnp.zeros((10, 4)), 2, "multi_bulyan")
+
+
+def test_robust_config_validate():
+    RobustConfig(n_workers=15, f=3, gar="multi_bulyan").validate()
+    with pytest.raises(ValueError, match="4f\\+3"):
+        RobustConfig(n_workers=14, f=3, gar="bulyan")
+    with pytest.raises(ValueError, match="2f\\+3"):
+        RobustConfig(n_workers=8, f=3, gar="krum")
+    with pytest.raises(ValueError, match="unknown GAR"):
+        RobustConfig(n_workers=8, f=1, gar="typo_rule")
+    with pytest.raises(ValueError):
+        RobustConfig(n_workers=4, f=4, gar="average")
+
+
+def test_register_custom_gar_roundtrip():
+    """Adding a rule is one decorated class — the simulator-registry story."""
+
+    @api.register_gar
+    class FirstWorker(api.Aggregator):
+        name = "first_worker_test_only"
+
+        def plan(self, stats):
+            w = jnp.zeros((stats.n,), jnp.float32).at[0].set(1.0)
+            return api.AggPlan(kind="weighted", n=stats.n, f=stats.f,
+                               weights=w)
+
+    try:
+        G = _stack()
+        out = api.aggregate_matrix(G, F, "first_worker_test_only")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(G[0]),
+                                   rtol=1e-6)
+        # and it is immediately usable from a RobustConfig
+        RobustConfig(n_workers=3, f=1, gar="first_worker_test_only")
+    finally:
+        api.REGISTRY.pop("first_worker_test_only")
+
+
+# ------------------------------------------------------------- transforms
+def test_clip_by_norm_bounds_every_worker():
+    G = _stack()
+    out, _ = api.ClipByNorm(max_norm=1.0)(G)
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    assert np.all(norms <= 1.0 + 1e-5)
+    # direction preserved
+    i = N - 1
+    cos = np.dot(np.asarray(out)[i], np.asarray(G)[i]) / (
+        np.linalg.norm(np.asarray(out)[i]) * np.linalg.norm(np.asarray(G)[i]))
+    assert cos > 0.999
+
+
+def test_worker_momentum_accumulates():
+    t = api.WorkerMomentum(beta=0.5)
+    g = {"w": jnp.ones((N, 4))}
+    state = t.init(g)
+    out1, state = t(g, state=state)
+    out2, state = t(g, state=state)
+    np.testing.assert_allclose(np.asarray(out1["w"]), 1.0)
+    np.testing.assert_allclose(np.asarray(out2["w"]), 1.5)
+
+
+def test_nn_mix_pulls_outlier_toward_cloud():
+    G = np.ones((N, D), np.float32) + 0.01 * RNG.normal(size=(N, D)).astype(np.float32)
+    G[0] = 100.0
+    tr = api.NearestNeighborMix(k=3)
+    stats = api.compute_stats(jnp.asarray(G), F, needs_dists=True)
+    out, _ = tr(jnp.asarray(G), stats=stats)
+    # honest workers mix only with honest neighbours (outlier is far)
+    assert np.abs(np.asarray(out)[1:] - 1.0).max() < 0.1
+
+
+def test_transform_pipeline_in_robust_aggregator():
+    cfg = RobustConfig(n_workers=N, f=F, gar="multi_bulyan")
+    agg = RobustAggregator(cfg, transforms=(api.ClipByNorm(max_norm=5.0),))
+    tree = _tree(_stack())
+    out, states = agg(tree)
+    assert states == (None,)
+    for leaf in jax.tree.leaves(out):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_stateful_transform_through_train_step():
+    """Worker momentum threads its state through dist.make_train_step."""
+    from repro.configs.base import ArchConfig
+    from repro.data import lm_batches
+    from repro.dist import init_train_state, make_train_step, split_workers
+    from repro import models as MD
+    from repro.optim import constant, sgd
+
+    cfg = ArchConfig(name="t-mom", family="dense", n_layers=2, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64)
+    rcfg = RobustConfig(n_workers=11, f=2, gar="multi_krum")
+    params = MD.init_model(KEY, cfg)
+    opt = sgd(momentum=0.0)
+    transforms = (api.WorkerMomentum(beta=0.9),)
+    state = init_train_state(opt, params, transforms, n_workers=11)
+    step = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.05),
+                                   chunk_q=8, attack="sign_flip",
+                                   transforms=transforms))
+    it = lm_batches(cfg.vocab_size, 22, 8, seed=5)
+    losses = []
+    for i in range(6):
+        b = split_workers(next(it), 11)
+        params, state, m = step(params, state, b, jax.random.fold_in(KEY, i))
+        losses.append(float(m["loss"]))
+    opt_state, tstates = state
+    assert len(tstates) == 1
+    # momentum state is live (nonzero) and training stays finite
+    assert any(float(jnp.max(jnp.abs(x))) > 0 for x in jax.tree.leaves(tstates[0]))
+    assert np.isfinite(losses[-1])

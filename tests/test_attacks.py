@@ -1,0 +1,78 @@
+"""Attack-library contract + permutation invariance over the Aggregator API.
+
+``core/attacks.py`` promises: an attack maps the (n-f, d) stack of correct
+gradients to (f, d) byzantine proposals, and GARs are permutation-invariant
+(the docstring claims "property-tested" — this is that test, over the new
+plan/apply registry).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, attacks
+
+KEY = jax.random.key(0)
+N, F, D = 15, 3, 40     # n >= 4f+3 so every registered rule is runnable
+RNG = np.random.default_rng(3)
+
+
+@pytest.mark.parametrize("name", sorted(attacks.ATTACKS))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attack_shape_and_dtype(name, dtype):
+    correct = jnp.asarray(RNG.normal(size=(N - F, D)).astype(np.float32),
+                          dtype=dtype)
+    byz = attacks.get_attack(name)(correct, F, KEY)
+    assert byz.shape == (F, D), name
+    stack = attacks.apply_attack(correct, F, name, KEY)
+    assert stack.shape == (N, D)
+    assert stack.dtype == correct.dtype, (name, dtype)
+    # correct rows ride through apply_attack untouched
+    np.testing.assert_array_equal(
+        np.asarray(stack[F:], np.float32), np.asarray(correct, np.float32))
+
+
+def test_attack_f_zero_is_identity():
+    correct = jnp.asarray(RNG.normal(size=(N, D)).astype(np.float32))
+    out = attacks.apply_attack(correct, 0, "inf", KEY)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(correct))
+
+
+def test_unknown_attack_raises():
+    with pytest.raises(KeyError):
+        attacks.get_attack("not_an_attack")
+
+
+@pytest.mark.parametrize("name", sorted(api.available_gars()))
+def test_gar_permutation_invariance_over_registry(name):
+    """Shuffling worker order must not change the aggregate (registry path).
+
+    krum's argmin tie-breaking is by index, so exact invariance needs
+    distinct scores — generic gaussian stacks provide that almost surely.
+    """
+    agg = api.get_aggregator(name)
+    for trial in range(5):
+        rng = np.random.default_rng(trial)
+        G = rng.normal(size=(N, D)).astype(np.float32)
+        G[0] *= 50.0                                  # one outlier row
+        perm = rng.permutation(N)
+        a = np.asarray(agg(jnp.asarray(G), F))
+        b = np.asarray(agg(jnp.asarray(G[perm]), F))
+        scale = max(1.0, np.abs(a).max())
+        np.testing.assert_allclose(a, b, rtol=0, atol=3e-5 * scale,
+                                   err_msg=f"{name} trial {trial}")
+
+
+@pytest.mark.parametrize("name", sorted(api.available_gars()))
+def test_gar_permutation_invariance_under_attack(name):
+    """Same property with byzantine rows present (the setting that matters)."""
+    agg = api.get_aggregator(name)
+    rng = np.random.default_rng(7)
+    correct = (np.ones(D) + 0.1 * rng.normal(size=(N - F, D))).astype(np.float32)
+    stack = np.asarray(attacks.apply_attack(
+        jnp.asarray(correct), F, "little_is_enough", KEY))
+    perm = rng.permutation(N)
+    a = np.asarray(agg(jnp.asarray(stack), F))
+    b = np.asarray(agg(jnp.asarray(stack[perm]), F))
+    scale = max(1.0, np.abs(a).max())
+    np.testing.assert_allclose(a, b, rtol=0, atol=3e-5 * scale, err_msg=name)
