@@ -9,23 +9,47 @@ so absolute times differ — the claims under test are the SHAPES:
 * O(n²) scaling in the number of workers for (MULTI-)KRUM/BULYAN;
 * MEDIAN's advantage shrinks as d grows (the paper's crossover argument).
 
+On top of the paper's grid this times the three apply substrates for
+multi_bulyan — ``[xla]`` (unfused tensordots + coordinate phase),
+``[pallas]`` (materialised einsums + coord_select kernel) and ``[fused]``
+(single fused_select kernel, no (θ, d) HBM intermediates) — and persists
+everything to ``BENCH_agg_time.json`` so later PRs have a perf trajectory
+to diff against (schema: rule -> "n=<n>,d=<d>" -> us_per_call).  On CPU the
+Pallas rows run in interpret mode: their absolute numbers measure the
+schedule, not the hardware — the TPU claim is the HBM-traffic count.
+
 CSV: name,us_per_call,derived
 """
 from __future__ import annotations
 
+import functools
+import json
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import gar
+from repro.core import api, gar
 
 # CPU-sized version of the paper's grid (paper: n up to 39, d up to 1e7)
 NS = (7, 11, 15, 19, 23)
 DS = (100_000, 1_000_000)
 RULES = ("median", "multi_krum", "multi_bulyan")
+# apply-substrate comparison rows (the fused-path trajectory).  Timed on
+# the paper's centre point n=15 only: interpret-mode Pallas costs seconds
+# per call at d=1e6, so the full (n, d) product would dwarf the Fig-2 grid.
+PATHS = (
+    ("multi_bulyan[xla]", dict(use_pallas=False, fused=False)),
+    ("multi_bulyan[pallas]", dict(use_pallas=True, fused=False)),
+    ("multi_bulyan[fused]", dict(use_pallas=True, fused=True)),
+)
+PATH_NS = (15,)
+BENCH_JSON = "BENCH_agg_time.json"
+
+SMOKE_NS = (11,)
+SMOKE_DS = (4096,)
 
 
 def _f_for(n: int) -> int:
@@ -46,33 +70,76 @@ def _timed(fn, *args, reps: int = 7, drop: int = 2) -> Tuple[float, float]:
     return float(keep.mean()), float(keep.std())
 
 
-def run(csv_rows: List[str]) -> Dict[str, Dict[Tuple[int, int], float]]:
+def _path_fn(f: int, **kw):
+    return jax.jit(functools.partial(
+        api.aggregate_tree, f=f, name="multi_bulyan", **kw))
+
+
+def write_json(results: Dict[str, Dict[Tuple[int, int], float]],
+               path: str = BENCH_JSON) -> None:
+    payload = {
+        "schema": "rule -> 'n=<n>,d=<d>' -> us_per_call",
+        "results": {
+            rule: {f"n={n},d={d}": us * 1e6 for (n, d), us in grid.items()}
+            for rule, grid in results.items()
+        },
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+
+
+def run(csv_rows: List[str], *, smoke: bool = False,
+        json_path: str = BENCH_JSON) -> Dict[str, Dict[Tuple[int, int], float]]:
     rng = np.random.default_rng(0)
-    results: Dict[str, Dict[Tuple[int, int], float]] = {r: {} for r in RULES}
+    ns, ds = (SMOKE_NS, SMOKE_DS) if smoke else (NS, DS)
+    path_ns = ns if smoke else PATH_NS
+    reps, drop = (3, 1) if smoke else (7, 2)
+    path_reps, path_drop = (3, 1) if smoke else (5, 1)
+    rows = list(RULES) + [name for name, _ in PATHS]
+    results: Dict[str, Dict[Tuple[int, int], float]] = {r: {} for r in rows}
     jitted = {name: jax.jit(gar.get_gar(name), static_argnames=("f",))
               for name in RULES}
-    for d in DS:
-        for n in NS:
+    for d in ds:
+        for n in ns:
             G = jnp.asarray(rng.uniform(size=(n, d)).astype(np.float32))
             f = _f_for(n)
             for name in RULES:
-                mean, std = _timed(lambda g: jitted[name](g, f=f), G)
+                mean, std = _timed(lambda g: jitted[name](g, f=f), G,
+                                   reps=reps, drop=drop)
                 results[name][(n, d)] = mean
                 csv_rows.append(
                     f"agg_time/{name}/n={n}/d={d},{mean*1e6:.1f},"
                     f"std_us={std*1e6:.1f}")
-    # derived claims
-    for name in RULES:
-        r = results[name]
-        # O(d): time(d=1e6)/time(d=1e5) ≈ 10 for linear scaling (n fixed 15)
-        ratio_d = r[(15, DS[1])] / max(r[(15, DS[0])], 1e-9)
-        csv_rows.append(f"agg_time/{name}/d_scaling_ratio,{ratio_d:.2f},"
-                        f"linear_target=10.0")
-    # crossover: median vs multi_bulyan advantage shrinking with d
-    for d in DS:
-        adv = results["median"][(15, d)] / results["multi_bulyan"][(15, d)]
-        csv_rows.append(f"agg_time/median_over_multibulyan/d={d},{adv:.3f},"
-                        "higher_means_mb_faster")
+            if n not in path_ns:
+                continue
+            for name, kw in PATHS:
+                mean, std = _timed(_path_fn(f, **kw), G,
+                                   reps=path_reps, drop=path_drop)
+                results[name][(n, d)] = mean
+                csv_rows.append(
+                    f"agg_time/{name}/n={n}/d={d},{mean*1e6:.1f},"
+                    f"std_us={std*1e6:.1f}")
+    # derived claims (full grid only — the smoke grid has a single point)
+    if not smoke:
+        for name in RULES:
+            r = results[name]
+            # O(d): time(d=1e6)/time(d=1e5) ≈ 10 for linear scaling (n = 15)
+            ratio_d = r[(15, ds[1])] / max(r[(15, ds[0])], 1e-9)
+            csv_rows.append(f"agg_time/{name}/d_scaling_ratio,{ratio_d:.2f},"
+                            f"linear_target=10.0")
+        # crossover: median vs multi_bulyan advantage shrinking with d
+        for d in ds:
+            adv = results["median"][(15, d)] / results["multi_bulyan"][(15, d)]
+            csv_rows.append(
+                f"agg_time/median_over_multibulyan/d={d},{adv:.3f},"
+                "higher_means_mb_faster")
+        # fusion win: fused vs two-step pallas apply at the largest point
+        big = (max(path_ns), max(ds))
+        speedup = (results["multi_bulyan[pallas]"][big]
+                   / max(results["multi_bulyan[fused]"][big], 1e-9))
+        csv_rows.append(f"agg_time/fused_over_pallas_speedup,{speedup:.2f},"
+                        "interpret_mode_schedule_only")
+    write_json(results, json_path)
     return results
 
 

@@ -3,15 +3,20 @@
 Prints ``name,us_per_call,derived`` CSV rows (value column semantics noted
 per section).  Sections:
 
-* agg_time    — Fig 2: aggregation wall-time vs (n, d), O(d)/O(n²) scaling
+* agg_time    — Fig 2: aggregation wall-time vs (n, d), O(d)/O(n²) scaling,
+                XLA vs Pallas vs fused apply substrates; persists the perf
+                trajectory to BENCH_agg_time.json
 * accuracy    — Fig 3: max top-1 accuracy per GAR × per-worker batch size
 * resilience  — Lemma 1 cone bound, Def-2 leeway scaling, Thm 1/2 slowdown
 * roofline    — §Roofline terms from the dry-run artifacts (if present)
 
 Env: BENCH_SECTIONS=agg_time,accuracy,... to select a subset.
+``--smoke`` shrinks agg_time to a single CI-sized grid point (the JSON is
+still written so the trajectory check has something to validate).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
@@ -19,13 +24,24 @@ from typing import List
 
 
 def main() -> None:
-    sections = os.environ.get(
-        "BENCH_SECTIONS", "agg_time,accuracy,resilience,roofline").split(",")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (agg_time only unless BENCH_SECTIONS "
+                         "says otherwise)")
+    ap.add_argument("--bench-json", default=None,
+                    help="agg_time JSON output path (default "
+                         "BENCH_agg_time.json in the cwd)")
+    args = ap.parse_args()
+
+    default_sections = "agg_time" if args.smoke else \
+        "agg_time,accuracy,resilience,roofline"
+    sections = os.environ.get("BENCH_SECTIONS", default_sections).split(",")
     rows: List[str] = []
     t0 = time.time()
     if "agg_time" in sections:
         from benchmarks import agg_time
-        agg_time.run(rows)
+        kw = {} if args.bench_json is None else {"json_path": args.bench_json}
+        agg_time.run(rows, smoke=args.smoke, **kw)
         print(f"# agg_time done ({time.time()-t0:.0f}s)", file=sys.stderr)
     if "accuracy" in sections:
         from benchmarks import accuracy

@@ -1,0 +1,74 @@
+"""Validate a BENCH_agg_time.json trajectory file (CI gate).
+
+Usage: python -m benchmarks.validate_bench [BENCH_agg_time.json]
+
+Fails (exit 1) when the file is missing, is not JSON, deviates from the
+``rule -> 'n=<n>,d=<d>' -> us_per_call`` schema, or lacks the three apply
+substrate rows (multi_bulyan[xla|pallas|fused]) the perf trajectory exists
+to track.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import sys
+
+REQUIRED_ROWS = ("multi_bulyan[xla]", "multi_bulyan[pallas]",
+                 "multi_bulyan[fused]")
+_KEY_RE = re.compile(r"^n=\d+,d=\d+$")
+
+
+def _fail(msg: str) -> "list[str]":
+    return [msg]
+
+
+def check(path: str) -> "list[str]":
+    """Return a list of problems (empty = valid)."""
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+    except FileNotFoundError:
+        return _fail(f"{path}: missing — run `python -m benchmarks.run`")
+    except json.JSONDecodeError as e:
+        return _fail(f"{path}: not valid JSON ({e})")
+    problems = []
+    if not isinstance(payload, dict) or "results" not in payload:
+        return _fail(f"{path}: top level must be an object with 'results'")
+    if "schema" not in payload:
+        problems.append("missing 'schema' field")
+    results = payload["results"]
+    if not isinstance(results, dict) or not results:
+        return _fail(f"{path}: 'results' must be a non-empty object")
+    for rule, grid in results.items():
+        if not isinstance(grid, dict) or not grid:
+            problems.append(f"rule {rule!r}: empty or non-object grid")
+            continue
+        for key, us in grid.items():
+            if not _KEY_RE.match(key):
+                problems.append(f"rule {rule!r}: bad grid key {key!r} "
+                                "(want 'n=<n>,d=<d>')")
+            if not isinstance(us, (int, float)) or not math.isfinite(us) \
+                    or us <= 0:
+                problems.append(f"rule {rule!r} [{key}]: us_per_call must be "
+                                f"a positive finite number, got {us!r}")
+    for row in REQUIRED_ROWS:
+        if row not in results:
+            problems.append(f"missing required substrate row {row!r}")
+    return problems
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_agg_time.json"
+    problems = check(path)
+    if problems:
+        for p in problems:
+            print(f"BENCH check FAILED: {p}", file=sys.stderr)
+        sys.exit(1)
+    with open(path) as fh:
+        n_rows = len(json.load(fh)["results"])
+    print(f"{path}: OK ({n_rows} rules)")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,28 +53,43 @@ class AggStats:
     sq_norms: Optional[Array] = None
 
 
-def leaf_sqdist_contrib(leaf: Array, *, use_pallas: bool = False) -> Array:
-    """One leaf's raw contribution to the global (n, n) distance matrix.
+def _leaf_stats_contrib(leaf: Array) -> Tuple[Array, Array]:
+    """One leaf's raw (dists, sq_norms) contribution — the XLA formula.
 
     Contraction over all parameter dims: sharded dims reduce locally + one
-    psum under GSPMD.  Raw (unclamped) so cross-leaf accumulation stays a
-    plain sum; callers finalise with :func:`_finalize_dists`.
+    psum under GSPMD.  HIGHEST: distances between near-identical honest
+    gradients must not lose bits to bf16-pass matmuls on TPU — score order
+    decides selection.  The single shared implementation keeps the
+    streaming pass-1 path (leaf_sqdist_contrib) and the stacked path
+    (tree_pairwise_stats) on the exact same float summation.
     """
-    if use_pallas:
-        from repro.kernels import ops as kops
-        return kops.pairwise_sqdist(_leaf2d(leaf))
     x = leaf.astype(jnp.float32)
     axes = _param_axes(x)
     sq = jnp.sum(x * x, axis=axes)
-    # HIGHEST: distances between near-identical honest gradients must not
-    # lose bits to bf16-pass matmuls on TPU — score order decides selection
     gram = jax.lax.dot_general(
         x, x, ((axes, axes), ((), ())),
         precision=jax.lax.Precision.HIGHEST,
         preferred_element_type=jnp.float32) if x.ndim == 2 else \
         jnp.tensordot(x, x, axes=(axes, axes),
                       precision=jax.lax.Precision.HIGHEST)
-    return sq[:, None] + sq[None, :] - 2.0 * gram
+    return sq[:, None] + sq[None, :] - 2.0 * gram, sq
+
+
+def leaf_sqdist_contrib(leaf: Array, *, use_pallas: bool = False) -> Array:
+    """One leaf's raw contribution to the global (n, n) distance matrix.
+
+    Raw (unclamped, diagonal kept) so cross-leaf accumulation stays a plain
+    sum; callers finalise with :func:`finalize_dists`.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        # raw contribution, matching this function's contract — streaming
+        # pass 1 accumulates the exact float sum the stacked path's
+        # tree_pairwise_stats produces.  The kernel still writes its (1, n)
+        # norm output (pallas_call is opaque to XLA DCE); that extra VMEM
+        # write is noise next to the tile loads.
+        return kops.pairwise_stats(_leaf2d(leaf))[0]
+    return _leaf_stats_contrib(leaf)[0]
 
 
 def finalize_dists(total: Array) -> Array:
@@ -86,14 +101,34 @@ def finalize_dists(total: Array) -> Array:
 
 def tree_pairwise_sqdist(grads: PyTree, *, use_pallas: bool = False) -> Array:
     """Sum of per-leaf pairwise squared distances -> global (n, n) matrix."""
+    return tree_pairwise_stats(grads, use_pallas=use_pallas)[0]
+
+
+def tree_pairwise_stats(grads: PyTree, *, use_pallas: bool = False
+                        ) -> Tuple[Array, Array]:
+    """Single pass over the stack: (global (n, n) sq-dists, (n,) sq-norms).
+
+    On the Pallas path every leaf is read from HBM exactly once — the
+    ``pairwise_stats`` kernel emits that leaf's raw distance contribution
+    and its norm contribution from the same VMEM tile load; both are
+    accumulated across leaves and the distances finalised once.  The XLA
+    path shares the gram intermediate so the norms also cost no extra read.
+    """
     leaves = jax.tree.leaves(grads)
     if not leaves:
         raise ValueError("empty gradient pytree")
     n = leaves[0].shape[0]
-    total = jnp.zeros((n, n), dtype=jnp.float32)
+    total_d = jnp.zeros((n, n), dtype=jnp.float32)
+    total_s = jnp.zeros((n,), dtype=jnp.float32)
     for leaf in leaves:
-        total = total + leaf_sqdist_contrib(leaf, use_pallas=use_pallas)
-    return finalize_dists(total)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            dd, sq = kops.pairwise_stats(_leaf2d(leaf))
+        else:
+            dd, sq = _leaf_stats_contrib(leaf)
+        total_d = total_d + dd
+        total_s = total_s + sq
+    return finalize_dists(total_d), total_s
 
 
 def tree_sq_norms(grads: PyTree) -> Array:
@@ -114,6 +149,9 @@ def compute_stats(grads: PyTree, f: int, *, needs_dists: bool = True,
 
     Only what the capability flags ask for is computed — ``average`` pays
     zero extra collectives, distance rules pay the one (n, n) all-reduce.
+    When distances are needed the single-pass kernel also yields the norms
+    as a free byproduct of the same HBM read, so ``sq_norms`` is populated
+    whenever ``dists`` is computed here.
     """
     leaves = jax.tree.leaves(grads)
     if not leaves:
@@ -122,9 +160,11 @@ def compute_stats(grads: PyTree, f: int, *, needs_dists: bool = True,
     for leaf in leaves:
         if leaf.shape[0] != n:
             raise ValueError("all leaves must share the worker axis size")
+    norms = None
     if needs_dists and dists is None:
-        dists = tree_pairwise_sqdist(grads, use_pallas=use_pallas)
-    norms = tree_sq_norms(grads) if needs_norms else None
+        dists, norms = tree_pairwise_stats(grads, use_pallas=use_pallas)
+    if needs_norms and norms is None:
+        norms = tree_sq_norms(grads)
     return AggStats(n=n, f=f, dists=dists, sq_norms=norms)
 
 
@@ -184,19 +224,35 @@ def _weighted_mean_leaf(w: Array, leaf: Array) -> Array:
 
 def _bulyan_leaf(w_ext: Array, w_agr: Array, beta: int,
                  leaf: Array, coord_chunk: int = 0,
-                 use_pallas: bool = False) -> Array:
+                 use_pallas: bool = False, fused: bool = True) -> Array:
     """Apply an extraction plan + coordinate phase to one gradient leaf.
 
     Default path is sharding-preserving: (theta, n) @ (n, ...) tensordots
     keep the parameter-dim sharding, and the coordinate phase is purely
     elementwise/axis-0 over (theta, ...).
+
+    With ``use_pallas`` and ``fused`` (the production fast path) the whole
+    apply phase runs in the ``fused_select`` kernel: extraction einsums +
+    coordinate phase per d-tile in VMEM, no (θ, numel) HBM intermediates.
+    ``fused=False`` keeps the two-step Pallas path (materialised einsums +
+    ``coord_select``) for benchmarking the fusion win.
     """
+    if use_pallas and fused:
+        from repro.kernels import ops as kops
+        x = _leaf2d(leaf).astype(jnp.float32)      # (n, numel)
+        out = kops.fused_select(x, w_ext, w_agr, beta)
+        return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
     if use_pallas or coord_chunk:
         x = _leaf2d(leaf).astype(jnp.float32)      # (n, numel)
 
         def phase(xc: Array) -> Array:             # (n, c) -> (c,)
-            g_ext = w_ext @ xc                     # (theta, c)
-            g_agr = w_agr @ xc
+            # HIGHEST: substrate parity — the fused kernel contracts at
+            # HIGHEST, and g_ext feeds the selection-deciding median
+            g_ext = jnp.matmul(w_ext, xc,
+                               precision=jax.lax.Precision.HIGHEST)
+            g_agr = jnp.matmul(w_agr, xc,
+                               precision=jax.lax.Precision.HIGHEST)
             if use_pallas:
                 from repro.kernels import ops as kops
                 return kops.coord_select(g_ext, g_agr, beta)
@@ -213,8 +269,10 @@ def _bulyan_leaf(w_ext: Array, w_agr: Array, beta: int,
         return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
 
     x = leaf.astype(jnp.float32)
-    g_ext = jnp.tensordot(w_ext, x, axes=(1, 0))   # (theta, ...)
-    g_agr = jnp.tensordot(w_agr, x, axes=(1, 0))
+    g_ext = jnp.tensordot(w_ext, x, axes=(1, 0),   # (theta, ...)
+                          precision=jax.lax.Precision.HIGHEST)
+    g_agr = jnp.tensordot(w_agr, x, axes=(1, 0),
+                          precision=jax.lax.Precision.HIGHEST)
     return G.bulyan_coordinate_phase(g_ext, g_agr, beta).astype(leaf.dtype)
 
 
@@ -251,8 +309,13 @@ class Aggregator:
         raise NotImplementedError
 
     def apply(self, plan: AggPlan, grads: PyTree, *, coord_chunk: int = 0,
-              use_pallas: bool = False) -> PyTree:
-        """Plan application — shared across rules, dispatched on plan.kind."""
+              use_pallas: bool = False, fused: bool = True) -> PyTree:
+        """Plan application — shared across rules, dispatched on plan.kind.
+
+        With ``use_pallas`` the bulyan kind takes the fully fused kernel
+        path (one HBM read per leaf, no (θ, d) intermediates); pass
+        ``fused=False`` to benchmark the two-step Pallas path instead.
+        """
         if plan.kind == "mean":
             return jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
         if plan.kind == "weighted":
@@ -261,7 +324,7 @@ class Aggregator:
         if plan.kind == "bulyan":
             fn = functools.partial(_bulyan_leaf, plan.w_ext, plan.w_agr,
                                    plan.beta, coord_chunk=coord_chunk,
-                                   use_pallas=use_pallas)
+                                   use_pallas=use_pallas, fused=fused)
             return jax.tree.map(fn, grads)
         if plan.kind == "coordinate":
             return jax.tree.map(
@@ -439,6 +502,7 @@ class MultiBulyan(_BulyanFamily):
 # ==========================================================================
 def aggregate_tree(grads: PyTree, f: int, name: str = "multi_bulyan", *,
                    coord_chunk: int = 0, use_pallas: bool = False,
+                   fused: bool = True,
                    dists: Optional[Array] = None) -> PyTree:
     """Aggregate a stacked gradient pytree with the named registered rule."""
     agg = get_aggregator(name)
@@ -446,7 +510,7 @@ def aggregate_tree(grads: PyTree, f: int, name: str = "multi_bulyan", *,
                           use_pallas=use_pallas, dists=dists)
     agg.validate(stats.n, stats.f)
     return agg.apply(agg.plan(stats), grads, coord_chunk=coord_chunk,
-                     use_pallas=use_pallas)
+                     use_pallas=use_pallas, fused=fused)
 
 
 def aggregate_matrix(Gm: Array, f: int, name: str = "multi_bulyan", *,

@@ -3,7 +3,8 @@
 * ``trainer``   — stacked n×d trainer (`make_train_step`, `split_workers`,
   `inject_byzantine`);
 * ``streaming`` — per-block streaming trainer (398B enabler, DESIGN.md §5);
-* ``serving``   — batched prefill/decode (`generate`, `make_serve_step`);
+* ``serving``   — batched prefill/decode (`generate`, `make_serve_step`) and
+  the byzantine-tolerant replica ensemble (`make_robust_serve_step`);
 * ``sharding``  — PartitionSpec heuristics for the production mesh.
 """
 from repro.dist.trainer import (  # noqa: F401

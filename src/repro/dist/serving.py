@@ -4,6 +4,12 @@
 ``make_serve_step`` is the jit-ready single-token step the dry-run lowers on
 the production mesh (the cache length axis model-sharded, chunk-local
 partial-softmax decode attention).
+
+``make_robust_serve_step`` is the byzantine-tolerant ensemble variant: n
+model replicas decode in lockstep and their per-token logits are fused with
+a registered GAR through the same plan/apply path the trainers use — with
+``RobustConfig.use_pallas`` the bulyan apply runs the fused VMEM kernel, so
+robust serving pays one HBM read of the (n, B·V) logit stack per token.
 """
 from __future__ import annotations
 
@@ -13,7 +19,8 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, RobustConfig
+from repro.core import api
 from repro import models as MD
 
 PyTree = Any
@@ -26,6 +33,43 @@ def make_serve_step(cfg: ArchConfig, *, window: int = 0,
     def step(params, cache, token, pos):
         return MD.decode_fn(params, cfg, token, cache, pos, window=window,
                             seq_chunks=seq_chunks)
+
+    return step
+
+
+def aggregate_replica_logits(logits: jax.Array, rcfg: RobustConfig) -> jax.Array:
+    """(n, B, V) replica logits -> (B, V) robust consensus via rcfg.gar.
+
+    The replica axis plays the worker role: stats/plan on the (n, n)
+    logit-distance matrix, apply per the plan kind (fused Pallas kernel for
+    bulyan-family rules when ``rcfg.use_pallas``).  Up to f compromised or
+    corrupted replicas cannot steer the served distribution outside the
+    honest replicas' spread.
+    """
+    agg = api.get_aggregator(rcfg.gar)
+    stats = api.compute_stats(logits, rcfg.f, needs_dists=agg.needs_dists,
+                              use_pallas=rcfg.use_pallas)
+    agg.validate(stats.n, stats.f)
+    return agg.apply(agg.plan(stats), logits, use_pallas=rcfg.use_pallas)
+
+
+def make_robust_serve_step(cfg: ArchConfig, rcfg: RobustConfig, *,
+                           window: int = 0, seq_chunks: int = 1):
+    """Ensemble decode step over ``rcfg.n_workers`` stacked model replicas.
+
+    ``(stacked_params, stacked_caches, token, pos) -> (logits, caches)``
+    where every leaf of ``stacked_params``/``stacked_caches`` carries a
+    leading replica axis of size n.  The fused (B, V) logits are the GAR
+    consensus of the replicas' outputs.
+    """
+    rcfg.validate()
+
+    def step(stacked_params, stacked_caches, token, pos):
+        logits, caches = jax.vmap(
+            lambda p, c: MD.decode_fn(p, cfg, token, c, pos, window=window,
+                                      seq_chunks=seq_chunks),
+        )(stacked_params, stacked_caches)
+        return aggregate_replica_logits(logits, rcfg), caches
 
     return step
 

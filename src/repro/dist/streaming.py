@@ -21,6 +21,11 @@ Blocks are the top-level entries of the parameter pytree (embed / groups /
 final_norm / lm_head for the decoder-only stack).  Per-block gradients are
 taken wrt the block subtree with the rest of the parameters closed over, so
 each value equals the corresponding slice of the full gradient.
+
+With ``rcfg.use_pallas`` both trainers ride the fused kernel stack: block
+statistics come from the single-pass ``pairwise_stats`` kernel (one HBM
+read per leaf for distances + norms) and the bulyan apply runs entirely in
+VMEM via ``fused_select`` — see DESIGN.md §7 for the fused-apply contract.
 """
 from __future__ import annotations
 

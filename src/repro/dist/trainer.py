@@ -160,6 +160,11 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
         stats = api.compute_stats(grads, rcfg.f,
                                   needs_dists=aggregator.needs_dists,
                                   use_pallas=rcfg.use_pallas)
+        # guard against an out-of-band worker count: stats.n comes from the
+        # actual batch split, which RobustConfig's construction-time check
+        # never saw.  plan() implementations are not required to
+        # self-validate (streaming.py already guards every plan call).
+        aggregator.validate(stats.n, stats.f)
         plan = aggregator.plan(stats)
         agg = aggregator.apply(plan, grads, coord_chunk=coord_chunk,
                                use_pallas=rcfg.use_pallas)

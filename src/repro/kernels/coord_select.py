@@ -15,6 +15,8 @@ in EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -48,9 +50,15 @@ def _kernel(ext_ref, agr_ref, o_ref, *, beta: int):
 def coord_select_pallas(g_ext: Array, g_agr: Array, beta: int, *,
                         d_tile: int = 2048, interpret: bool = False) -> Array:
     """(theta, d) x2 -> (d,) fp32 fused coordinate phase."""
-    assert g_ext.shape == g_agr.shape, (g_ext.shape, g_agr.shape)
+    if g_ext.shape != g_agr.shape:
+        raise ValueError(
+            f"g_ext/g_agr shapes differ: {g_ext.shape} vs {g_agr.shape}")
+    if g_agr.ndim != 2:
+        raise ValueError(f"expected (theta, d) inputs, got {g_agr.shape}")
     theta, d = g_agr.shape
-    assert 1 <= beta <= theta, (beta, theta)
+    if not 1 <= beta <= theta:
+        raise ValueError(
+            f"need 1 <= beta <= theta, got beta={beta}, theta={theta}")
     d_tile = min(d_tile, max(128, ((d - 1) // 128 + 1) * 128))
     d_pad = (-d) % d_tile
     if d_pad:
@@ -58,7 +66,6 @@ def coord_select_pallas(g_ext: Array, g_agr: Array, beta: int, *,
         g_agr = jnp.pad(g_agr, ((0, 0), (0, d_pad)))
     dp = g_agr.shape[1]
     grid = (dp // d_tile,)
-    import functools
     out = pl.pallas_call(
         functools.partial(_kernel, beta=beta),
         grid=grid,

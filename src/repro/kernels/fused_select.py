@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fully fused BULYAN apply phase.
+
+The unfused pipeline materialises both (θ, d) intermediates in HBM:
+
+    g_ext = w_ext @ G     # HBM write, θ·d fp32
+    g_agr = w_agr @ G     # HBM write, θ·d fp32
+    out   = coord_select(g_ext, g_agr, β)   # HBM read of both, write d
+
+— three O(θ·d) HBM round-trips that dominate the memory-bound roofline
+(kernels/coord_select.py header).  This kernel fuses the whole apply phase
+over d-tiles: each grid step streams one (n, d_tile) block of the gradient
+stack HBM→VMEM, contracts it with the small replicated (θ, n) extraction /
+aggregate weight matrices on the MXU, and runs median → β-selection → mean
+on the VPU while the tile is still in VMEM.  The only HBM traffic is the
+one read of the stack and the (d,) output write — the same traffic plain
+averaging pays, which is the paper's m/n-slowdown claim made literal.
+
+VMEM per grid step: (n + 2θ)·d_tile·4 B for the tile and the two einsum
+outputs, ~3·θ²·d_tile·4 B for the rank-counting broadcasts, plus
+2·θ·n·4 B for the replicated weights (θ ≤ n ≤ 64 on our meshes → ≤ 32 KB).
+``kernels/ops.py`` autotunes d_tile against this budget.
+
+Numerics match ``core.gar.bulyan_coordinate_phase`` composed with the
+weight einsums bit-for-bit in interpret mode (tested in
+tests/test_substrates.py): the θ-axis median uses the same sorted values,
+ties in the β-selection break by row index, and the masked mean uses the
+same ``where``-sum.  The worker axis is zero-padded to a sublane multiple
+of 8 (exact: padded weight columns are zero).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(x_ref, we_ref, wa_ref, o_ref, *, beta: int):
+    x = x_ref[...].astype(jnp.float32)               # (n_pad, dt)
+    we = we_ref[...]                                 # (theta, n_pad) fp32
+    wa = wa_ref[...]
+    theta = we.shape[0]
+
+    # extraction einsums — MXU, contraction over the worker axis.  HIGHEST:
+    # ext feeds the median/selection, so it must not lose bits to bf16-pass
+    # matmuls on TPU (same rationale as core.api.leaf_sqdist_contrib).
+    ext = jax.lax.dot_general(
+        we, x, (((1,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)          # (theta, dt)
+    agr = jax.lax.dot_general(
+        wa, x, (((1,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)          # (theta, dt)
+
+    # coordinate phase — VPU, same math as coord_select.py's kernel
+    srt = jnp.sort(ext, axis=0)
+    if theta % 2:
+        med = srt[theta // 2]
+    else:
+        med = 0.5 * (srt[theta // 2 - 1] + srt[theta // 2])   # (dt,)
+
+    dist = jnp.abs(agr - med[None, :])               # (theta, dt)
+    # rank by counting: rank[i] = #{k: dist[k] < dist[i]} + #{k<i: ==}
+    lt = (dist[None, :, :] < dist[:, None, :]).astype(jnp.int32)
+    eq = (dist[None, :, :] == dist[:, None, :]).astype(jnp.int32)
+    row = jax.lax.broadcasted_iota(jnp.int32, (theta, theta, 1), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (theta, theta, 1), 1)
+    eq_lower = eq * (col < row).astype(jnp.int32)    # ties -> smaller index first
+    rank = jnp.sum(lt + eq_lower, axis=1)            # (theta, dt)
+    sel = rank < beta
+    o_ref[...] = (jnp.sum(jnp.where(sel, agr, 0.0), axis=0)
+                  / float(beta))[None, :]
+
+
+def fused_select_pallas(x: Array, w_ext: Array, w_agr: Array, beta: int, *,
+                        d_tile: int = 2048, interpret: bool = False) -> Array:
+    """(n, d) stack + (θ, n) plan weights -> (d,) fp32 Bulyan aggregate."""
+    if x.ndim != 2:
+        raise ValueError(f"x must be (n, d), got shape {x.shape}")
+    n, d = x.shape
+    if w_ext.shape != w_agr.shape:
+        raise ValueError(
+            f"weight shapes differ: {w_ext.shape} vs {w_agr.shape}")
+    if w_ext.ndim != 2 or w_ext.shape[1] != n:
+        raise ValueError(
+            f"weights must be (theta, n={n}), got {w_ext.shape}")
+    theta = w_ext.shape[0]
+    if not 1 <= beta <= theta:
+        raise ValueError(f"need 1 <= beta <= theta, got beta={beta}, "
+                         f"theta={theta}")
+    d_tile = min(d_tile, max(128, ((d - 1) // 128 + 1) * 128))
+    n_pad = (-n) % 8
+    d_pad = (-d) % d_tile
+    if n_pad or d_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, d_pad)))
+    if n_pad:
+        w_ext = jnp.pad(w_ext, ((0, 0), (0, n_pad)))
+        w_agr = jnp.pad(w_agr, ((0, 0), (0, n_pad)))
+    np_, dp = x.shape
+    grid = (dp // d_tile,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, beta=beta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((np_, d_tile), lambda i: (0, i)),
+            pl.BlockSpec((theta, np_), lambda i: (0, 0)),
+            pl.BlockSpec((theta, np_), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        interpret=interpret,
+    )(x, w_ext.astype(jnp.float32), w_agr.astype(jnp.float32))
+    return out[0, :d]

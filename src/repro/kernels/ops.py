@@ -4,33 +4,161 @@ On CPU (this container) the kernels execute in ``interpret=True`` mode —
 the kernel body runs in Python on the same BlockSpec schedule, which is the
 validation story for the TPU target.  On TPU backends the compiled kernels
 run as written.
+
+Backend resolution happens *outside* the jit boundary: ``interpret`` is a
+static argument of every jitted wrapper, so the backend choice is part of
+the jit cache key instead of being baked into a trace that silently goes
+stale when the default backend changes (e.g. a CPU-traced interpret=True
+call surviving into a TPU run).  Scope: this protects the wrappers' own
+jit caches (eager callers).  A caller that jits a whole train/serve step
+traces these wrappers inline, so resolution happens at *that* trace's
+time under ordinary jit semantics — pass ``interpret`` explicitly from
+step-construction code if the step must pin a backend choice.
+
+``d_tile`` defaults to the VMEM-budget autotuner (:func:`autotune_d_tile`):
+the largest lane-aligned tile whose double-buffered working set fits the
+budget, so wide stacks take few grid steps and narrow ones don't overshoot
+VMEM.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.coord_select import coord_select_pallas
-from repro.kernels.pairwise_sqdist import pairwise_sqdist_pallas
+from repro.kernels.fused_select import fused_select_pallas
+from repro.kernels.pairwise_sqdist import (pairwise_sqdist_pallas,
+                                           pairwise_stats_pallas)
 
 Array = jax.Array
+
+# Conservative per-step working-set budget: half of a v5e core's ~16 MB
+# VMEM, leaving headroom for Pallas' input double buffering and the
+# replicated small operands.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+_MAX_D_TILE = 8192
+
+
+def autotune_d_tile(rows: int, d: int, *, scratch_rows: int = 0,
+                    fixed_bytes: int = 0,
+                    vmem_budget: int = VMEM_BUDGET_BYTES,
+                    max_tile: int = _MAX_D_TILE) -> int:
+    """Largest d_tile (multiple of 128) fitting the VMEM budget.
+
+    ``rows`` counts the fp32 (rows, d_tile) *operand* buffers per grid step
+    (double-buffered by Pallas — a 2x factor models that);
+    ``scratch_rows`` counts 4-byte rows of in-kernel intermediates that
+    scale with the tile width but are not double-buffered (e.g. the
+    (θ, θ, d_tile) rank-counting broadcasts of the selection kernels);
+    ``fixed_bytes`` covers tile-width-independent residents (the (n, n)
+    accumulator, replicated weights).  Clamped to [128, max_tile] and to d
+    rounded up to the 128-lane boundary — a tile wider than the padded
+    operand only adds dead lanes.
+    """
+    if rows <= 0:
+        raise ValueError(f"rows must be positive, got {rows}")
+    if d <= 0:
+        raise ValueError(f"d must be positive, got {d}")
+    d_cap = ((d - 1) // 128 + 1) * 128
+    budget = max(0, vmem_budget - fixed_bytes)
+    per_lane = (2 * rows + scratch_rows) * 4
+    tile = (budget // per_lane // 128) * 128
+    return max(128, min(tile, max_tile, d_cap))
+
+
+def _select_scratch_rows(theta: int) -> int:
+    """Tile-width-scaling intermediates of the selection kernels: the three
+    (θ, θ) int32 rank-counting broadcasts (lt/eq/rank) plus a few fp32
+    (θ,)-row temporaries (ext/agr/srt/dist)."""
+    return 3 * theta * theta + 4 * theta
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("d_tile",))
-def pairwise_sqdist(x: Array, *, d_tile: int = 2048) -> Array:
+def _resolve(interpret: Optional[bool]) -> bool:
+    return _interpret() if interpret is None else bool(interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def _pairwise_sqdist(x: Array, *, d_tile: int, interpret: bool) -> Array:
+    return pairwise_sqdist_pallas(x, d_tile=d_tile, interpret=interpret)
+
+
+def pairwise_sqdist(x: Array, *, d_tile: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> Array:
     """(n, d) -> (n, n) fp32 squared distances (Pallas)."""
-    return pairwise_sqdist_pallas(x, d_tile=d_tile, interpret=_interpret())
+    if d_tile is None:
+        n_rows = x.shape[0] + (-x.shape[0]) % 8
+        d_tile = autotune_d_tile(n_rows, x.shape[1],
+                                 fixed_bytes=n_rows * n_rows * 4)
+    return _pairwise_sqdist(x, d_tile=d_tile, interpret=_resolve(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "d_tile"))
-def coord_select(g_ext: Array, g_agr: Array, beta: int, *,
-                 d_tile: int = 2048) -> Array:
-    """Fused Bulyan coordinate phase (Pallas)."""
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def _pairwise_stats(x: Array, *, d_tile: int,
+                    interpret: bool) -> Tuple[Array, Array]:
+    return pairwise_stats_pallas(x, d_tile=d_tile, interpret=interpret)
+
+
+def pairwise_stats(x: Array, *, d_tile: Optional[int] = None,
+                   interpret: Optional[bool] = None) -> Tuple[Array, Array]:
+    """Single-pass (n, d) -> ((n, n) raw sq-dists, (n,) sq-norms).
+
+    One HBM read of the stack feeds both outputs; the distance matrix is
+    raw (unclamped, diagonal not zeroed) for cross-leaf accumulation —
+    finalise with ``core.api.finalize_dists``.
+    """
+    if d_tile is None:
+        n_rows = x.shape[0] + (-x.shape[0]) % 8
+        d_tile = autotune_d_tile(n_rows, x.shape[1],
+                                 fixed_bytes=n_rows * (n_rows + 8) * 4)
+    return _pairwise_stats(x, d_tile=d_tile, interpret=_resolve(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "d_tile", "interpret"))
+def _coord_select(g_ext: Array, g_agr: Array, *, beta: int, d_tile: int,
+                  interpret: bool) -> Array:
     return coord_select_pallas(g_ext, g_agr, beta, d_tile=d_tile,
-                               interpret=_interpret())
+                               interpret=interpret)
+
+
+def coord_select(g_ext: Array, g_agr: Array, beta: int, *,
+                 d_tile: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> Array:
+    """Fused Bulyan coordinate phase (Pallas) on materialised (θ, d) inputs."""
+    if d_tile is None:
+        theta = g_agr.shape[0]
+        d_tile = autotune_d_tile(2 * theta, g_agr.shape[1],
+                                 scratch_rows=_select_scratch_rows(theta))
+    return _coord_select(g_ext, g_agr, beta=beta, d_tile=d_tile,
+                         interpret=_resolve(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "d_tile", "interpret"))
+def _fused_select(x: Array, w_ext: Array, w_agr: Array, *, beta: int,
+                  d_tile: int, interpret: bool) -> Array:
+    return fused_select_pallas(x, w_ext, w_agr, beta, d_tile=d_tile,
+                               interpret=interpret)
+
+
+def fused_select(x: Array, w_ext: Array, w_agr: Array, beta: int, *,
+                 d_tile: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> Array:
+    """Fully fused Bulyan apply: (n, d) stack + (θ, n) plan -> (d,).
+
+    Extraction einsums, median, β-selection and mean all happen in VMEM —
+    no (θ, d) HBM intermediates (see kernels/fused_select.py).
+    """
+    if d_tile is None:
+        n_rows = x.shape[0] + (-x.shape[0]) % 8
+        theta = w_ext.shape[0]
+        d_tile = autotune_d_tile(n_rows, x.shape[1],
+                                 scratch_rows=_select_scratch_rows(theta),
+                                 fixed_bytes=2 * theta * n_rows * 4)
+    return _fused_select(x, w_ext, w_agr, beta=beta, d_tile=d_tile,
+                         interpret=_resolve(interpret))

@@ -17,8 +17,6 @@ axis → keep it a multiple of 128; n is padded to a multiple of 8 (sublanes).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -31,6 +29,7 @@ def _kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)              # (n, d_tile)
     gram = jax.lax.dot_general(
         x, x, (((1,), (1,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
         preferred_element_type=jnp.float32)          # (n, n) — MXU
     sq = jnp.sum(x * x, axis=1)                      # (n,)   — VPU
     tile = sq[:, None] + sq[None, :] - 2.0 * gram
@@ -51,6 +50,8 @@ def pairwise_sqdist_pallas(x: Array, *, d_tile: int = 2048,
     Pads n up to a multiple of 8 and d up to a multiple of ``d_tile``
     (zero padding is exact for distances).
     """
+    if x.ndim != 2:
+        raise ValueError(f"x must be (n, d), got shape {x.shape}")
     n, d = x.shape
     n_pad = (-n) % 8
     d_tile = min(d_tile, max(128, ((d - 1) // 128 + 1) * 128))
@@ -70,3 +71,62 @@ def pairwise_sqdist_pallas(x: Array, *, d_tile: int = 2048,
     out = out[:n, :n]
     out = jnp.maximum(out, 0.0)
     return out * (1.0 - jnp.eye(n, dtype=jnp.float32))
+
+
+def _stats_kernel(x_ref, d_ref, s_ref):
+    """One grid step: the d-tile's distance contribution AND its norm
+    contribution from a single VMEM load of the tile."""
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)               # (n, d_tile)
+    # HIGHEST: score order decides selection — no bf16 passes on TPU
+    gram = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)          # (n, n) — MXU
+    sq = jnp.sum(x * x, axis=1)                      # (n,)   — VPU
+    tile = sq[:, None] + sq[None, :] - 2.0 * gram
+
+    @pl.when(i == 0)
+    def _init():
+        d_ref[...] = tile
+        s_ref[...] = sq[None, :]
+
+    @pl.when(i > 0)
+    def _acc():
+        d_ref[...] += tile
+        s_ref[...] += sq[None, :]
+
+
+def pairwise_stats_pallas(x: Array, *, d_tile: int = 2048,
+                          interpret: bool = False):
+    """Single-pass stats: (n, d) -> ((n, n) sq-dists, (n,) sq-norms).
+
+    The unfused path reads the stack from HBM twice — once for the distance
+    gram, once for the norms.  Both outputs here are accumulated from the
+    same per-tile VMEM load, halving the stats phase's HBM traffic.  The
+    distance matrix is raw (no clamp, diagonal not zeroed) so callers can
+    accumulate contributions across leaves and finalise once
+    (``core.api.finalize_dists``) — identical float summation to the
+    single-output kernel.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"x must be (n, d), got shape {x.shape}")
+    n, d = x.shape
+    n_pad = (-n) % 8
+    d_tile = min(d_tile, max(128, ((d - 1) // 128 + 1) * 128))
+    d_pad = (-d) % d_tile
+    if n_pad or d_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, d_pad)))
+    np_, dp = x.shape
+    grid = (dp // d_tile,)
+    dists, norms = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((np_, d_tile), lambda i: (0, i))],
+        out_specs=(pl.BlockSpec((np_, np_), lambda i: (0, 0)),
+                   pl.BlockSpec((1, np_), lambda i: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((np_, np_), jnp.float32),
+                   jax.ShapeDtypeStruct((1, np_), jnp.float32)),
+        interpret=interpret,
+    )(x)
+    return dists[:n, :n], norms[0, :n]

@@ -37,6 +37,9 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=11)
     ap.add_argument("--f", type=int, default=2)
     ap.add_argument("--gar", default="multi_bulyan")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route stats + bulyan apply through the Pallas "
+                         "kernels (fused fast path; interpret mode on CPU)")
     ap.add_argument("--attack", default="none")
     ap.add_argument("--trainer", default="stacked",
                     choices=("stacked", "stream_block", "stream_global"))
@@ -53,12 +56,14 @@ def main(argv=None) -> int:
     if cfg.is_encdec and args.trainer != "stacked":
         raise SystemExit("enc-dec supports only the stacked trainer")
 
-    rcfg = RobustConfig(n_workers=args.workers, f=args.f, gar=args.gar)
+    rcfg = RobustConfig(n_workers=args.workers, f=args.f, gar=args.gar,
+                        use_pallas=args.use_pallas)
     key = jax.random.key(args.seed)
     params = MD.init_model(key, cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"[train] arch={cfg.name} params={n_params:,} workers={args.workers} "
-          f"f={args.f} gar={args.gar} attack={args.attack} trainer={args.trainer}")
+          f"f={args.f} gar={args.gar} attack={args.attack} "
+          f"trainer={args.trainer} pallas={args.use_pallas}")
 
     opt = make_optimizer(args.optimizer,
                          **({"momentum": 0.9} if args.optimizer == "sgd" else {}))

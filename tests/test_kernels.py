@@ -9,6 +9,17 @@ from repro.kernels.ref import coord_select_ref, pairwise_sqdist_ref
 RNG = np.random.default_rng(7)
 
 
+def _bulyan_plan_weights(n, f):
+    """A real extraction plan for an (n, f) pair (θ one-hots + averages)."""
+    from repro.core import gar
+    d = 64
+    G = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    theta = n - 2 * f - 2
+    beta = theta - 2 * f
+    w_ext, w_agr = gar.extraction_plan(gar.pairwise_sqdist(G), f, theta)
+    return G, w_ext, w_agr, beta
+
+
 @pytest.mark.parametrize("n", [3, 8, 11, 16, 33])
 @pytest.mark.parametrize("d", [1, 100, 257, 2048, 5000])
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
@@ -64,3 +75,109 @@ def test_coord_select_beta_equals_theta_is_mean():
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(jnp.mean(ga, axis=0)),
                                rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------- single-pass stats
+@pytest.mark.parametrize("n", [3, 8, 11, 16])
+@pytest.mark.parametrize("d", [1, 100, 257, 5000])
+def test_pairwise_stats_single_pass(n, d):
+    """One HBM read must reproduce both the distance and the norm kernels."""
+    x = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    dists, sq = ops.pairwise_stats(x)
+    assert dists.shape == (n, n) and sq.shape == (n,)
+    want_d = pairwise_sqdist_ref(x)
+    # raw contribution: clamp + zero diagonal is the caller's finalisation
+    got_d = np.maximum(np.asarray(dists), 0.0) * (1.0 - np.eye(n))
+    scale = max(float(jnp.max(want_d)), 1.0)
+    np.testing.assert_allclose(got_d, np.asarray(want_d),
+                               rtol=0, atol=1e-5 * scale)
+    np.testing.assert_allclose(np.asarray(sq),
+                               np.sum(np.asarray(x) ** 2, axis=1),
+                               rtol=1e-5, atol=1e-5 * scale)
+
+
+def test_pairwise_stats_matches_sqdist_kernel_bitwise():
+    """Same tile schedule -> identical float accumulation for distances."""
+    x = jnp.asarray(RNG.normal(size=(13, 3000)).astype(np.float32))
+    dists, _ = ops.pairwise_stats(x, d_tile=512)
+    fin = np.maximum(np.asarray(dists), 0.0) * (1.0 - np.eye(13))
+    np.testing.assert_array_equal(
+        fin.astype(np.float32),
+        np.asarray(ops.pairwise_sqdist(x, d_tile=512)))
+
+
+# ------------------------------------------------------------- fused select
+@pytest.mark.parametrize("n,f", [(7, 1), (11, 2), (15, 3), (12, 2)])
+@pytest.mark.parametrize("d", [1, 100, 2048, 2500])
+def test_fused_select_matches_composed_reference(n, f, d):
+    _, w_ext, w_agr, beta = _bulyan_plan_weights(n, f)
+    x = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    got = ops.fused_select(x, w_ext, w_agr, beta)
+    ge = jnp.asarray(np.asarray(w_ext) @ np.asarray(x))
+    ga = jnp.asarray(np.asarray(w_agr) @ np.asarray(x))
+    want = coord_select_ref(ge, ga, beta)
+    assert got.shape == (d,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-5)
+
+
+def test_fused_select_tile_invariance():
+    n, f = 11, 2
+    _, w_ext, w_agr, beta = _bulyan_plan_weights(n, f)
+    x = jnp.asarray(RNG.normal(size=(n, 3000)).astype(np.float32))
+    base = np.asarray(ops.fused_select(x, w_ext, w_agr, beta, d_tile=2048))
+    for d_tile in (128, 512):
+        np.testing.assert_allclose(
+            np.asarray(ops.fused_select(x, w_ext, w_agr, beta,
+                                        d_tile=d_tile)),
+            base, rtol=0, atol=1e-5)
+
+
+def test_fused_select_rejects_bad_shapes():
+    x = jnp.zeros((8, 64), jnp.float32)
+    w = jnp.zeros((3, 8), jnp.float32)
+    with pytest.raises(ValueError, match="beta"):
+        ops.fused_select(x, w, w, 0)
+    with pytest.raises(ValueError, match="weights must be"):
+        ops.fused_select(x, jnp.zeros((3, 7)), jnp.zeros((3, 7)), 1)
+    with pytest.raises(ValueError, match="shapes differ"):
+        ops.fused_select(x, w, jnp.zeros((4, 8)), 1)
+
+
+# ---------------------------------------------------------------- autotuner
+def test_autotune_d_tile_lane_aligned_and_budgeted():
+    for rows in (8, 24, 64, 200):
+        for d in (1, 100, 4096, 10_000_000):
+            t = ops.autotune_d_tile(rows, d)
+            assert t % 128 == 0 and t >= 128
+            # padded-d cap: never wider than the lane-rounded operand
+            assert t <= max(128, ((d - 1) // 128 + 1) * 128)
+            if t > 128:  # above the floor the working set obeys the budget
+                assert 2 * rows * t * 4 <= ops.VMEM_BUDGET_BYTES
+
+
+def test_autotune_d_tile_monotone_in_rows():
+    wide = ops.autotune_d_tile(8, 10_000_000)
+    narrow = ops.autotune_d_tile(512, 10_000_000)
+    assert narrow <= wide
+    with pytest.raises(ValueError):
+        ops.autotune_d_tile(0, 128)
+
+
+def test_ops_interpret_resolved_outside_jit(monkeypatch):
+    """Regression for the trace-time-baking bug: the backend/override must
+    be resolved in the unjitted wrapper and reach the kernel as a static
+    argument — not be re-evaluated (and cached) inside the trace."""
+    seen = []
+    real = ops.pairwise_sqdist_pallas
+
+    def spy(x, *, d_tile, interpret):
+        seen.append(interpret)
+        return real(x, d_tile=d_tile, interpret=True)  # CPU can only interpret
+
+    monkeypatch.setattr(ops, "pairwise_sqdist_pallas", spy)
+    x = jnp.asarray(RNG.normal(size=(5, 133)).astype(np.float32))
+    # unique d_tile values force fresh traces through the spy
+    ops.pairwise_sqdist(x, d_tile=256, interpret=False)
+    ops.pairwise_sqdist(x, d_tile=384)                # default: CPU backend
+    assert seen == [False, True]

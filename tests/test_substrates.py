@@ -1,5 +1,5 @@
 """Substrate tests: optimizers, schedules, data, checkpointing, losses,
-attention primitives."""
+attention primitives, and the fused-vs-unfused aggregation substrates."""
 import os
 
 import numpy as np
@@ -193,3 +193,111 @@ def test_gqa_expand_kv_grouping():
                                   np.asarray(ke[:, :, 2]))
     np.testing.assert_array_equal(np.asarray(ke[:, :, 3]),
                                   np.asarray(ke[:, :, 5]))
+
+
+# =================================================================
+# fused apply substrate: kernel edge shapes + bitwise agreement with
+# the unfused plan/apply path (interpret mode).  The grid covers:
+# n not a multiple of 8 (7, 11, 15), d not a multiple of 128 and
+# smaller than d_tile (1, 100, 257), the even-θ median branch
+# (n=12, f=2 → θ=6), and β = θ (f=0 → β = θ = n-2).
+# =================================================================
+_RNG_SUB = np.random.default_rng(23)
+EDGE_GRID = [(7, 1), (11, 2), (15, 3), (12, 2), (6, 0)]
+
+
+def _edge_stack(n, d):
+    G = _RNG_SUB.normal(size=(n, d)).astype(np.float32)
+    G[: max(1, n // 5)] *= 20.0       # some rows far out, like an attack
+    return jnp.asarray(G)
+
+
+@pytest.mark.parametrize("rule", ["multi_krum", "multi_bulyan"])
+@pytest.mark.parametrize("n,f", EDGE_GRID)
+@pytest.mark.parametrize("d", [100, 257])
+def test_fused_apply_bitwise_vs_unfused(rule, n, f, d):
+    """Same plan, fused Pallas apply ≡ unfused XLA apply, bit for bit."""
+    from repro.core import api
+    agg = api.get_aggregator(rule)
+    if n < agg.min_n(f):
+        pytest.skip("below the rule's resilience precondition")
+    G = _edge_stack(n, d)
+    stats = api.compute_stats(G, f, needs_dists=agg.needs_dists)
+    plan = agg.plan(stats)
+    unfused = np.asarray(agg.apply(plan, G, use_pallas=False))
+    fused = np.asarray(agg.apply(plan, G, use_pallas=True, fused=True))
+    np.testing.assert_array_equal(unfused, fused)
+
+
+@pytest.mark.parametrize("n,f", EDGE_GRID)
+def test_fused_apply_degenerate_width(n, f):
+    """d=1 (single coordinate): XLA lowers the unfused einsum to a gemv
+    with a different k-reduction order, so agreement is to the last ulp
+    rather than bitwise — the fused path itself is tile-invariant."""
+    from repro.core import api
+    G = _edge_stack(n, 1)
+    stats = api.compute_stats(G, f, needs_dists=True)
+    plan = api.get_aggregator("multi_bulyan").plan(stats)
+    agg = api.get_aggregator("multi_bulyan")
+    unfused = np.asarray(agg.apply(plan, G, use_pallas=False))
+    fused = np.asarray(agg.apply(plan, G, use_pallas=True, fused=True))
+    np.testing.assert_allclose(unfused, fused, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,f", [(12, 2), (6, 0)])
+def test_fused_apply_theta_branches(n, f):
+    """Even-θ median and β = θ hit the fused kernel's special branches."""
+    from repro.core import api
+    theta = n - 2 * f - 2
+    beta = theta - 2 * f
+    if f == 0:
+        assert beta == theta          # β = θ: selection keeps every row
+    else:
+        assert theta % 2 == 0         # even-θ median: midpoint average
+    G = _edge_stack(n, 257)
+    plan = api.get_aggregator("multi_bulyan").plan(
+        api.compute_stats(G, f, needs_dists=True))
+    assert plan.beta == beta and plan.w_ext.shape == (theta, n)
+    fused = np.asarray(api.get_aggregator("multi_bulyan").apply(
+        plan, G, use_pallas=True, fused=True))
+    unfused = np.asarray(api.get_aggregator("multi_bulyan").apply(
+        plan, G, use_pallas=False))
+    np.testing.assert_array_equal(unfused, fused)
+
+
+@pytest.mark.parametrize("n,f", [(11, 2), (12, 2)])
+def test_fused_full_pipeline_bitwise_on_trees(n, f):
+    """End-to-end aggregate_tree: fused vs two-step Pallas on a pytree,
+    sharing the Pallas statistics path (single-pass kernel)."""
+    from repro.core import api
+    d = 300
+    G = _edge_stack(n, d)
+    tree = {"a": G[:, :120].reshape(n, 8, 15), "b": {"c": G[:, 120:]}}
+    fused = api.aggregate_tree(tree, f, "multi_bulyan", use_pallas=True,
+                               fused=True)
+    twostep = api.aggregate_tree(tree, f, "multi_bulyan", use_pallas=True,
+                                 fused=False)
+    for a, b in zip(jax.tree.leaves(fused), jax.tree.leaves(twostep)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_single_pass_stats_matches_two_pass():
+    """compute_stats' fused statistics ≡ separate dists + norms passes."""
+    from repro.core import api
+    n, d = 11, 500
+    G = _edge_stack(n, d)
+    tree = {"a": G[:, :200], "b": G[:, 200:].reshape(n, 10, 30)}
+    stats = api.compute_stats(tree, 2, needs_dists=True, needs_norms=True)
+    np.testing.assert_allclose(
+        np.asarray(stats.dists), np.asarray(api.tree_pairwise_sqdist(tree)),
+        rtol=1e-6, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(stats.sq_norms), np.asarray(api.tree_sq_norms(tree)),
+        rtol=1e-5, atol=1e-4)
+    # pallas single-pass agrees with the XLA single-pass
+    ds, sq = api.tree_pairwise_stats(tree, use_pallas=True)
+    scale = max(float(jnp.max(stats.dists)), 1.0)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(stats.dists),
+                               rtol=0, atol=1e-5 * scale)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(stats.sq_norms),
+                               rtol=1e-5, atol=1e-5 * scale)

@@ -100,6 +100,74 @@ def test_inject_byzantine_shapes_and_rows():
     np.testing.assert_allclose(np.asarray(out["w"][:F]), -1.0)
 
 
+def test_stacked_trainer_validates_out_of_band_n():
+    """Regression: a batch split into fewer workers than RobustConfig
+    promised must fail loudly in the step, not aggregate garbage.  Uses a
+    rule whose plan does NOT self-validate — the trainer's own
+    aggregator.validate(stats.n, stats.f) call is the only guard."""
+    from repro.core import api
+
+    @api.register_gar
+    class _NoSelfCheck(api.Aggregator):
+        name = "_test_no_self_check"
+        min_n_formula = "2f+3"
+
+        @staticmethod
+        def min_n(f):
+            return 2 * f + 3
+
+        def plan(self, stats):
+            return api.AggPlan(kind="mean", n=stats.n, f=stats.f)
+
+    try:
+        rcfg = RobustConfig(n_workers=N, f=F, gar="_test_no_self_check")
+        params = MD.init_model(KEY, DENSE)
+        opt = sgd(momentum=0.0)
+        state = opt.init(params)
+        step = jax.jit(make_train_step(DENSE, rcfg, opt, constant(0.01),
+                                       chunk_q=16))
+        n_oob = 2 * F + 2                      # < min_n, bypasses RobustConfig
+        b = split_workers(next(lm_batches(DENSE.vocab_size, n_oob * 2, 16)),
+                          n_oob)
+        with pytest.raises(ValueError, match="requires n >="):
+            step(params, state, b, KEY)
+    finally:
+        api.REGISTRY.pop("_test_no_self_check")
+
+
+def test_robust_serve_step_fuses_replica_logits():
+    """n replica ensemble decode: GAR consensus over per-replica logits,
+    resilient to f corrupted replicas (fused Pallas apply path)."""
+    from repro.dist.serving import make_robust_serve_step
+
+    n, f = 7, 1
+    rcfg = RobustConfig(n_workers=n, f=f, gar="multi_bulyan",
+                        use_pallas=True)
+    cfg = DENSE
+    batch, seq = 2, 8
+    params = MD.init_model(KEY, cfg)
+    stacked_params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params)
+    b = {"tokens": jnp.zeros((batch, seq), jnp.int32)}
+    _, cache = MD.prefill_fn(params, cfg, b, chunk_q=seq, cache_len=seq + 2)
+    caches = jax.tree.map(
+        lambda c: jnp.broadcast_to(c[None], (n,) + c.shape), cache)
+    # corrupt replica 0's lm head: its logits become wild outliers
+    stacked_params["lm_head"]["w"] = \
+        stacked_params["lm_head"]["w"].at[0].mul(1e4)
+    step = jax.jit(make_robust_serve_step(cfg, rcfg))
+    tok = jnp.zeros((batch,), jnp.int32)
+    fused, _ = step(stacked_params, caches, tok, jnp.int32(seq))
+    assert fused.shape == (batch, cfg.vocab_size)
+    # consensus must stay within the honest replicas' logit range
+    per_rep, _ = jax.vmap(
+        lambda p, c: MD.decode_fn(p, cfg, tok, c, jnp.int32(seq))
+    )(stacked_params, caches)
+    honest = np.asarray(per_rep, np.float32)[1:]
+    assert np.abs(np.asarray(fused, np.float32)).max() <= \
+        np.abs(honest).max() + 1e-3
+
+
 def test_per_worker_losses_reported():
     rcfg = RobustConfig(n_workers=N, f=F, gar="median")
     params = MD.init_model(KEY, DENSE)
