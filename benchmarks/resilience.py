@@ -1,90 +1,88 @@
-"""Lemma 1 / Definitions 2-3 validation: cone angle + leeway measurements.
+"""Resilience sweep: attack-schedule campaigns through the sim engine.
 
-Measures, over controlled gradient distributions:
-* empirical sin(angle(E[GAR], g)) vs the Lemma-1 bound η(n,f)·√d·σ/||g||;
-* the per-coordinate leeway of MULTI-BULYAN vs MULTI-KRUM under the
-  omniscient attack (the √d-leeway story of §II) across dimensions;
-* slowdown (Thm 1(ii)/2(iii)): variance of the aggregate vs averaging.
+Rewritten (PR 3) from standalone single-shot GAR measurements to full
+campaigns: every (rule × attack) cell runs a warmup -> attack switch
+scenario through ``repro.sim.run_campaign`` and reports the *post-switch*
+plan-level telemetry — honest-mean deviation, byzantine selection mass and
+loss progress — which is the paper's robustness story measured end to end
+(GAR + optimizer + schedule) instead of on isolated gradient stacks.
 
-CSV: name,us_per_call,derived (value column = measurement).
+CSV rows: ``resilience/<rule>/<attack>,<honest_dev_mean>,<derived>`` where
+the value column is the post-switch mean relative deviation of the
+aggregate from the honest mean (0 = oracle; averaging under attack is
+pulled ~z·f/n·σ/||g|| away).
+
+Persists ``BENCH_resilience.json``::
+
+    {"schema": "sim.resilience.v1",
+     "results": {rule: {attack: {"honest_dev_mean": .., "honest_dev_max": ..,
+                                 "byz_mass_mean": .., "final_loss": ..,
+                                 "loss_delta_post": ..}}}}
+
+``benchmarks/validate_bench.py`` gates this schema in CI.
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import List
 
-import numpy as np
-import jax
-import jax.numpy as jnp
+from repro.sim import run_campaign, switch_scenario
 
-from repro.core import attacks, gar, theory
+RULES = ("average", "median", "multi_krum", "multi_bulyan")
+ATTACKS = ("sign_flip", "little_is_enough:z=1.5", "little_is_enough:z=4.0",
+           "omniscient")
+SMOKE_RULES = ("average", "multi_bulyan")
+SMOKE_ATTACKS = ("little_is_enough:z=4.0",)
 
-N, F = 15, 3
-SIGMA = 0.05
-TRIALS = 30
+N, F = 11, 2
 
 
-def run(csv_rows: List[str]) -> None:
-    rng = np.random.default_rng(0)
+def run(csv_rows: List[str], *, smoke: bool = False,
+        json_path: str = "BENCH_resilience.json") -> None:
+    rules = SMOKE_RULES if smoke else RULES
+    attacks = SMOKE_ATTACKS if smoke else ATTACKS
+    pre, post = (8, 8) if smoke else (12, 16)
 
-    # ---- cone angle vs Lemma 1 bound
-    for d in (64, 512):
-        g = np.ones(d, np.float32)
-        bound = theory.sin_alpha(N, F, d, SIGMA, float(np.linalg.norm(g)))
-        for rule in ("multi_krum", "multi_bulyan"):
-            aggs = []
-            for t in range(TRIALS):
-                correct = (g[None] + SIGMA * rng.normal(size=(N - F, d))
-                           ).astype(np.float32)
-                byz = attacks.omniscient_reverse(jnp.asarray(correct), F,
-                                                 jax.random.key(t))
-                stack = jnp.concatenate(
-                    [byz.astype(jnp.float32), jnp.asarray(correct)], 0)
-                aggs.append(np.asarray(gar.aggregate(stack, F, rule)))
-            mean_agg = np.mean(aggs, axis=0)
-            cos = theory.cone_cosine(jnp.asarray(mean_agg), jnp.asarray(g))
-            sin_emp = float(np.sqrt(max(0.0, 1 - cos ** 2)))
-            ok = sin_emp <= bound
-            csv_rows.append(f"resilience/cone/{rule}/d={d},{sin_emp:.4f},"
-                            f"lemma1_bound={bound:.4f}_ok={int(ok)}")
+    results: dict = {}
+    for rule in rules:
+        results[rule] = {}
+        for attack in attacks:
+            sc = switch_scenario(rule, pre=pre, post=post, attack=attack,
+                                 n_workers=N, f=F)
+            r = run_campaign(sc)
+            ph_pre, ph_post = r.summary["phases"][0], r.summary["phases"][-1]
+            cell = {
+                "honest_dev_mean": round(ph_post["honest_dev_mean"], 6),
+                "honest_dev_max": round(ph_post["honest_dev_max"], 6),
+                "byz_mass_mean": round(ph_post["byz_mass_mean"], 6),
+                "final_loss": round(ph_post["loss_last"], 6),
+                # loss progress while under attack (negative = learning)
+                "loss_delta_post": round(
+                    ph_post["loss_last"] - ph_pre["loss_last"], 6),
+            }
+            results[rule][attack] = cell
+            csv_rows.append(
+                f"resilience/{rule}/{attack},"
+                f"{cell['honest_dev_mean']:.4f},"
+                f"byz_mass={cell['byz_mass_mean']:.4f}"
+                f"_dloss={cell['loss_delta_post']:+.3f}")
 
-    # ---- strong-resilience leeway: per-coordinate deviation across d
-    for rule in ("multi_krum", "multi_bulyan"):
-        gaps = []
-        for d in (64, 1024):
-            per = []
-            for t in range(10):
-                g = np.ones(d, np.float32)
-                correct = (g[None] + SIGMA * rng.normal(size=(N - F, d))
-                           ).astype(np.float32)
-                byz = attacks.omniscient_reverse(jnp.asarray(correct), F,
-                                                 jax.random.key(100 + t))
-                stack = jnp.concatenate(
-                    [byz.astype(jnp.float32), jnp.asarray(correct)], 0)
-                agg = np.asarray(gar.aggregate(stack, F, rule))
-                per.append(np.mean(np.min(np.abs(agg[None] - correct), 0)))
-            gaps.append(float(np.mean(per)))
-        growth = gaps[1] / max(gaps[0], 1e-12)
-        csv_rows.append(f"resilience/leeway_growth_64to1024/{rule},"
-                        f"{growth:.3f},sqrt_d_would_be_4.0")
-
-    # ---- slowdown: variance of aggregate / variance of averaging
-    d = 256
-    g = np.zeros(d, np.float32)
-    stacks = [jnp.asarray((g[None] + rng.normal(size=(N, d))).astype(np.float32))
-              for _ in range(120)]
-    var_avg = np.var(np.stack([np.asarray(gar.average(s)) for s in stacks]), 0).mean()
-    for rule, slow_fn in (("multi_krum", theory.multi_krum_slowdown),
-                          ("multi_bulyan", theory.multi_bulyan_slowdown)):
-        var = np.var(np.stack([np.asarray(gar.aggregate(s, F, rule))
-                               for s in stacks]), 0).mean()
-        # variance ratio ≈ n_used/n = predicted slowdown
-        emp = var_avg / var
-        pred = slow_fn(N, F)
-        csv_rows.append(f"resilience/slowdown/{rule},{emp:.3f},"
-                        f"theory={pred:.3f}")
+    payload = {
+        "schema": "sim.resilience.v1",
+        "protocol": {"n_workers": N, "f": F, "pre_steps": pre,
+                     "post_steps": post, "smoke": smoke,
+                     "scenario": "switch (none -> attack), tiny dense LM"},
+        "results": results,
+    }
+    tmp = json_path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, json_path)
 
 
 if __name__ == "__main__":
     rows: List[str] = []
-    run(rows)
+    run(rows, smoke=bool(int(os.environ.get("SMOKE", "0"))))
     print("\n".join(rows))

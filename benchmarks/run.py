@@ -7,12 +7,15 @@ per section).  Sections:
                 XLA vs Pallas vs fused apply substrates; persists the perf
                 trajectory to BENCH_agg_time.json
 * accuracy    — Fig 3: max top-1 accuracy per GAR × per-worker batch size
-* resilience  — Lemma 1 cone bound, Def-2 leeway scaling, Thm 1/2 slowdown
+* resilience  — rule × attack campaign sweep through the sim engine
+                (post-switch honest-mean deviation, byzantine selection
+                mass); persists BENCH_resilience.json
 * roofline    — §Roofline terms from the dry-run artifacts (if present)
 
 Env: BENCH_SECTIONS=agg_time,accuracy,... to select a subset.
-``--smoke`` shrinks agg_time to a single CI-sized grid point (the JSON is
-still written so the trajectory check has something to validate).
+``--smoke`` shrinks agg_time to a single CI-sized grid point and the
+resilience sweep to a 2-rule × 1-attack campaign grid (both JSONs are
+still written so the trajectory checks have something to validate).
 """
 from __future__ import annotations
 
@@ -31,9 +34,11 @@ def main() -> None:
     ap.add_argument("--bench-json", default=None,
                     help="agg_time JSON output path (default "
                          "BENCH_agg_time.json in the cwd)")
+    ap.add_argument("--resilience-json", default="BENCH_resilience.json",
+                    help="resilience sweep JSON output path")
     args = ap.parse_args()
 
-    default_sections = "agg_time" if args.smoke else \
+    default_sections = "agg_time,resilience" if args.smoke else \
         "agg_time,accuracy,resilience,roofline"
     sections = os.environ.get("BENCH_SECTIONS", default_sections).split(",")
     rows: List[str] = []
@@ -49,7 +54,8 @@ def main() -> None:
         print(f"# accuracy done ({time.time()-t0:.0f}s)", file=sys.stderr)
     if "resilience" in sections:
         from benchmarks import resilience
-        resilience.run(rows)
+        resilience.run(rows, smoke=args.smoke,
+                       json_path=args.resilience_json)
         print(f"# resilience done ({time.time()-t0:.0f}s)", file=sys.stderr)
     if "roofline" in sections:
         from benchmarks import roofline

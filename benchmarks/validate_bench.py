@@ -1,11 +1,19 @@
-"""Validate a BENCH_agg_time.json trajectory file (CI gate).
+"""Validate benchmark trajectory JSON files (CI gate).
 
-Usage: python -m benchmarks.validate_bench [BENCH_agg_time.json]
+Usage: python -m benchmarks.validate_bench [FILE ...]
 
-Fails (exit 1) when the file is missing, is not JSON, deviates from the
-``rule -> 'n=<n>,d=<d>' -> us_per_call`` schema, or lacks the three apply
-substrate rows (multi_bulyan[xla|pallas|fused]) the perf trajectory exists
-to track.
+Defaults to ``BENCH_agg_time.json``.  Two schemas are known, dispatched on
+the payload's ``schema`` field:
+
+* agg_time (``rule -> 'n=<n>,d=<d>' -> us_per_call``) — must contain the
+  three apply substrate rows (multi_bulyan[xla|pallas|fused]) the perf
+  trajectory exists to track;
+* resilience (``sim.resilience.v1``) — rule × attack campaign cells from
+  ``benchmarks/resilience.py``, each with finite honest-mean deviation,
+  byzantine selection mass in [0, 1] and a finite final loss.
+
+Fails (exit 1) when a file is missing, is not JSON, or deviates from its
+schema.
 """
 from __future__ import annotations
 
@@ -18,28 +26,18 @@ REQUIRED_ROWS = ("multi_bulyan[xla]", "multi_bulyan[pallas]",
                  "multi_bulyan[fused]")
 _KEY_RE = re.compile(r"^n=\d+,d=\d+$")
 
+AGG_TIME_SCHEMA = "rule -> 'n=<n>,d=<d>' -> us_per_call"
+RESILIENCE_SCHEMA = "sim.resilience.v1"
+RESILIENCE_FIELDS = ("honest_dev_mean", "honest_dev_max", "byz_mass_mean",
+                     "final_loss", "loss_delta_post")
+
 
 def _fail(msg: str) -> "list[str]":
     return [msg]
 
 
-def check(path: str) -> "list[str]":
-    """Return a list of problems (empty = valid)."""
-    try:
-        with open(path) as fh:
-            payload = json.load(fh)
-    except FileNotFoundError:
-        return _fail(f"{path}: missing — run `python -m benchmarks.run`")
-    except json.JSONDecodeError as e:
-        return _fail(f"{path}: not valid JSON ({e})")
+def _check_agg_time(path: str, results: dict) -> "list[str]":
     problems = []
-    if not isinstance(payload, dict) or "results" not in payload:
-        return _fail(f"{path}: top level must be an object with 'results'")
-    if "schema" not in payload:
-        problems.append("missing 'schema' field")
-    results = payload["results"]
-    if not isinstance(results, dict) or not results:
-        return _fail(f"{path}: 'results' must be a non-empty object")
     for rule, grid in results.items():
         if not isinstance(grid, dict) or not grid:
             problems.append(f"rule {rule!r}: empty or non-object grid")
@@ -58,16 +56,82 @@ def check(path: str) -> "list[str]":
     return problems
 
 
+def _check_resilience(path: str, results: dict) -> "list[str]":
+    problems = []
+    for rule, grid in results.items():
+        if not isinstance(grid, dict) or not grid:
+            problems.append(f"rule {rule!r}: empty or non-object attack grid")
+            continue
+        for attack, cell in grid.items():
+            if not isinstance(cell, dict):
+                problems.append(f"{rule}/{attack}: cell must be an object")
+                continue
+            missing = [f for f in RESILIENCE_FIELDS if f not in cell]
+            if missing:
+                problems.append(f"{rule}/{attack}: missing {missing}")
+            for f in RESILIENCE_FIELDS:
+                v = cell.get(f)
+                if v is None:
+                    continue
+                if not isinstance(v, (int, float)) or not math.isfinite(v):
+                    problems.append(f"{rule}/{attack}: {f} must be finite, "
+                                    f"got {v!r}")
+            bm = cell.get("byz_mass_mean")
+            if isinstance(bm, (int, float)) and not 0.0 <= bm <= 1.0:
+                problems.append(f"{rule}/{attack}: byz_mass_mean {bm} "
+                                "outside [0, 1]")
+            hd = cell.get("honest_dev_mean")
+            if isinstance(hd, (int, float)) and hd < 0.0:
+                problems.append(f"{rule}/{attack}: negative honest_dev_mean")
+    return problems
+
+
+def check(path: str) -> "list[str]":
+    """Return a list of problems (empty = valid)."""
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+    except FileNotFoundError:
+        return _fail(f"{path}: missing — run `python -m benchmarks.run`")
+    except json.JSONDecodeError as e:
+        return _fail(f"{path}: not valid JSON ({e})")
+    if not isinstance(payload, dict) or "results" not in payload:
+        return _fail(f"{path}: top level must be an object with 'results'")
+    problems = []
+    if "schema" not in payload:
+        problems.append(f"{path}: missing 'schema' field")
+    results = payload["results"]
+    if not isinstance(results, dict) or not results:
+        return _fail(f"{path}: 'results' must be a non-empty object")
+    schema = payload.get("schema")
+    if schema == RESILIENCE_SCHEMA:
+        problems += _check_resilience(path, results)
+    elif schema == AGG_TIME_SCHEMA or schema is None:
+        # None: legacy agg_time files predate the schema tag — still
+        # validate the grid, with the missing-field problem noted above
+        problems += _check_agg_time(path, results)
+    else:
+        problems.append(
+            f"{path}: unrecognised schema {schema!r}; known: "
+            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA]}")
+    return problems
+
+
 def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_agg_time.json"
-    problems = check(path)
-    if problems:
-        for p in problems:
-            print(f"BENCH check FAILED: {p}", file=sys.stderr)
+    paths = sys.argv[1:] or ["BENCH_agg_time.json"]
+    failed = False
+    for path in paths:
+        problems = check(path)
+        if problems:
+            failed = True
+            for p in problems:
+                print(f"BENCH check FAILED: {p}", file=sys.stderr)
+            continue
+        with open(path) as fh:
+            n_rows = len(json.load(fh)["results"])
+        print(f"{path}: OK ({n_rows} rules)")
+    if failed:
         sys.exit(1)
-    with open(path) as fh:
-        n_rows = len(json.load(fh)["results"])
-    print(f"{path}: OK ({n_rows} rules)")
 
 
 if __name__ == "__main__":

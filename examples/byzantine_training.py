@@ -1,35 +1,33 @@
-"""End-to-end byzantine-robust training driver (deliverable b).
+"""End-to-end byzantine-robust training campaign (deliverable b).
 
-Trains a decoder-only LM with n workers of which f behave arbitrarily
-(selectable attack), comparing a robust GAR against plain averaging.
+Runs an attack-schedule *campaign* through the ``repro.sim`` engine: a
+clean warmup phase, then the selected attack switches on mid-run, with
+plan-level telemetry showing which workers the rule selects and rejects
+and how far the aggregate strays from the honest mean.
 
 Presets:
-  smoke  ~1.5M params,  40 steps  (~1 min CPU)     [default]
-  10m    ~11M params,  200 steps  (~40 min CPU)
-  100m   ~124M params, 300 steps  (target-hardware scale; runs on CPU but
-                                   budget hours — use a TPU slice)
+  smoke  ~1.5M params,  20+20 steps  (~2 min CPU)     [default]
+  10m    ~11M params,  100+100 steps (~1 h CPU)
+  100m   ~124M params, 150+150 steps (target-hardware scale; use a TPU)
 
 Run:  PYTHONPATH=src python examples/byzantine_training.py --preset smoke \\
-          --attack little_is_enough --gar multi_bulyan
+          --attack little_is_enough:z=4.0 --gar multi_bulyan --compare-average
 """
 import argparse
-import time
 
-import jax
+import numpy as np
 
-from repro.configs.base import ArchConfig, RobustConfig
-from repro.data import lm_batches
-from repro.dist import make_train_step, split_workers
-from repro import models as MD
-from repro.optim import sgd, warmup_cosine
+from repro.configs.base import ArchConfig
+from repro.sim import (AttackPhase, AttackSchedule, DataConfig, Scenario,
+                       report, run_campaign)
 
 PRESETS = {
     "smoke": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
-                  d_ff=512, vocab_size=512, seq=64, steps=40),
+                  d_ff=512, vocab_size=512, seq=64, steps=20),
     "10m": dict(n_layers=4, d_model=320, n_heads=8, n_kv_heads=4,
-                d_ff=1280, vocab_size=2048, seq=128, steps=200),
+                d_ff=1280, vocab_size=2048, seq=128, steps=100),
     "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
-                 d_ff=3072, vocab_size=8192, seq=256, steps=300),
+                 d_ff=3072, vocab_size=8192, seq=256, steps=150),
 }
 
 
@@ -37,13 +35,21 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--preset", choices=PRESETS, default="smoke")
     ap.add_argument("--gar", default="multi_bulyan")
-    ap.add_argument("--attack", default="little_is_enough")
+    ap.add_argument("--attack", default="little_is_enough:z=4.0",
+                    help="attack spec for the second phase "
+                         "(adaptive_lie / adaptive_mimic also work)")
     ap.add_argument("--workers", type=int, default=11)
     ap.add_argument("--f", type=int, default=2)
     ap.add_argument("--per-worker-batch", type=int, default=2)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--trainer", default="stacked",
+                    choices=("stacked", "stream_block", "stream_global"))
+    ap.add_argument("--transform", action="append", default=[],
+                    help="e.g. worker_momentum:beta=0.9 (repeatable)")
+    ap.add_argument("--noniid-alpha", type=float, default=0.0)
+    ap.add_argument("--report", default=None, help="JSON campaign report")
     ap.add_argument("--compare-average", action="store_true",
-                    help="also train with plain averaging under the attack")
+                    help="also run the campaign with plain averaging")
     args = ap.parse_args()
 
     p = PRESETS[args.preset]
@@ -51,31 +57,35 @@ def main():
                      n_layers=p["n_layers"], d_model=p["d_model"],
                      n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
                      d_ff=p["d_ff"], vocab_size=p["vocab_size"])
-    key = jax.random.key(0)
+    schedule = AttackSchedule((
+        AttackPhase(steps=p["steps"], attack="none"),
+        AttackPhase(steps=p["steps"], attack=args.attack),
+    ))
     runs = [args.gar] + (["average"] if args.compare_average else [])
     for gar in runs:
-        rcfg = RobustConfig(n_workers=args.workers, f=args.f, gar=gar)
-        params = MD.init_model(key, cfg)
-        n_par = sum(x.size for x in jax.tree.leaves(params))
-        opt = sgd(momentum=0.9)
-        state = opt.init(params)
-        lr_fn = warmup_cosine(args.lr, warmup=p["steps"] // 10,
-                              total_steps=p["steps"])
-        step = jax.jit(make_train_step(cfg, rcfg, opt, lr_fn,
-                                       chunk_q=min(p["seq"], 512),
-                                       attack=args.attack))
-        data = lm_batches(cfg.vocab_size,
-                          args.workers * args.per_worker_batch, p["seq"])
-        print(f"[byz] gar={gar} params={n_par/1e6:.1f}M attack={args.attack} "
-              f"n={args.workers} f={args.f}")
-        t0 = time.time()
-        for i in range(p["steps"]):
-            batch = split_workers(next(data), args.workers)
-            params, state, m = step(params, state, batch,
-                                    jax.random.fold_in(key, i))
-            if i % max(p["steps"] // 10, 1) == 0 or i == p["steps"] - 1:
-                print(f"[byz]   step {i:4d} loss {float(m['loss']):.4f} "
-                      f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+        sc = Scenario(
+            name=f"byz-{args.preset}-{gar}", schedule=schedule,
+            n_workers=args.workers, f=args.f, gar=gar,
+            transforms=tuple(args.transform), trainer=args.trainer,
+            arch=cfg, data=DataConfig(noniid_alpha=args.noniid_alpha),
+            per_worker_batch=args.per_worker_batch, seq=p["seq"],
+            lr=args.lr)
+        print(f"[byz] gar={gar} schedule={schedule.describe()} "
+              f"n={args.workers} f={args.f} trainer={args.trainer}")
+        result = run_campaign(sc, verbose=True)
+        post = result.summary["phases"][-1]
+        sel = np.asarray(post["selection_mean"])
+        print(f"[byz]   under {post['attack']}: loss "
+              f"{post['loss_first']:.4f} -> {post['loss_last']:.4f}, "
+              f"honest_dev mean {post['honest_dev_mean']:.3f}, byzantine "
+              f"selection mass {post['byz_mass_mean']:.4f}")
+        print(f"[byz]   mean selection  byz={np.round(sel[:args.f], 3)} "
+              f"honest={np.round(sel[args.f:], 3)}")
+        print(f"[byz]   final suspicion {np.round(post['suspicion_last'], 2)}")
+        if args.report:
+            stem, dot, ext = args.report.rpartition(".")
+            path = f"{stem}.{gar}.{ext}" if dot else f"{args.report}.{gar}"
+            print(f"[byz]   report -> {report.write_json(path, result)}")
 
 
 if __name__ == "__main__":

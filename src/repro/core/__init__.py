@@ -41,5 +41,13 @@ from repro.core.robust import (  # noqa: F401
     tree_aggregate,
     tree_pairwise_sqdist,
 )
-from repro.core.attacks import ATTACKS, apply_attack, get_attack  # noqa: F401
+from repro.core.attacks import (  # noqa: F401
+    ADAPTIVE,
+    ATTACKS,
+    apply_attack,
+    get_adaptive,
+    get_attack,
+    is_adaptive,
+    parse_spec,
+)
 from repro.core import theory  # noqa: F401

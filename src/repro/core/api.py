@@ -200,6 +200,61 @@ class AggPlan:
     w_agr: Optional[Array] = None         # (theta, n) for kind == "bulyan"
     beta: int = 0
 
+    # ------------------------------------------------------------ telemetry
+    def selection_weights(self) -> Array:
+        """Per-worker selection mass as one convex (n,) fp32 vector.
+
+        * ``weighted`` — the plan's weight vector itself;
+        * ``bulyan``   — the mean over extraction rounds of the (θ, n)
+          aggregate-weight rows (each row convex, so the mean is too): the
+          mass each worker contributes to the values entering the coordinate
+          phase;
+        * ``mean`` / ``coordinate`` — uniform 1/n (every worker's value
+          participates; coordinate rules have no worker-level selection).
+        """
+        if self.kind == "weighted":
+            return self.weights.astype(jnp.float32)
+        if self.kind == "bulyan":
+            return jnp.mean(self.w_agr.astype(jnp.float32), axis=0)
+        return jnp.full((self.n,), 1.0 / self.n, jnp.float32)
+
+    def diagnostics(self, stats: Optional[AggStats] = None) -> Dict[str, Array]:
+        """Jit-safe per-round diagnostics of *why* the plan chose what it did.
+
+        Returns a dict of fp32 arrays whose shapes depend only on (n, f):
+
+        * ``selection``      — convex (n,) selection mass per worker;
+        * ``byz_mass``       — scalar: mass on the first f rows (byzantine
+          rows come first by the ``inject_byzantine`` convention, so under
+          attack this is the adversary's captured share);
+        * ``score_spectrum`` — (n,) ascending Krum scores (needs ``stats``
+          with the distance matrix; -inf-free, +inf for dead entries);
+        * ``score_gap``      — scalar: min score among zero-mass workers
+          minus max score among selected ones — the margin by which the
+          selection boundary held (0 when everyone is selected);
+        * ``mean_dist``      — scalar: mean off-diagonal pairwise sq-dist.
+
+        Score fields are omitted when ``stats``/``stats.dists`` is absent.
+        The suspicion EMA built on these lives in ``repro.sim.telemetry``
+        (it needs cross-step state a single plan does not have).
+        """
+        sel = self.selection_weights()
+        byz = jnp.sum(sel[: self.f]) if self.f else jnp.zeros((), jnp.float32)
+        out: Dict[str, Array] = {"selection": sel, "byz_mass": byz}
+        if stats is not None and stats.dists is not None:
+            scores = G.krum_scores(stats.dists, self.f)
+            picked = sel > 0.0
+            sel_max = jnp.max(jnp.where(picked, scores, -jnp.inf))
+            rej_min = jnp.min(jnp.where(picked, jnp.inf, scores))
+            gap = jnp.where(jnp.all(picked), 0.0, rej_min - sel_max)
+            n = stats.dists.shape[0]
+            off = jnp.sum(stats.dists) / (n * (n - 1)) if n > 1 else \
+                jnp.zeros((), jnp.float32)
+            out.update(score_spectrum=jnp.sort(scores),
+                       score_gap=gap.astype(jnp.float32),
+                       mean_dist=off.astype(jnp.float32))
+        return out
+
 
 # --------------------------------------------------------------- leaf math
 def _leaf2d(x: Array) -> Array:

@@ -7,16 +7,32 @@ adversary, as in the paper's worst-case analysis).
 
 The stack handed to the GAR is ``concat([G_byz, G_correct])`` by convention
 (GARs are permutation-invariant — property-tested).
+
+Attacks are addressed by *spec string*: a bare registry name
+(``"little_is_enough"``) or a name with keyword overrides
+(``"little_is_enough:z=2.0"``, ``"sign_flip:scale=5"``) — campaign schedules
+(``repro.sim``) rely on this to vary attack parameters per phase without new
+registry entries.  :func:`get_attack` resolves either form.
+
+Adaptive attacks (``ADAPTIVE`` registry) additionally carry a small state
+pytree across steps and receive *plan feedback* — the previous round's
+per-worker selection weights — so they can probe the defence: the adaptive
+little-is-enough tunes its z to sit just under the rejection threshold, the
+adaptive mimic copies whichever honest worker the plan trusts most.  The
+stacked trainer threads their state (``dist.trainer.make_train_step``).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+import dataclasses
+import inspect
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
 Attack = Callable[[Array, int, Array], Array]
+PyTree = Any
 
 
 def no_attack(G: Array, f: int, key: Array) -> Array:
@@ -92,11 +108,60 @@ ATTACKS: Dict[str, Attack] = {
 }
 
 
-def get_attack(name: str) -> Attack:
+def parse_spec(spec: str) -> Tuple[str, Dict[str, float]]:
+    """Split ``"name:k1=v1,k2=v2"`` into ``(name, {k1: v1, ...})``.
+
+    Values are parsed as floats (every attack/transform knob is numeric).
+    A bare name parses to ``(name, {})``.
+    """
+    name, _, rest = spec.partition(":")
+    kwargs: Dict[str, float] = {}
+    for item in filter(None, rest.split(",")):
+        k, eq, v = item.partition("=")
+        if not eq or not k:
+            raise ValueError(
+                f"bad spec item {item!r} in {spec!r} (want key=value)")
+        try:
+            kwargs[k] = float(v)
+        except ValueError:
+            raise ValueError(
+                f"non-numeric value {v!r} for {k!r} in spec {spec!r}") from None
+    return name, kwargs
+
+
+def _bind_kwargs(fn: Callable, name: str, kwargs: Dict[str, float]) -> Attack:
+    """Validate override names against the attack's signature, then bind."""
+    if not kwargs:
+        return fn
+    params = inspect.signature(fn).parameters
+    tunable = {k for k, p in params.items() if p.default is not p.empty}
+    unknown = set(kwargs) - tunable
+    if unknown:
+        raise ValueError(
+            f"attack {name!r} has no parameter(s) {sorted(unknown)}; "
+            f"tunable: {sorted(tunable)}")
+
+    def bound(G: Array, f: int, key: Array) -> Array:
+        return fn(G, f, key, **kwargs)
+
+    bound.__name__ = name
+    return bound
+
+
+def get_attack(spec: str) -> Attack:
+    """Resolve an attack spec (``"name"`` or ``"name:k=v,..."``) to a callable.
+
+    Bare names return the registry function itself (back-compat); specs with
+    overrides return a wrapper with the kwargs bound and validated.
+    """
+    name, kwargs = parse_spec(spec)
     try:
-        return ATTACKS[name]
+        fn = ATTACKS[name]
     except KeyError:
-        raise KeyError(f"unknown attack {name!r}; available: {sorted(ATTACKS)}") from None
+        raise KeyError(
+            f"unknown attack {name!r}; available: {sorted(ATTACKS)} "
+            f"(adaptive: {sorted(ADAPTIVE)})") from None
+    return _bind_kwargs(fn, name, kwargs)
 
 
 def apply_attack(G_correct: Array, f: int, name: str, key: Array) -> Array:
@@ -105,3 +170,128 @@ def apply_attack(G_correct: Array, f: int, name: str, key: Array) -> Array:
         return G_correct
     byz = get_attack(name)(G_correct, f, key)
     return jnp.concatenate([byz.astype(G_correct.dtype), G_correct], axis=0)
+
+
+# --------------------------------------------------------------------------
+# adaptive (plan-feedback) attacks
+#
+# Signature contract: ``init_state(n, f)`` returns a small jit-carryable
+# pytree of fp32 scalars/vectors; ``propose(G, f, key, state)`` maps the
+# (n-f, d) correct stack to (f, d) proposals exactly like a static attack;
+# ``update(state, selection)`` consumes the aggregation plan's per-worker
+# selection weights (convex (n,) vector, byzantine rows first) *after* the
+# round and returns the next state.  All three are pure and shape-static so
+# the trainer can carry the state through ``lax.scan``.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdaptiveAttack:
+    name: str = ""
+
+    def init_state(self, n: int, f: int) -> PyTree:
+        raise NotImplementedError
+
+    def propose(self, G: Array, f: int, key: Array, state: PyTree) -> Array:
+        raise NotImplementedError
+
+    def update(self, state: PyTree, selection: Array) -> PyTree:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveLittleIsEnough(AdaptiveAttack):
+    """Little-is-enough with a feedback-tuned z (Baruch et al. + probing).
+
+    While the byzantine rows keep winning at least half their uniform share
+    of the selection mass, push z up by ``up`` (more damage); once the plan
+    starts rejecting them, back off by ``down`` until re-admitted.  The z
+    trajectory hugs the defence's rejection threshold — the worst case the
+    static attack only hits when its fixed z is hand-tuned.
+    """
+
+    name: str = "adaptive_lie"
+    z0: float = 1.0
+    up: float = 1.15
+    down: float = 0.7
+    z_min: float = 0.25
+    z_max: float = 16.0
+
+    def init_state(self, n: int, f: int) -> PyTree:
+        return {"z": jnp.asarray(self.z0, jnp.float32),
+                "share": jnp.asarray(f / max(n, 1), jnp.float32)}
+
+    def propose(self, G: Array, f: int, key: Array, state: PyTree) -> Array:
+        del key
+        mu = jnp.mean(G, axis=0)
+        sd = jnp.std(G, axis=0)
+        g = mu - state["z"] * sd
+        return jnp.broadcast_to(g, (f,) + g.shape).astype(G.dtype)
+
+    def update(self, state: PyTree, selection: Array) -> PyTree:
+        # byzantine rows come first by the inject_byzantine convention; the
+        # caller passes the full (n,) convex selection vector
+        n = selection.shape[0]
+        f_rows = jnp.maximum(
+            jnp.round(state["share"] * n).astype(jnp.int32), 1)
+        byz_mass = jnp.sum(
+            jnp.where(jnp.arange(n) < f_rows, selection, 0.0))
+        selected = byz_mass >= 0.5 * state["share"]
+        z = jnp.where(selected, state["z"] * self.up, state["z"] * self.down)
+        return {"z": jnp.clip(z, self.z_min, self.z_max),
+                "share": state["share"]}
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveMimic(AdaptiveAttack):
+    """Mimic steered by the plan: copy the most-trusted honest worker.
+
+    Tracks an EMA of each honest worker's selection weight and clones the
+    current argmax — concentrating the byzantine mass on the gradient the
+    defence demonstrably favours, which skews krum-family selection without
+    ever tripping a distance test (Karimireddy et al. 2022 style).
+    """
+
+    name: str = "adaptive_mimic"
+    ema: float = 0.9
+
+    def init_state(self, n: int, f: int) -> PyTree:
+        return {"trust": jnp.zeros((n - f,), jnp.float32)}
+
+    def propose(self, G: Array, f: int, key: Array, state: PyTree) -> Array:
+        del key
+        target = jnp.argmax(state["trust"])
+        g = jax.lax.dynamic_index_in_dim(G, target, axis=0, keepdims=False)
+        return jnp.broadcast_to(g, (f,) + g.shape).astype(G.dtype)
+
+    def update(self, state: PyTree, selection: Array) -> PyTree:
+        n_honest = state["trust"].shape[0]
+        honest_sel = selection[selection.shape[0] - n_honest:]
+        trust = self.ema * state["trust"] + (1.0 - self.ema) * honest_sel
+        return {"trust": trust}
+
+
+ADAPTIVE: Dict[str, Callable[..., AdaptiveAttack]] = {
+    "adaptive_lie": AdaptiveLittleIsEnough,
+    "adaptive_mimic": AdaptiveMimic,
+}
+
+
+def is_adaptive(spec: str) -> bool:
+    return parse_spec(spec)[0] in ADAPTIVE
+
+
+def get_adaptive(spec: str) -> AdaptiveAttack:
+    """Resolve an adaptive attack spec to a configured instance."""
+    name, kwargs = parse_spec(spec)
+    try:
+        cls = ADAPTIVE[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown adaptive attack {name!r}; "
+            f"available: {sorted(ADAPTIVE)}") from None
+    fields = {fl.name for fl in dataclasses.fields(cls) if fl.name != "name"}
+    unknown = set(kwargs) - fields
+    if unknown:
+        raise ValueError(
+            f"adaptive attack {name!r} has no parameter(s) {sorted(unknown)}; "
+            f"tunable: {sorted(fields)}")
+    return cls(**kwargs)

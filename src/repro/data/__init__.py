@@ -1,6 +1,8 @@
 """Data pipeline (synthetic, deterministic — no external datasets in-container)."""
 from repro.data.synthetic import (  # noqa: F401
     classification_batches,
+    dirichlet_mixture,
     lm_batches,
     make_lm_batch,
+    make_noniid_lm_batch,
 )

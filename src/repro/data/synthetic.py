@@ -59,6 +59,57 @@ def lm_batches(vocab: int, batch: int, seq: int, *, seed: int = 0
         step += 1
 
 
+# --------------------------------------------------------------- non-IID
+def dirichlet_mixture(key: Array, n_workers: int, n_domains: int,
+                      alpha: float) -> Array:
+    """Per-worker Dirichlet(α) mixture over data domains -> (n_workers, K).
+
+    Small α concentrates each worker on few domains (strong heterogeneity,
+    the regime where coordinate-wise rules degrade — Yin et al. 2018);
+    α → ∞ recovers i.i.d. workers.  Rows sum to 1.
+    """
+    if n_domains < 1:
+        raise ValueError(f"n_domains must be >= 1, got {n_domains}")
+    if alpha <= 0:
+        raise ValueError(f"alpha must be positive, got {alpha}")
+    return jax.random.dirichlet(
+        key, jnp.full((n_domains,), alpha, jnp.float32), (n_workers,))
+
+
+def make_noniid_lm_batch(key: Array, vocab: int, n_workers: int,
+                         per_worker: int, seq: int, mixture: Array,
+                         seed: int = 1234) -> Dict[str, Array]:
+    """Worker-heterogeneous LM batch: ``(n_workers*per_worker, S)`` tokens.
+
+    Domain k is its own bigram automaton (table seeded ``seed + k``); each
+    of worker w's rows samples a domain from ``mixture[w]`` and walks that
+    domain's automaton.  Row-major worker order, so ``split_workers`` with
+    the same ``n_workers`` recovers the per-worker batches.  Deterministic
+    in ``(key, mixture, seed)`` and jit-friendly (tables are constants).
+    """
+    n_domains = mixture.shape[1]
+    if mixture.shape[0] != n_workers:
+        raise ValueError(
+            f"mixture rows ({mixture.shape[0]}) != n_workers ({n_workers})")
+    tables = jnp.asarray(np.stack(
+        [_bigram_table(vocab, seed + k) for k in range(n_domains)]))
+    rows = n_workers * per_worker
+    kd, k0, k1 = jax.random.split(key, 3)
+    row_logits = jnp.repeat(jnp.log(mixture + 1e-20), per_worker, axis=0)
+    domains = jax.random.categorical(kd, row_logits, axis=-1)      # (rows,)
+    start = jax.random.randint(k0, (rows,), 0, vocab, dtype=jnp.int32)
+    choices = jax.random.randint(k1, (rows, seq), 0, tables.shape[2],
+                                 dtype=jnp.int32)
+
+    def step(tok, choice):
+        nxt = tables[domains, tok, choice]
+        return nxt, nxt
+
+    _, seqs = jax.lax.scan(step, start, choices.T)
+    toks = jnp.concatenate([start[:, None], seqs.T], axis=1)       # (rows, S+1)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
 def classification_batches(d_in: int, n_classes: int, batch: int, *,
                            seed: int = 0, noise: float = 1.0,
                            center_seed: int = 7777

@@ -29,14 +29,15 @@ VMEM via ``fused_select`` — see DESIGN.md §7 for the fused-apply contract.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, RobustConfig
 from repro.core import api
-from repro.dist.trainer import inject_byzantine
+from repro.dist.trainer import (honest_dev_accumulate, honest_dev_finalize,
+                                inject_byzantine)
 from repro import models as MD
 from repro.optim.optimizers import Optimizer
 
@@ -60,10 +61,21 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                               opt: Optimizer, lr_fn, *,
                               scope: str = "block", window: int = 0,
                               chunk_q: int = 1024, attack: str = "none",
-                              coord_chunk: int = 0,
+                              attack_f: Optional[int] = None,
+                              coord_chunk: int = 0, telemetry: bool = False,
                               transforms: Sequence[api.Transform] = (),
                               boundary_spec=None, dx_spec=None):
     """Build the streaming-trainer step function (same signature as stacked).
+
+    ``attack`` accepts the same spec strings as the stacked trainer
+    (``"little_is_enough:z=2.0"``); adaptive attacks are rejected — their
+    plan feedback needs the full-stack step structure.  ``attack_f``
+    (default ``rcfg.f``) is the number of rows the attack controls.
+
+    With ``telemetry`` the metrics gain the same ``"telemetry"`` sub-dict as
+    the stacked trainer; under ``scope="block"`` the plan diagnostics are
+    averaged over block plans (selection is per-block there — exactly the
+    degradation the diagnostics exist to show).
 
     ``dx_spec`` (a PartitionSpec for the per-block stacked gradients) is
     accepted for the dry-run builder's mesh plumbing; it only matters when
@@ -75,9 +87,18 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
         raise NotImplementedError(
             "pre-aggregation transforms need the full stack; use the "
             "stacked trainer (dist.make_train_step) with transforms")
+    from repro.core import attacks as ATK
+    if isinstance(attack, str) and ATK.is_adaptive(attack):
+        raise NotImplementedError(
+            "adaptive attacks need the stacked trainer's plan-feedback "
+            "state; use dist.make_train_step")
     del dx_spec
     rcfg.validate()
     aggregator = api.get_aggregator(rcfg.gar)
+    f_eff = rcfg.f if attack_f is None else attack_f
+    if not 0 <= f_eff <= rcfg.f:
+        raise ValueError(
+            f"attack_f must be in [0, f] (attack_f={f_eff}, f={rcfg.f})")
 
     def worker_loss(p, wb):
         return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
@@ -111,13 +132,16 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             off += len(jax.tree.leaves(sub))
 
         plan = None
-        if scope == "global" and aggregator.needs_dists:
+        global_diag = None
+        if scope == "global" and (aggregator.needs_dists or telemetry):
             # pass 1: accumulate the global (n, n) matrix block by block;
             # raw per-leaf contributions in global leaf order, finalised
             # once — the identical float summation the stacked path does.
+            # (telemetry also routes distance-free rules through here: the
+            # score spectrum is part of the campaign trace schema.)
             total = jnp.zeros((rcfg.n_workers, rcfg.n_workers), jnp.float32)
             for k in blocks:
-                g = inject_byzantine(block_grads(params, k), rcfg.f, attack,
+                g = inject_byzantine(block_grads(params, k), f_eff, attack,
                                      key, leaf_offset=offsets[k])
                 for leaf in jax.tree.leaves(g):
                     total = total + api.leaf_sqdist_contrib(
@@ -126,6 +150,8 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                                  dists=api.finalize_dists(total))
             aggregator.validate(stats.n, stats.f)
             plan = aggregator.plan(stats)
+            if telemetry:
+                global_diag = plan.diagnostics(stats)
             # The barrier is what makes this a *streaming* trainer once
             # compiled: pass-2 recomputes byte-identical per-block gradient
             # subgraphs, and without it XLA CSE would dedupe them against
@@ -144,22 +170,31 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
         # block's value_and_grad also yields the per-worker loss metrics
         agg_blocks = {}
         losses = None
+        block_diags = []
+        dev_sq = jnp.zeros((), jnp.float32)
+        ref_sq = jnp.zeros((), jnp.float32)
         for k in blocks:
             if losses is None:
                 losses, g = block_grads(params, k, with_loss=True)
             else:
                 g = block_grads(params, k)
-            g = inject_byzantine(g, rcfg.f, attack, key,
+            g = inject_byzantine(g, f_eff, attack, key,
                                  leaf_offset=offsets[k])
             block_plan = plan
-            if block_plan is None:   # scope == "block" with a distance rule
+            if block_plan is None or (telemetry and scope == "block"):
                 stats_k = api.compute_stats(
                     g, rcfg.f, needs_dists=True, use_pallas=rcfg.use_pallas)
-                aggregator.validate(stats_k.n, stats_k.f)
-                block_plan = aggregator.plan(stats_k)
+                if block_plan is None:  # scope == "block", distance rule
+                    aggregator.validate(stats_k.n, stats_k.f)
+                    block_plan = aggregator.plan(stats_k)
+                if telemetry:
+                    block_diags.append(block_plan.diagnostics(stats_k))
             agg_blocks[k] = aggregator.apply(
                 block_plan, g, coord_chunk=coord_chunk,
                 use_pallas=rcfg.use_pallas)
+            if telemetry:
+                dev_sq, ref_sq = honest_dev_accumulate(
+                    dev_sq, ref_sq, agg_blocks[k], g, f_eff)
 
         if block_keys is None:
             agg = agg_blocks[None]
@@ -176,6 +211,19 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             "lr": jnp.asarray(lr, jnp.float32),
             "agg_grad_norm": gnorm,
         }
+        if telemetry:
+            if global_diag is not None:
+                diag = dict(global_diag)
+            else:
+                # scope == "block": selection is per-block; report the mean
+                # over block plans (the per-block degradation is the point)
+                diag = {kk: jnp.mean(jnp.stack([d[kk] for d in block_diags]),
+                                     axis=0)
+                        for kk in block_diags[0]}
+            # captured mass over the rows the attack actually holds (f_eff)
+            diag["byz_mass"] = jnp.sum(diag["selection"][:f_eff])
+            diag["honest_dev"] = honest_dev_finalize(dev_sq, ref_sq)
+            metrics["telemetry"] = diag
         return new_params, new_opt, metrics
 
     return step

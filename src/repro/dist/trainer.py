@@ -15,11 +15,13 @@ One train step (DESIGN.md §3):
 
 The returned step has signature ``(params, opt_state, batch, key) ->
 (params, opt_state, metrics)``; when a stateful transform is configured the
-state slot instead carries ``(opt_state, transform_states)`` — seed it with
-:func:`init_train_state`.
+state slot instead carries ``(opt_state, transform_states)``, and an
+adaptive attack adds its plan-feedback state as a third slot — seed either
+layout with :func:`init_train_state`.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -49,7 +51,8 @@ def split_workers(batch: PyTree, n_workers: int) -> PyTree:
 
 
 # ------------------------------------------------------------------ attacks
-def _attack_leaf(name: str, leaf: jax.Array, f: int, key) -> jax.Array:
+def _attack_leaf(attack_fn: ATK.Attack, leaf: jax.Array, f: int,
+                 key) -> jax.Array:
     """Replace the first f worker rows of one leaf with attack proposals.
 
     The attack sees the (n-f, numel) stack of *correct* gradients (rows
@@ -57,14 +60,19 @@ def _attack_leaf(name: str, leaf: jax.Array, f: int, key) -> jax.Array:
     """
     correct = leaf[f:]
     flat = correct.reshape((correct.shape[0], -1)).astype(jnp.float32)
-    byz = ATK.get_attack(name)(flat, f, key)
+    byz = attack_fn(flat, f, key)
     byz = byz.reshape((f,) + leaf.shape[1:]).astype(leaf.dtype)
     return jnp.concatenate([byz, correct], axis=0)
 
 
-def inject_byzantine(grads: PyTree, f: int, attack: str, key,
+def inject_byzantine(grads: PyTree, f: int, attack, key,
                      *, leaf_offset: int = 0) -> PyTree:
     """Overwrite the first ``f`` worker rows of every leaf with the attack.
+
+    ``attack`` is an attack spec string — a bare name or ``"name:k=v,..."``
+    with parameter overrides (``core.attacks.get_attack``) — or an already
+    resolved ``(G, f, key) -> (f, d)`` callable (the adaptive-attack path
+    passes a state-closed closure).
 
     Per-leaf keys are ``fold_in(key, leaf_offset + leaf_index)`` so that a
     streaming trainer processing blocks of leaves reproduces the stacked
@@ -73,9 +81,10 @@ def inject_byzantine(grads: PyTree, f: int, attack: str, key,
     """
     if f == 0:
         return grads
+    attack_fn = ATK.get_attack(attack) if isinstance(attack, str) else attack
     leaves, treedef = jax.tree.flatten(grads)
     out = [
-        _attack_leaf(attack, leaf, f,
+        _attack_leaf(attack_fn, leaf, f,
                      jax.random.fold_in(key, leaf_offset + i))
         for i, leaf in enumerate(leaves)
     ]
@@ -83,46 +92,117 @@ def inject_byzantine(grads: PyTree, f: int, attack: str, key,
 
 
 # ------------------------------------------------------------ state packing
-def _split_state(state, stateful: bool) -> Tuple[OptState, Tuple]:
+# Three layouts, chosen by flags both the packer and the step derive from
+# the same (transforms, attack) configuration:
+#   plain                      -> opt_state
+#   stateful transforms        -> (opt_state, tstates)
+#   adaptive attack (either)   -> (opt_state, tstates, attack_state)
+# split/merge are the ONLY readers/writers of this layout — external
+# drivers (repro.sim.engine) must go through them, never restructure the
+# tuple themselves.
+def split_train_state(state, stateful: bool, adaptive: bool = False):
+    """Unpack a trainer state into (opt_state, tstates, attack_state)."""
+    if adaptive:
+        return state
     if stateful:
         opt_state, tstates = state
-        return opt_state, tstates
-    return state, ()
+        return opt_state, tstates, None
+    return state, (), None
 
 
-def _merge_state(opt_state: OptState, tstates: Tuple, stateful: bool):
+def merge_train_state(opt_state: OptState, tstates: Tuple, astate,
+                      stateful: bool, adaptive: bool = False):
+    """Pack (opt_state, tstates, attack_state) into the trainer layout."""
+    if adaptive:
+        return (opt_state, tstates, astate)
     return (opt_state, tstates) if stateful else opt_state
 
 
 def init_train_state(opt: Optimizer, params: PyTree,
                      transforms: Sequence[api.Transform] = (),
-                     n_workers: int = 0):
-    """Initial trainer state: OptState, or (OptState, transform states).
+                     n_workers: int = 0, attack: str = "none",
+                     attack_f: int = 0):
+    """Initial trainer state for :func:`make_train_step`.
 
-    Stateful transforms (worker momentum) track one slot per worker — their
-    state mirrors the *stacked* gradient shapes, hence ``n_workers``.
+    Plain runs get a bare ``OptState``; stateful transforms (worker
+    momentum) add a per-worker state tuple mirroring the *stacked* gradient
+    shapes (hence ``n_workers``); an adaptive attack spec (``adaptive_lie``,
+    ``adaptive_mimic`` — ``core.attacks.ADAPTIVE``) adds the attack's
+    feedback state as a third slot, seeded for ``attack_f`` byzantine rows.
     """
     opt_state = opt.init(params)
-    if not any(t.stateful for t in transforms):
+    stateful = any(t.stateful for t in transforms)
+    adaptive = isinstance(attack, str) and ATK.is_adaptive(attack)
+    if not stateful and not adaptive:
         return opt_state
     if n_workers <= 0:
-        raise ValueError("stateful transforms need n_workers > 0")
-    stacked = jax.tree.map(
-        lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, p.dtype),
-        params)
-    return opt_state, api.init_transform_states(transforms, stacked)
+        raise ValueError("stateful transforms / adaptive attacks need "
+                         "n_workers > 0")
+    tstates: Tuple = ()
+    if stateful:
+        stacked = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, p.dtype),
+            params)
+        tstates = api.init_transform_states(transforms, stacked)
+    if not adaptive:
+        return opt_state, tstates
+    astate = ATK.get_adaptive(attack).init_state(n_workers, attack_f)
+    return opt_state, tstates, astate
 
 
 # ------------------------------------------------------------------ trainer
+# The honest-mean deviation telemetry is shared between the stacked and
+# streaming trainers (accumulate per block, finalise once) so the metric is
+# numerically identical across substrates — campaign traces must be
+# trainer-comparable.
+def honest_dev_accumulate(dev_sq: jax.Array, ref_sq: jax.Array,
+                          agg: PyTree, grads: PyTree, f_eff: int):
+    """Add one (sub)tree's ||agg - honest_mean||² / ||honest_mean||² terms.
+
+    ``grads`` is the stack the aggregator consumed (post-injection,
+    post-transform); rows ``f_eff:`` of every leaf are the honest workers'
+    values, so this measures the distance to the oracle that knew who was
+    honest.
+    """
+    for a, g in zip(jax.tree.leaves(agg), jax.tree.leaves(grads)):
+        hm = jnp.mean(g[f_eff:].astype(jnp.float32), axis=0)
+        dev_sq = dev_sq + jnp.sum((a.astype(jnp.float32) - hm) ** 2)
+        ref_sq = ref_sq + jnp.sum(hm ** 2)
+    return dev_sq, ref_sq
+
+
+def honest_dev_finalize(dev_sq: jax.Array, ref_sq: jax.Array) -> jax.Array:
+    return jnp.sqrt(dev_sq) / (jnp.sqrt(ref_sq) + 1e-12)
+
+
+def _honest_mean_dev(agg: PyTree, grads: PyTree, f_eff: int) -> jax.Array:
+    """Relative l2 deviation of the aggregate from the honest-row mean."""
+    zero = jnp.zeros((), jnp.float32)
+    return honest_dev_finalize(
+        *honest_dev_accumulate(zero, zero, agg, grads, f_eff))
+
+
 def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                     lr_fn, *, window: int = 0, chunk_q: int = 1024,
-                    attack: str = "none",
+                    attack: str = "none", attack_f: Optional[int] = None,
                     transforms: Sequence[api.Transform] = (),
-                    coord_chunk: int = 0,
+                    coord_chunk: int = 0, telemetry: bool = False,
                     grad_specs: Optional[PyTree] = None,
                     boundary_spec=None,
                     shard_map_mesh=None, shard_map_axes=None):
     """Build the stacked-trainer step function (jit it yourself).
+
+    ``attack`` is a spec string (``"little_is_enough:z=2.0"`` — see
+    ``core.attacks.get_attack``); adaptive specs (``adaptive_lie``, …) make
+    the state slot carry the attack's feedback state (seed it with
+    :func:`init_train_state`).  ``attack_f`` is the number of rows the
+    attack actually controls this phase (defaults to ``rcfg.f``, may be
+    lower — the rule keeps defending against the full contract ``f``).
+
+    With ``telemetry`` the metrics dict gains a ``"telemetry"`` sub-dict of
+    plan diagnostics (``AggPlan.diagnostics``: per-worker selection mass,
+    byzantine captured mass, Krum score spectrum, selection-boundary gap)
+    plus ``honest_dev`` — campaign traces in ``repro.sim`` scan over these.
 
     ``grad_specs``/``shard_map_mesh``: optional PartitionSpec pytree pinned
     onto the stacked gradients (the transposed grad-stack layout the
@@ -134,16 +214,29 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     aggregator = api.get_aggregator(rcfg.gar)
     transforms = tuple(transforms)
     stateful = any(t.stateful for t in transforms)
+    f_eff = rcfg.f if attack_f is None else attack_f
+    if not 0 <= f_eff <= rcfg.f:
+        raise ValueError(
+            f"attack_f must be in [0, f] (attack_f={f_eff}, f={rcfg.f})")
+    adaptive = ATK.get_adaptive(attack) if ATK.is_adaptive(attack) else None
+    # telemetry wants the score spectrum even for distance-free rules
+    # (average / median campaigns report why they would have been rejected)
+    needs_dists = aggregator.needs_dists or telemetry
 
     def worker_loss(p, wb):
         return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
                           boundary_spec=boundary_spec)
 
     def step(params, state, batch, key):
-        opt_state, tstates = _split_state(state, stateful)
+        opt_state, tstates, astate = split_train_state(
+            state, stateful, adaptive is not None)
         losses, grads = jax.vmap(
             lambda wb: jax.value_and_grad(worker_loss)(params, wb))(batch)
-        grads = inject_byzantine(grads, rcfg.f, attack, key)
+        if adaptive is not None:
+            atk = functools.partial(adaptive.propose, state=astate)
+        else:
+            atk = attack
+        grads = inject_byzantine(grads, f_eff, atk, key)
         if grad_specs is not None and shard_map_mesh is not None:
             from jax.sharding import NamedSharding
             grads = jax.lax.with_sharding_constraint(
@@ -157,8 +250,7 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
         grads, tstates = api.apply_transforms(
             grads, transforms, tstates or None, key=tkey,
             use_pallas=rcfg.use_pallas)
-        stats = api.compute_stats(grads, rcfg.f,
-                                  needs_dists=aggregator.needs_dists,
+        stats = api.compute_stats(grads, rcfg.f, needs_dists=needs_dists,
                                   use_pallas=rcfg.use_pallas)
         # guard against an out-of-band worker count: stats.n comes from the
         # actual batch split, which RobustConfig's construction-time check
@@ -168,6 +260,8 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
         plan = aggregator.plan(stats)
         agg = aggregator.apply(plan, grads, coord_chunk=coord_chunk,
                                use_pallas=rcfg.use_pallas)
+        if adaptive is not None:
+            astate = adaptive.update(astate, plan.selection_weights())
         lr = lr_fn(opt_state.step)
         new_params, new_opt = opt.update(agg, opt_state, params, lr)
         gnorm = jnp.sqrt(sum(
@@ -178,6 +272,16 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
             "lr": jnp.asarray(lr, jnp.float32),
             "agg_grad_norm": gnorm,
         }
-        return new_params, _merge_state(new_opt, tstates, stateful), metrics
+        if telemetry:
+            diag = plan.diagnostics(stats)
+            # count captured mass over the rows the attack actually holds
+            # this phase (f_eff), not the rule's contract f
+            diag["byz_mass"] = jnp.sum(diag["selection"][:f_eff])
+            diag["honest_dev"] = _honest_mean_dev(agg, grads, f_eff)
+            metrics["telemetry"] = diag
+        return (new_params,
+                merge_train_state(new_opt, tstates, astate, stateful,
+                                  adaptive is not None),
+                metrics)
 
     return step

@@ -1,0 +1,196 @@
+"""Byzantine campaign simulator driver (repro.sim).
+
+Runs a declarative attack-schedule campaign through the sim engine and
+writes a JSON/CSV report with plan-level telemetry (per-worker selection,
+Krum score spectra, honest-mean deviation, suspicion EMA).
+
+Phases are ``STEPS=ATTACK_SPEC`` (attack specs take parameter overrides
+after a colon), optionally with ``@f=K`` to lower the effective number of
+byzantine workers for that phase:
+
+  PYTHONPATH=src python -m repro.launch.simulate \\
+      --gar multi_bulyan --workers 11 --f 2 \\
+      --phase 20=none --phase 20=little_is_enough:z=4.0 \\
+      --report campaign.json --csv campaign.csv
+
+``--smoke`` runs the acceptance campaign from ISSUE/DESIGN §8 — a 40-step
+``no_attack -> little_is_enough`` switch — for the selected robust rule AND
+for plain averaging, asserts the paper's story on the traces (robust rule:
+bounded post-switch honest-mean deviation, ≈ 0 byzantine selection mass;
+averaging: dragged far off the honest mean), and exits non-zero otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional, Tuple
+
+from repro.sim import (AttackPhase, AttackSchedule, Scenario, report,
+                       run_campaign, switch_scenario)
+
+# --smoke acceptance thresholds (see tests/test_sim.py for the mirrored
+# in-suite assertion): the robust rule must keep its aggregate within 2x of
+# the honest-gradient scale with < 2% byzantine selection mass; averaging
+# under little_is_enough:z=4 is fully captured (byzantine mass = its f/n
+# share), sits >= 2x the robust rule's honest-mean deviation (measured
+# ~2.4x at seed 0) and stops making loss progress.
+ROBUST_DEV_MAX = 2.0
+ROBUST_BYZ_MASS = 0.02
+AVERAGE_DEV_FACTOR = 2.0
+AVERAGE_CAPTURE = 0.75          # of its f/n share
+AVERAGE_LOSS_MARGIN = 0.2
+
+
+def parse_phase(text: str) -> AttackPhase:
+    """``STEPS=SPEC[@f=K][@stale=W1+W2...]`` -> AttackPhase."""
+    steps_s, eq, rest = text.partition("=")
+    if not eq:
+        raise ValueError(f"bad --phase {text!r} (want STEPS=ATTACK_SPEC)")
+    try:
+        steps = int(steps_s)
+    except ValueError:
+        raise ValueError(f"bad step count in --phase {text!r}") from None
+    spec, f_eff, stale = rest, None, ()
+    if "@" in rest:
+        spec, *mods = rest.split("@")
+        for mod in mods:
+            k, _, v = mod.partition("=")
+            if k == "f":
+                f_eff = int(v)
+            elif k == "stale":
+                stale = tuple(int(w) for w in v.split("+") if w)
+            else:
+                raise ValueError(f"unknown phase modifier {mod!r} in "
+                                 f"--phase {text!r}")
+    return AttackPhase(steps=steps, attack=spec, f=f_eff,
+                       stale_workers=stale)
+
+
+def _smoke(args) -> int:
+    """Acceptance campaign: robust rule vs averaging across the switch."""
+    import numpy as np
+
+    results = {}
+    for gar in (args.gar, "average"):
+        sc = switch_scenario(
+            gar, pre=20, post=20, n_workers=args.workers, f=args.f,
+            trainer=args.trainer, use_pallas=args.use_pallas,
+            seed=args.seed)
+        results[gar] = run_campaign(sc, verbose=True)
+        if args.report:
+            stem, dot, ext = args.report.rpartition(".")
+            path = f"{stem}.{gar}.{ext}" if dot else f"{args.report}.{gar}"
+            print(f"[sim] report -> {report.write_json(path, results[gar])}")
+
+    post = slice(20, 40)
+    rb, av = results[args.gar].trace, results["average"].trace
+    rb_dev = float(np.mean(rb["honest_dev"][post]))
+    rb_dev_max = float(np.max(rb["honest_dev"][post]))
+    rb_byz = float(np.mean(rb["byz_mass"][post]))
+    av_dev = float(np.mean(av["honest_dev"][post]))
+    av_byz = float(np.mean(av["byz_mass"][post]))
+    share = args.f / args.workers
+    print(f"[sim] --smoke post-switch: {args.gar} honest_dev "
+          f"mean={rb_dev:.3f} max={rb_dev_max:.3f} byz_mass={rb_byz:.4f}; "
+          f"average honest_dev mean={av_dev:.3f} byz_mass={av_byz:.4f}")
+    problems: List[str] = []
+    if rb_dev_max > ROBUST_DEV_MAX:
+        problems.append(f"{args.gar} post-switch honest_dev max {rb_dev_max:.3f} "
+                        f"> {ROBUST_DEV_MAX}")
+    if rb_byz > ROBUST_BYZ_MASS:
+        problems.append(f"{args.gar} post-switch byzantine selection mass "
+                        f"{rb_byz:.4f} > {ROBUST_BYZ_MASS}")
+    if av_dev < AVERAGE_DEV_FACTOR * rb_dev:
+        problems.append(f"average honest_dev {av_dev:.3f} not >= "
+                        f"{AVERAGE_DEV_FACTOR}x {args.gar}'s {rb_dev:.3f}")
+    if av_byz < AVERAGE_CAPTURE * share:
+        problems.append(f"average byzantine mass {av_byz:.4f} below "
+                        f"{AVERAGE_CAPTURE}x its f/n share {share:.3f} — "
+                        f"attack did not engage?")
+    rb_final = float(rb["loss"][-1])
+    av_final = float(av["loss"][-1])
+    if av_final < rb_final + AVERAGE_LOSS_MARGIN:
+        problems.append(f"average final loss {av_final:.3f} not >= "
+                        f"{args.gar}'s {rb_final:.3f} + "
+                        f"{AVERAGE_LOSS_MARGIN} — averaging kept learning "
+                        f"under the attack")
+    for p in problems:
+        print(f"[sim] SMOKE FAILED: {p}", file=sys.stderr)
+    if not problems:
+        print("[sim] --smoke OK: robust rule bounded, byzantine rows "
+              "deselected, averaging dragged off the honest mean")
+    return 1 if problems else 0
+
+
+def main(argv: Optional[Tuple[str, ...]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run + assert the acceptance switch campaign")
+    ap.add_argument("--phase", action="append", default=[],
+                    metavar="STEPS=SPEC[@f=K][@stale=W1+W2]",
+                    help="append a schedule phase (repeatable)")
+    ap.add_argument("--gar", default="multi_bulyan")
+    ap.add_argument("--workers", type=int, default=11)
+    ap.add_argument("--f", type=int, default=2)
+    ap.add_argument("--trainer", default="stacked",
+                    choices=("stacked", "stream_block", "stream_global"))
+    ap.add_argument("--transform", action="append", default=[],
+                    help="pre-aggregation transform spec (repeatable), "
+                         "e.g. worker_momentum:beta=0.9")
+    ap.add_argument("--noniid-alpha", type=float, default=0.0,
+                    help="Dirichlet alpha for non-IID worker data "
+                         "(0 = i.i.d.)")
+    ap.add_argument("--n-domains", type=int, default=4)
+    ap.add_argument("--per-worker-batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--report", default=None, help="JSON report path")
+    ap.add_argument("--csv", default=None, help="CSV trace path")
+    ap.add_argument("--name", default="campaign")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        return _smoke(args)
+
+    if not args.phase:
+        ap.error("need at least one --phase (or --smoke)")
+    from repro.sim.scenario import DataConfig
+    sc = Scenario(
+        name=args.name,
+        schedule=AttackSchedule(tuple(parse_phase(p) for p in args.phase)),
+        n_workers=args.workers, f=args.f, gar=args.gar,
+        transforms=tuple(args.transform), trainer=args.trainer,
+        use_pallas=args.use_pallas,
+        data=DataConfig(noniid_alpha=args.noniid_alpha,
+                        n_domains=args.n_domains),
+        per_worker_batch=args.per_worker_batch, seq=args.seq, lr=args.lr,
+        seed=args.seed)
+    print(f"[sim] {sc.name}: {sc.schedule.describe()} gar={sc.gar} "
+          f"n={sc.n_workers} f={sc.f} trainer={sc.trainer}")
+    result = run_campaign(sc, ckpt_dir=args.ckpt_dir, resume=args.resume,
+                          verbose=True)
+    if not result.summary:  # resume found every phase already completed
+        print(f"[sim] nothing left to run: checkpoint already covers all "
+              f"{sc.schedule.total_steps} steps")
+        return 0
+    s = result.summary
+    print(f"[sim] done: {s['total_steps']} steps, final loss "
+          f"{s['final_loss']:.4f}, honest_dev max "
+          f"{s.get('honest_dev_max', float('nan')):.3f}, byz_mass mean "
+          f"{s.get('byz_mass_mean', float('nan')):.4f} "
+          f"({result.wall_s:.1f}s)")
+    if args.report:
+        print(f"[sim] report -> {report.write_json(args.report, result)}")
+    if args.csv:
+        print(f"[sim] trace  -> {report.write_csv(args.csv, result)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.checkpoint import save
 from repro.configs import ARCH_NAMES, RobustConfig, get_config
 from repro.data import lm_batches
-from repro.dist import make_train_step, split_workers
+from repro.dist import init_train_state, make_train_step, split_workers
 from repro.dist.streaming import make_streaming_train_step
 from repro import models as MD
 from repro.optim import make_optimizer, warmup_cosine
@@ -67,7 +67,10 @@ def main(argv=None) -> int:
 
     opt = make_optimizer(args.optimizer,
                          **({"momentum": 0.9} if args.optimizer == "sgd" else {}))
-    state = opt.init(params)
+    # seeds the adaptive-attack feedback slot when --attack is adaptive
+    # (plain OptState otherwise)
+    state = init_train_state(opt, params, n_workers=args.workers,
+                             attack=args.attack, attack_f=args.f)
     lr_fn = warmup_cosine(args.lr, warmup=max(args.steps // 20, 1),
                           total_steps=args.steps)
     chunk_q = min(args.seq, 512)

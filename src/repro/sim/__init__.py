@@ -1,0 +1,18 @@
+"""repro.sim — the Byzantine campaign simulator (DESIGN.md §8).
+
+Turns the reproduction into a scenario lab: declarative
+:class:`~repro.sim.scenario.Scenario` descriptions (attack schedules,
+time-varying effective f, Dirichlet non-IID data, worker churn) executed by
+a jit-friendly :func:`~repro.sim.engine.run_campaign` on either trainer,
+with plan-level telemetry (per-worker selection, Krum score spectra,
+honest-mean deviation, suspicion EMA) and JSON/CSV campaign reports.
+"""
+from repro.sim.engine import CampaignResult, run_campaign  # noqa: F401
+from repro.sim.scenario import (  # noqa: F401
+    AttackPhase,
+    AttackSchedule,
+    DataConfig,
+    Scenario,
+    switch_scenario,
+)
+from repro.sim import report, telemetry  # noqa: F401

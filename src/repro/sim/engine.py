@@ -1,0 +1,209 @@
+"""Campaign engine: execute a :class:`~repro.sim.scenario.Scenario`.
+
+Structure (DESIGN.md §8): the *phase loop* is host-side python — each phase
+has a different static threat model (attack spec, effective f, churn mask),
+so each gets its own trainer step built by ``dist.trainer.make_train_step``
+or ``dist.streaming.make_streaming_train_step`` with ``telemetry=True``.
+*Within* a phase everything is one jitted ``lax.scan``: the carry is
+``(params, trainer state, suspicion EMA)`` and the scanned inputs are the
+phase's precomputed batch stack and per-step PRNG keys, so a phase runs as
+a single XLA computation regardless of length.
+
+Data (including the Dirichlet non-IID assignment and the straggler/churn
+masks — stale workers are frozen to their phase-entry batch) is synthesised
+host-side per phase; randomness is keyed by *global* step index, so traces
+are bitwise-reproducible and checkpoint/resume at phase boundaries replays
+the remaining phases exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs.base import RobustConfig
+from repro.core import attacks as ATK
+from repro.data import dirichlet_mixture, make_lm_batch, make_noniid_lm_batch
+from repro.dist import init_train_state, make_train_step, split_workers
+from repro.dist.streaming import make_streaming_train_step
+from repro.dist.trainer import merge_train_state, split_train_state
+from repro import models as MD
+from repro.optim import sgd, warmup_cosine
+from repro.sim import telemetry as TEL
+from repro.sim.scenario import AttackPhase, Scenario
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """A finished campaign: the stacked per-step trace + per-phase digest.
+
+    ``trace`` maps field name -> (steps, ...) numpy array (see
+    ``telemetry.step_record`` for the schema); ``summary`` is the host-side
+    per-phase digest (``telemetry.summarize``).  ``start_step`` > 0 when the
+    run resumed from a checkpoint (the trace covers executed steps only).
+    """
+
+    scenario: Scenario
+    trace: Dict[str, np.ndarray]
+    summary: Dict[str, Any]
+    start_step: int = 0
+    wall_s: float = 0.0
+
+
+def _phase_batches(scenario: Scenario, phase: AttackPhase, start: int,
+                   mixture) -> PyTree:
+    """Worker-split token batches for one phase: leaves (steps, n, pwb, ...).
+
+    Batch randomness is keyed by the *global* step index (phase layout does
+    not change the data), matching ``launch/train.py``'s per-step fold_in
+    convention.  Stale (churned) workers are frozen to the phase's first
+    batch — they keep resubmitting gradients computed on old data.
+    """
+    n, pwb, seq = scenario.n_workers, scenario.per_worker_batch, scenario.seq
+    vocab = scenario.arch.vocab_size
+    data_key = jax.random.key(scenario.seed)
+
+    def one(step_idx):
+        k = jax.random.fold_in(data_key, step_idx)
+        if mixture is not None:
+            b = make_noniid_lm_batch(k, vocab, n, pwb, seq, mixture,
+                                     seed=scenario.seed + 77)
+        else:
+            b = make_lm_batch(k, vocab, n * pwb, seq,
+                              seed=scenario.seed + 77)
+        return split_workers(b, n)
+
+    steps = jnp.arange(start, start + phase.steps)
+    batches = jax.vmap(one)(steps)
+    for w in phase.stale_workers:
+        batches = jax.tree.map(
+            lambda x: x.at[:, w].set(x[0, w]), batches)
+    return batches
+
+
+def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
+                 resume: bool = False, verbose: bool = False
+                 ) -> CampaignResult:
+    """Run a scenario end to end; returns the trace + summary.
+
+    ``ckpt_dir`` enables checkpointing at phase boundaries (params,
+    optimizer state, transform states, suspicion EMA — keyed by global
+    step).  With ``resume`` the engine restores the latest phase-boundary
+    checkpoint and replays only the remaining phases; the returned trace
+    then starts at ``start_step``.
+    """
+    t0 = time.time()
+    cfg = scenario.arch
+    rcfg = RobustConfig(n_workers=scenario.n_workers, f=scenario.f,
+                        gar=scenario.gar, use_pallas=scenario.use_pallas)
+    transforms = scenario.build_transforms()
+    stateful = any(t.stateful for t in transforms)
+    total_steps = scenario.schedule.total_steps
+
+    key = jax.random.key(scenario.seed)
+    params = MD.init_model(key, cfg)
+    opt = sgd(momentum=scenario.momentum)
+    # attack state is per-phase (seeded at each phase entry below), so the
+    # initial state is built attack-free and split into its components
+    opt_state, tstates, _ = split_train_state(
+        init_train_state(opt, params, transforms,
+                         n_workers=scenario.n_workers), stateful)
+    susp = TEL.init_suspicion(scenario.n_workers)
+    lr_fn = warmup_cosine(scenario.lr, warmup=max(total_steps // 20, 1),
+                          total_steps=total_steps)
+
+    mixture = None
+    if scenario.data.noniid_alpha > 0:
+        mixture = dirichlet_mixture(
+            jax.random.fold_in(key, 424242), scenario.n_workers,
+            scenario.data.n_domains, scenario.data.noniid_alpha)
+
+    start_step = 0
+    if ckpt_dir and resume:
+        latest = latest_step(ckpt_dir)
+        boundary_steps = {stop for _, stop in scenario.schedule.bounds()}
+        if latest is not None and latest not in boundary_steps:
+            raise ValueError(
+                f"checkpoint step {latest} is not a phase boundary of "
+                f"schedule {scenario.schedule.describe()!r}")
+        if latest is not None:
+            like = {"params": params, "opt": opt_state,
+                    "tstates": tstates, "susp": susp}
+            loaded = restore(ckpt_dir, latest, like)
+            params, opt_state = loaded["params"], loaded["opt"]
+            tstates, susp = loaded["tstates"], loaded["susp"]
+            start_step = latest
+            if verbose:
+                print(f"[sim] resumed {scenario.name} at step {latest}")
+
+    chunk_q = min(scenario.seq, 512)
+    phase_traces = []
+    for phase_idx, ((start, stop), phase) in enumerate(
+            zip(scenario.schedule.bounds(), scenario.schedule.phases)):
+        if stop <= start_step:
+            continue  # phase fully covered by the restored checkpoint
+        f_eff = scenario.phase_f(phase)
+        adaptive = ATK.is_adaptive(phase.attack)
+        if scenario.trainer == "stacked":
+            step_fn = make_train_step(
+                cfg, rcfg, opt, lr_fn, chunk_q=chunk_q, attack=phase.attack,
+                attack_f=f_eff, transforms=transforms, telemetry=True)
+        else:
+            scope = "global" if scenario.trainer.endswith("global") else \
+                "block"
+            step_fn = make_streaming_train_step(
+                cfg, rcfg, opt, lr_fn, scope=scope, chunk_q=chunk_q,
+                attack=phase.attack, attack_f=f_eff, telemetry=True)
+
+        astate = None
+        if adaptive:
+            astate = ATK.get_adaptive(phase.attack).init_state(
+                scenario.n_workers, f_eff)
+        if scenario.trainer == "stacked":
+            state = merge_train_state(opt_state, tstates, astate, stateful,
+                                      adaptive)
+        else:
+            state = opt_state  # streaming carries the bare OptState
+
+        def body(carry, xs, _step=step_fn, _pi=phase_idx):
+            p, st, sp = carry
+            batch, k = xs
+            p, st, m = _step(p, st, batch, k)
+            sp = TEL.update_suspicion(sp, m["telemetry"]["selection"],
+                                      scenario.suspicion_ema)
+            return (p, st, sp), TEL.step_record(m, sp, _pi)
+
+        batches = _phase_batches(scenario, phase, start, mixture)
+        keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
+            jnp.arange(start, stop))
+        (params, state, susp), rec = jax.jit(
+            lambda c, xs: jax.lax.scan(body, c, xs))(
+                (params, state, susp), (batches, keys))
+        if scenario.trainer == "stacked":
+            opt_state, tstates, _ = split_train_state(state, stateful,
+                                                      adaptive)
+        else:
+            opt_state = state
+        phase_traces.append(jax.device_get(rec))
+        if verbose:
+            tr = phase_traces[-1]
+            print(f"[sim] {scenario.name} phase {phase_idx} "
+                  f"({phase.attack}, f={f_eff}, steps {start}-{stop}): "
+                  f"loss {tr['loss'][0]:.4f} -> {tr['loss'][-1]:.4f} "
+                  f"honest_dev {np.mean(tr['honest_dev']):.3f} "
+                  f"byz_mass {np.mean(tr['byz_mass']):.3f}", flush=True)
+        if ckpt_dir:
+            save(ckpt_dir, stop, {"params": params, "opt": opt_state,
+                                  "tstates": tstates, "susp": susp})
+
+    trace = TEL.concat_traces(phase_traces)
+    summary = TEL.summarize(trace, scenario, start_step) if trace else {}
+    return CampaignResult(scenario=scenario, trace=trace, summary=summary,
+                          start_step=start_step, wall_s=time.time() - t0)

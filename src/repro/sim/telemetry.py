@@ -1,0 +1,120 @@
+"""Campaign telemetry: per-step trace records + cross-step suspicion EMA.
+
+The per-step plan diagnostics come from ``AggPlan.diagnostics`` through the
+trainer's ``telemetry=True`` metrics (``selection``, ``byz_mass``,
+``score_spectrum``, ``score_gap``, ``mean_dist``, ``honest_dev``).  This
+module owns what a single plan cannot: the *suspicion EMA* — a per-worker
+exponential moving average of rejection — carried through the campaign scan,
+and the host-side summarisation of a finished trace into the per-phase
+numbers the reports and acceptance assertions read.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def init_suspicion(n_workers: int) -> Array:
+    return jnp.zeros((n_workers,), jnp.float32)
+
+
+def update_suspicion(susp: Array, selection: Array, ema: float) -> Array:
+    """EMA of per-worker rejection.
+
+    A worker's per-step rejection is ``1 - selection_i / max_j selection_j``
+    (0 for the most-trusted worker, 1 for a fully rejected one) — normalised
+    so weighted rules and uniform rules land on the same scale.
+    """
+    rej = 1.0 - selection / (jnp.max(selection) + 1e-12)
+    return ema * susp + (1.0 - ema) * rej
+
+
+def step_record(metrics: Dict[str, Any], susp: Array,
+                phase_idx: int) -> Dict[str, Array]:
+    """Assemble one scan output slot from the trainer metrics.
+
+    Everything is a fixed-shape fp32/int32 array so ``lax.scan`` stacks the
+    records into the ``(steps, ...)`` campaign trace.
+    """
+    diag = metrics["telemetry"]
+    rec = {
+        "loss": metrics["loss"].astype(jnp.float32),
+        "loss_per_worker": metrics["loss_per_worker"].astype(jnp.float32),
+        "lr": metrics["lr"],
+        "agg_grad_norm": metrics["agg_grad_norm"].astype(jnp.float32),
+        "suspicion": susp,
+        "phase": jnp.asarray(phase_idx, jnp.int32),
+    }
+    for k, v in diag.items():
+        rec[k] = jnp.asarray(v, jnp.float32)
+    return rec
+
+
+def concat_traces(traces: Sequence[Dict[str, np.ndarray]]
+                  ) -> Dict[str, np.ndarray]:
+    """Concatenate per-phase stacked traces along the step axis (host-side)."""
+    traces = [t for t in traces if t]
+    if not traces:
+        return {}
+    keys = set(traces[0])
+    for t in traces[1:]:
+        keys &= set(t)
+    return {k: np.concatenate([np.asarray(t[k]) for t in traces], axis=0)
+            for k in sorted(keys)}
+
+
+def summarize(trace: Dict[str, np.ndarray], scenario,
+              start_step: int = 0) -> Dict[str, Any]:
+    """Host-side per-phase digest of a campaign trace.
+
+    Per phase: loss at entry/exit, mean/max honest-mean deviation, mean
+    byzantine selection mass, the per-worker mean selection vector and the
+    final suspicion vector.  The acceptance assertions
+    (``launch/simulate.py --smoke``, ``tests/test_sim.py``) read these.
+    ``start_step`` offsets the schedule against a resumed run's trace
+    (which only covers executed steps).
+    """
+    phases = []
+    for i, ((start, stop), p) in enumerate(
+            zip(scenario.schedule.bounds(), scenario.schedule.phases)):
+        start, stop = start - start_step, stop - start_step
+        if stop <= 0:
+            continue  # phase ran before the resume point
+        stop = min(stop, len(trace["loss"]))
+        if start >= stop:
+            break
+        sl = slice(start, stop)
+        ph: Dict[str, Any] = {
+            "phase": i,
+            "attack": p.attack,
+            "f": scenario.phase_f(p),
+            "steps": stop - start,
+            "loss_first": float(trace["loss"][start]),
+            "loss_last": float(trace["loss"][stop - 1]),
+            "loss_mean": float(np.mean(trace["loss"][sl])),
+        }
+        for k in ("honest_dev", "byz_mass", "score_gap", "mean_dist"):
+            if k in trace:
+                ph[f"{k}_mean"] = float(np.mean(trace[k][sl]))
+                ph[f"{k}_max"] = float(np.max(trace[k][sl]))
+        if "selection" in trace:
+            ph["selection_mean"] = np.mean(
+                trace["selection"][sl], axis=0).tolist()
+        if "suspicion" in trace:
+            ph["suspicion_last"] = trace["suspicion"][stop - 1].tolist()
+        phases.append(ph)
+    out: Dict[str, Any] = {
+        "total_steps": int(len(trace["loss"])),
+        "final_loss": float(trace["loss"][-1]),
+        "phases": phases,
+    }
+    if "honest_dev" in trace:
+        out["honest_dev_max"] = float(np.max(trace["honest_dev"]))
+    if "byz_mass" in trace:
+        out["byz_mass_mean"] = float(np.mean(trace["byz_mass"]))
+    return out

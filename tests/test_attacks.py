@@ -43,6 +43,51 @@ def test_unknown_attack_raises():
         attacks.get_attack("not_an_attack")
 
 
+# ------------------------------------------------------------ spec strings
+def test_parse_spec_grammar():
+    assert attacks.parse_spec("mimic") == ("mimic", {})
+    assert attacks.parse_spec("little_is_enough:z=2.5") == \
+        ("little_is_enough", {"z": 2.5})
+    assert attacks.parse_spec("gaussian:sigma=2,") == \
+        ("gaussian", {"sigma": 2.0})
+    with pytest.raises(ValueError, match="key=value"):
+        attacks.parse_spec("sign_flip:scale")
+    with pytest.raises(ValueError, match="non-numeric"):
+        attacks.parse_spec("sign_flip:scale=big")
+
+
+def test_get_attack_spec_binds_kwargs():
+    correct = jnp.asarray(RNG.normal(size=(N - F, D)).astype(np.float32))
+    # z=0 little_is_enough degenerates to broadcasting the mean (= no_attack)
+    z0 = attacks.get_attack("little_is_enough:z=0.0")(correct, F, KEY)
+    np.testing.assert_allclose(
+        np.asarray(z0), np.asarray(attacks.no_attack(correct, F, KEY)),
+        rtol=1e-6)
+    s5 = attacks.get_attack("sign_flip:scale=5.0")(correct, F, KEY)
+    np.testing.assert_allclose(
+        np.asarray(s5),
+        5.0 * np.asarray(attacks.sign_flip(correct, F, KEY)), rtol=1e-6)
+
+
+def test_get_attack_spec_rejects_unknown_kwargs():
+    with pytest.raises(ValueError, match="no parameter"):
+        attacks.get_attack("little_is_enough:zz=2.0")
+    with pytest.raises(ValueError, match="no parameter"):
+        attacks.get_adaptive("adaptive_lie:warp=1.0")
+
+
+def test_inject_byzantine_passes_spec_through():
+    """dist.trainer._attack_leaf must honor parameterized specs."""
+    from repro.dist import inject_byzantine
+
+    grads = {"w": jnp.ones((N, 3, 4)), "b": jnp.ones((N, 5))}
+    out = inject_byzantine(grads, F, "sign_flip:scale=4.0", KEY)
+    np.testing.assert_allclose(np.asarray(out["w"][:F]), -4.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"][:F]), -4.0, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out["w"][F:]),
+                                  np.asarray(grads["w"][F:]))
+
+
 @pytest.mark.parametrize("name", sorted(api.available_gars()))
 def test_gar_permutation_invariance_over_registry(name):
     """Shuffling worker order must not change the aggregate (registry path).

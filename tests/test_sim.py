@@ -1,0 +1,318 @@
+"""repro.sim campaign simulator: acceptance, telemetry, schedules, engine.
+
+The headline test is the ISSUE-3 acceptance criterion: a 40-step campaign
+switching ``no_attack -> little_is_enough`` mid-run must show multi-Bulyan's
+post-switch honest-mean deviation bounded with ≈ 0 byzantine selection
+mass, while plain averaging is captured (full f/n selection share) and
+dragged off the honest mean.  ``launch/simulate.py --smoke`` reproduces the
+same assertion in CI.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import api, attacks
+from repro.dist import inject_byzantine
+from repro.sim import (AttackPhase, AttackSchedule, DataConfig, Scenario,
+                       run_campaign, switch_scenario)
+from repro.sim.engine import _phase_batches
+
+KEY = jax.random.key(0)
+
+# small arch for the non-acceptance engine tests (TINY is the acceptance
+# config — launch/simulate.py --smoke must see the same numbers)
+SMALL = ArchConfig(name="sim-test", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128)
+
+
+# ======================================================== acceptance (40 steps)
+@pytest.fixture(scope="module")
+def switch_results():
+    out = {}
+    for gar in ("multi_bulyan", "average"):
+        out[gar] = run_campaign(switch_scenario(gar, pre=20, post=20))
+    return out
+
+
+def test_switch_campaign_robust_bounded_average_captured(switch_results):
+    post = slice(20, 40)
+    rb = switch_results["multi_bulyan"].trace
+    av = switch_results["average"].trace
+    # multi_bulyan: bounded post-switch deviation, byzantine rows deselected
+    assert float(np.max(rb["honest_dev"][post])) < 2.0
+    assert float(np.mean(rb["byz_mass"][post])) < 0.02
+    # and it keeps learning through the switch
+    assert rb["loss"][-1] < rb["loss"][19]
+    # averaging: the adversary keeps its full f/n selection share and drags
+    # the aggregate off the honest mean
+    assert float(np.mean(av["byz_mass"][post])) > 0.15      # f/n = 0.1818
+    assert float(np.mean(av["honest_dev"][post])) >= \
+        2.0 * float(np.mean(rb["honest_dev"][post]))
+    assert float(av["loss"][-1]) >= float(rb["loss"][-1]) + 0.2
+
+
+def test_switch_campaign_suspicion_flags_byzantine(switch_results):
+    susp = switch_results["multi_bulyan"].trace["suspicion"][-1]
+    f = switch_results["multi_bulyan"].scenario.f
+    assert np.mean(susp[:f]) > np.mean(susp[f:]) + 0.2
+
+
+def test_campaign_trace_schema(switch_results):
+    r = switch_results["multi_bulyan"]
+    n = r.scenario.n_workers
+    tr = r.trace
+    for k in ("loss", "honest_dev", "byz_mass", "score_gap", "mean_dist",
+              "lr", "agg_grad_norm", "phase"):
+        assert tr[k].shape == (40,), k
+    for k in ("selection", "suspicion", "score_spectrum", "loss_per_worker"):
+        assert tr[k].shape == (40, n), k
+    np.testing.assert_allclose(tr["selection"].sum(axis=1), 1.0, atol=1e-5)
+    assert list(tr["phase"][:20]) == [0] * 20
+    assert list(tr["phase"][20:]) == [1] * 20
+    ph = r.summary["phases"]
+    assert [p["attack"] for p in ph] == ["none", "little_is_enough:z=4.0"]
+
+
+# ======================================================== plan diagnostics
+def _attacked_stats(rule_f=2, n=11, d=50, attack="little_is_enough:z=4.0"):
+    rng = np.random.default_rng(0)
+    correct = (np.ones(d) + 0.1 * rng.normal(size=(n - rule_f, d))
+               ).astype(np.float32)
+    G = attacks.apply_attack(jnp.asarray(correct), rule_f, attack, KEY)
+    return api.compute_stats(G, rule_f, needs_dists=True)
+
+
+@pytest.mark.parametrize("rule", ["multi_krum", "multi_bulyan"])
+def test_diagnostics_byzantine_rows_deselected(rule):
+    stats = _attacked_stats()
+    plan = api.get_aggregator(rule).plan(stats)
+    diag = plan.diagnostics(stats)
+    assert float(diag["byz_mass"]) < 1e-6
+    np.testing.assert_allclose(float(jnp.sum(diag["selection"])), 1.0,
+                               atol=1e-5)
+    assert float(diag["score_gap"]) > 0.0          # clean selection boundary
+    spectrum = np.asarray(diag["score_spectrum"])
+    assert np.all(np.diff(spectrum) >= 0)          # ascending
+    assert np.all(np.isfinite(spectrum))
+
+
+def test_diagnostics_mean_kind_uniform():
+    stats = _attacked_stats()
+    plan = api.get_aggregator("average").plan(stats)
+    diag = plan.diagnostics(stats)
+    np.testing.assert_allclose(np.asarray(diag["selection"]), 1.0 / 11,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(diag["byz_mass"]), 2.0 / 11, atol=1e-5)
+    assert float(diag["score_gap"]) == 0.0         # everyone "selected"
+
+
+def test_diagnostics_without_stats_has_no_score_fields():
+    stats = _attacked_stats()
+    plan = api.get_aggregator("multi_krum").plan(stats)
+    diag = plan.diagnostics()
+    assert set(diag) == {"selection", "byz_mass"}
+
+
+# ==================================== schedule determinism across trainers
+def test_inject_byzantine_block_determinism_under_schedule():
+    """Per-block injection with leaf_offset must reproduce the full-tree
+    injection for every phase of a multi-phase schedule (parameterized
+    attack specs included) — the invariant that makes stacked and
+    streaming campaigns comparable."""
+    n, f = 11, 2
+    rng = np.random.default_rng(1)
+    tree = {
+        "a": {"w": jnp.asarray(rng.normal(size=(n, 3, 4)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)},
+        "c": {"w": jnp.asarray(rng.normal(size=(n, 2, 2)), jnp.float32)},
+    }
+    specs = ["little_is_enough:z=2.0", "sign_flip:scale=3.0",
+             "gaussian:sigma=2.0"]
+    for step, spec in enumerate(specs):            # one phase per spec
+        key = jax.random.fold_in(KEY, step)
+        full = inject_byzantine(tree, f, spec, key)
+        offsets = {"a": 0, "c": len(jax.tree.leaves(tree["a"]))}
+        blockwise = {
+            k: inject_byzantine(tree[k], f, spec, key,
+                                leaf_offset=offsets[k])
+            for k in sorted(tree)
+        }
+        for x, y in zip(jax.tree.leaves(full), jax.tree.leaves(blockwise)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ======================================================== scenario validation
+def test_scenario_rejects_bad_configs():
+    ph = AttackPhase(steps=4)
+    sched = AttackSchedule((ph,))
+    with pytest.raises(ValueError, match="unknown trainer"):
+        Scenario(name="x", schedule=sched, trainer="warp")
+    with pytest.raises(ValueError, match="effective f"):
+        Scenario(name="x", schedule=AttackSchedule(
+            (AttackPhase(steps=2, f=3),)), f=2)
+    with pytest.raises(ValueError, match="unknown attack"):
+        Scenario(name="x", schedule=AttackSchedule(
+            (AttackPhase(steps=2, attack="not_an_attack"),)))
+    with pytest.raises(ValueError, match="stale_workers"):
+        Scenario(name="x", schedule=AttackSchedule(
+            (AttackPhase(steps=2, stale_workers=(99,)),)), n_workers=11)
+    with pytest.raises(ValueError, match="trainer='stacked'"):
+        Scenario(name="x", schedule=AttackSchedule(
+            (AttackPhase(steps=2, attack="adaptive_lie"),)),
+            trainer="stream_block")
+    with pytest.raises(ValueError, match="steps must be positive"):
+        AttackPhase(steps=0)
+    with pytest.raises(ValueError, match="at least one phase"):
+        AttackSchedule(())
+
+
+def test_schedule_bounds_and_describe():
+    sched = AttackSchedule((AttackPhase(steps=3), AttackPhase(steps=5,
+                                                              attack="mimic")))
+    assert sched.total_steps == 8
+    assert sched.bounds() == ((0, 3), (3, 8))
+    assert sched.describe() == "none@3 -> mimic@5"
+
+
+def test_simulate_cli_phase_parsing():
+    from repro.launch.simulate import parse_phase
+    p = parse_phase("20=little_is_enough:z=4.0@f=1@stale=2+5")
+    assert p.steps == 20 and p.attack == "little_is_enough:z=4.0"
+    assert p.f == 1 and p.stale_workers == (2, 5)
+    with pytest.raises(ValueError, match="STEPS=ATTACK_SPEC"):
+        parse_phase("little_is_enough")
+    with pytest.raises(ValueError, match="step count"):
+        parse_phase("abc=none")
+
+
+# ======================================================== data: non-IID + churn
+def test_dirichlet_mixture_properties():
+    from repro.data import dirichlet_mixture
+    mix = dirichlet_mixture(KEY, 8, 4, alpha=0.1)
+    assert mix.shape == (8, 4)
+    np.testing.assert_allclose(np.asarray(mix).sum(axis=1), 1.0, atol=1e-5)
+    # small alpha concentrates workers on few domains
+    assert float(np.mean(np.max(np.asarray(mix), axis=1))) > 0.7
+    with pytest.raises(ValueError, match="alpha"):
+        dirichlet_mixture(KEY, 8, 4, alpha=0.0)
+
+
+def test_noniid_batch_deterministic_and_worker_major():
+    from repro.data import dirichlet_mixture, make_noniid_lm_batch
+    mix = dirichlet_mixture(KEY, 6, 3, alpha=0.2)
+    b1 = make_noniid_lm_batch(KEY, 128, 6, 2, 16, mix)
+    b2 = make_noniid_lm_batch(KEY, 128, 6, 2, 16, mix)
+    assert b1["tokens"].shape == (12, 16)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
+    with pytest.raises(ValueError, match="mixture rows"):
+        make_noniid_lm_batch(KEY, 128, 5, 2, 16, mix)
+
+
+def test_phase_batches_freeze_stale_workers():
+    sc = Scenario(name="churn", schedule=AttackSchedule(
+        (AttackPhase(steps=4, stale_workers=(1, 3)),)),
+        n_workers=5, f=0, gar="average", arch=SMALL, seq=16)
+    batches = _phase_batches(sc, sc.schedule.phases[0], 0, None)
+    toks = np.asarray(batches["tokens"])           # (steps, n, pwb, seq)
+    assert toks.shape[:2] == (4, 5)
+    for w in (1, 3):                               # frozen to phase entry
+        for t in range(1, 4):
+            np.testing.assert_array_equal(toks[t, w], toks[0, w])
+    assert not np.array_equal(toks[1, 0], toks[0, 0])  # fresh worker moves
+
+
+# ======================================================== adaptive attacks
+def test_adaptive_lie_feedback_tunes_z():
+    atk = attacks.get_adaptive("adaptive_lie:z0=2.0")
+    st = atk.init_state(11, 2)
+    rejected = jnp.concatenate([jnp.zeros(2), jnp.full((9,), 1.0 / 9)])
+    selected = jnp.full((11,), 1.0 / 11)
+    st_r = atk.update(st, rejected)
+    st_s = atk.update(st, selected)
+    assert float(st_r["z"]) < 2.0 < float(st_s["z"])
+    G = jnp.asarray(np.random.default_rng(0).normal(size=(9, 8)),
+                    jnp.float32)
+    byz = atk.propose(G, 2, KEY, st)
+    np.testing.assert_allclose(
+        np.asarray(byz[0]),
+        np.asarray(jnp.mean(G, 0) - 2.0 * jnp.std(G, 0)), rtol=1e-5)
+
+
+def test_adaptive_mimic_copies_most_trusted():
+    atk = attacks.get_adaptive("adaptive_mimic")
+    st = atk.init_state(6, 2)
+    sel = jnp.asarray([0.0, 0.0, 0.1, 0.5, 0.2, 0.2])
+    st = atk.update(st, sel)
+    G = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)),
+                    jnp.float32)
+    byz = atk.propose(G, 2, KEY, st)               # honest argmax = index 1
+    np.testing.assert_array_equal(np.asarray(byz[0]), np.asarray(G[1]))
+    np.testing.assert_array_equal(np.asarray(byz[1]), np.asarray(G[1]))
+
+
+def test_effective_f_counts_only_attacked_rows():
+    """A phase with f=1 under a contract f=2 reports captured mass over the
+    single actually-byzantine row, not the rule's contract rows."""
+    sc = Scenario(name="feff", schedule=AttackSchedule(
+        (AttackPhase(steps=2, attack="inf", f=1),)),
+        n_workers=11, f=2, gar="average", arch=SMALL, seq=16)
+    r = run_campaign(sc)
+    np.testing.assert_allclose(r.trace["byz_mass"], 1.0 / 11, atol=1e-5)
+
+
+def test_adaptive_campaign_runs_on_stacked_trainer():
+    sc = Scenario(name="adaptive", schedule=AttackSchedule(
+        (AttackPhase(steps=2, attack="none"),
+         AttackPhase(steps=3, attack="adaptive_lie:z0=4.0"))),
+        n_workers=11, f=2, gar="multi_bulyan", arch=SMALL, seq=16)
+    r = run_campaign(sc)
+    assert len(r.trace["loss"]) == 5
+    assert np.all(np.isfinite(r.trace["loss"]))
+    assert float(np.mean(r.trace["byz_mass"][2:])) < 0.1
+
+
+# ======================================================== streaming engine
+@pytest.mark.parametrize("trainer", ["stream_global", "stream_block"])
+def test_streaming_campaign_rejects_inf_attack(trainer):
+    sc = Scenario(name=trainer, schedule=AttackSchedule(
+        (AttackPhase(steps=2, attack="none"),
+         AttackPhase(steps=2, attack="inf"))),
+        n_workers=11, f=2, gar="multi_bulyan", trainer=trainer,
+        arch=SMALL, seq=16)
+    r = run_campaign(sc)
+    assert np.all(np.isfinite(r.trace["loss"]))
+    assert np.all(np.isfinite(r.trace["honest_dev"]))
+    # inf-magnitude proposals can never be selected, in any block
+    np.testing.assert_allclose(r.trace["byz_mass"][2:], 0.0, atol=1e-6)
+
+
+# ======================================================== checkpoint / resume
+def test_campaign_checkpoint_resume_replays_tail(tmp_path):
+    sched = AttackSchedule((AttackPhase(steps=3, attack="none"),
+                            AttackPhase(steps=3,
+                                        attack="little_is_enough:z=2.0")))
+    # non-IID data + a stateful transform: the resume must reproduce the
+    # Dirichlet assignment and restore the per-worker momentum slots
+    sc = Scenario(name="resume", schedule=sched, n_workers=11, f=2,
+                  gar="multi_bulyan", arch=SMALL, seq=16,
+                  data=DataConfig(noniid_alpha=0.3),
+                  transforms=("worker_momentum:beta=0.9",))
+    d = str(tmp_path / "ck")
+    full = run_campaign(sc, ckpt_dir=d)
+    assert sorted(os.listdir(d)) == ["ckpt_00000003.npz", "ckpt_00000006.npz"]
+    os.remove(os.path.join(d, "ckpt_00000006.npz"))
+    resumed = run_campaign(sc, ckpt_dir=d, resume=True)
+    assert resumed.start_step == 3
+    assert len(resumed.trace["loss"]) == 3
+    for k in ("loss", "honest_dev", "byz_mass"):
+        np.testing.assert_allclose(resumed.trace[k], full.trace[k][3:],
+                                   rtol=0, atol=1e-6, err_msg=k)
+    ph = resumed.summary["phases"]
+    assert len(ph) == 1 and ph[0]["attack"] == "little_is_enough:z=2.0"
