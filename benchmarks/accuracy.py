@@ -11,17 +11,30 @@ Gaussian-mixture classification problem (data/synthetic.py) with a small
 MLP — same qualitative mechanics (visible accuracy ceiling within a small
 step budget, variance-limited early training).
 
+Runs on the plan/apply ``Aggregator`` API (``core.api``) — the aggregator
+and its capability flags are resolved once per rule, each step computes
+only the statistics the rule's ``plan`` needs and applies the plan
+per leaf (the legacy ``tree_aggregate`` shim is no longer involved).
+
+Persists ``BENCH_accuracy.json`` (schema ``accuracy.v1``, gated by
+``benchmarks/validate_bench.py``):
+
+    {"schema": "accuracy.v1",
+     "results": {rule: {"b=<batch>": {"acc_mean": .., "acc_std": ..}}}}
+
 CSV: name,us_per_call,derived  (us_per_call column reused for accuracy %).
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Dict, List
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.robust import tree_aggregate
+from repro.core import api
 from repro.data import classification_batches
 from repro.optim import sgd
 
@@ -31,6 +44,10 @@ STEPS, EVAL_EVERY = 400, 25
 BATCHES = (5, 20, 50)
 RULES = ("average", "median", "multi_krum", "multi_bulyan")
 SEEDS = (1, 2, 3)   # paper uses seeds 1..5
+SMOKE_STEPS = 60
+SMOKE_BATCHES = (5,)
+SMOKE_SEEDS = (1, 2)
+BENCH_JSON = "BENCH_accuracy.json"
 
 
 def _init(key):
@@ -58,7 +75,7 @@ def _accuracy(p, x, y) -> float:
     return float(jnp.mean(jnp.argmax(_logits(p, x), -1) == y))
 
 
-def train_once(rule: str, batch: int, seed: int) -> float:
+def train_once(rule: str, batch: int, seed: int, steps: int = STEPS) -> float:
     key = jax.random.key(seed)
     params = _init(key)
     opt = sgd(momentum=0.9)   # paper: SGD, momentum 0.9
@@ -68,6 +85,12 @@ def train_once(rule: str, batch: int, seed: int) -> float:
     xt, yt = next(classification_batches(D_IN, N_CLASSES, 2000,
                                          seed=seed + 999, noise=1.5))
 
+    # plan/apply: resolve the rule once; the step computes exactly the
+    # statistics its capability flags ask for (average pays no distance
+    # pass) and applies the static-shape plan per leaf
+    agg = api.get_aggregator(rule)
+    agg.validate(N, F)
+
     @jax.jit
     def step(params, state, x, y):
         def worker_grad(xw, yw):
@@ -75,30 +98,56 @@ def train_once(rule: str, batch: int, seed: int) -> float:
         xs = x.reshape(N, batch, D_IN)
         ys = y.reshape(N, batch)
         grads = jax.vmap(worker_grad)(xs, ys)
-        agg = tree_aggregate(grads, F, rule)
-        return opt.update(agg, state, params, 0.05)
+        stats = api.compute_stats(grads, F, needs_dists=agg.needs_dists)
+        out = agg.apply(agg.plan(stats), grads)
+        return opt.update(out, state, params, 0.05)
 
     best = 0.0
-    for i in range(STEPS):
+    for i in range(steps):
         x, y = next(data)
         params, state = step(params, state, x, y)
-        if (i + 1) % EVAL_EVERY == 0:
+        if (i + 1) % EVAL_EVERY == 0 or i == steps - 1:
             best = max(best, _accuracy(params, xt, yt))
     return best
 
 
-def run(csv_rows: List[str]) -> Dict[str, Dict[int, float]]:
+def write_json(results: Dict[str, Dict[int, Dict[str, float]]],
+               protocol: Dict, path: str = BENCH_JSON) -> None:
+    payload = {
+        "schema": "accuracy.v1",
+        "protocol": protocol,
+        "results": {
+            rule: {f"b={b}": cell for b, cell in grid.items()}
+            for rule, grid in results.items()
+        },
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+
+
+def run(csv_rows: List[str], *, smoke: bool = False,
+        json_path: str = BENCH_JSON) -> Dict[str, Dict[int, float]]:
+    batches = SMOKE_BATCHES if smoke else BATCHES
+    seeds = SMOKE_SEEDS if smoke else SEEDS
+    steps = SMOKE_STEPS if smoke else STEPS
     out: Dict[str, Dict[int, float]] = {}
+    cells: Dict[str, Dict[int, Dict[str, float]]] = {}
     for rule in RULES:
         out[rule] = {}
-        for b in BATCHES:
-            accs = [train_once(rule, b, s) for s in SEEDS]
+        cells[rule] = {}
+        for b in batches:
+            accs = [train_once(rule, b, s, steps) for s in seeds]
             mean, std = float(np.mean(accs)), float(np.std(accs))
             out[rule][b] = mean
+            cells[rule][b] = {"acc_mean": round(mean, 6),
+                              "acc_std": round(std, 6)}
             csv_rows.append(f"accuracy/{rule}/b={b},{mean*100:.2f},"
                             f"std={std*100:.2f}")
     # derived orderings (the paper's Fig 3 story)
-    b = BATCHES[0]  # most variance-limited point
+    b = batches[0]  # most variance-limited point
     csv_rows.append(
         f"accuracy/order_check/b={b},"
         f"{(out['multi_bulyan'][b] >= out['median'][b] - 0.02)*1:.0f},"
@@ -107,6 +156,10 @@ def run(csv_rows: List[str]) -> Dict[str, Dict[int, float]]:
         f"accuracy/avg_vs_mk/b={b},"
         f"{(out['average'][b] >= out['multi_krum'][b] - 0.03)*1:.0f},"
         "averaging_upper_bounds_mk")
+    write_json(cells, {"n_workers": N, "f": F, "steps": steps,
+                       "seeds": list(seeds), "smoke": smoke,
+                       "task": "gaussian-mixture MLP (Fig 3 stand-in)"},
+               json_path)
     return out
 
 

@@ -1,0 +1,149 @@
+"""Wire-format bandwidth sweep: bytes/step and round time per codec × (n, d).
+
+At d ≈ 10⁹ the paper's O(d) local cost leaves gradient *transport* as the
+bottleneck; this section measures what each ``repro.comm`` codec buys on
+the wire and what it costs in compute.  Per (codec × (n, d)) cell:
+
+* ``wire_bytes`` / ``bytes_per_worker`` — exact byte accounting from the
+  codec's ``leaf_wire_bytes`` (what ``WireStats`` reports in campaigns);
+* ``us_per_call``  — wall time of the full jitted round
+  encode → wire → multi-Bulyan aggregate on the encoded stack (paper §V-A
+  timing protocol: warm-up, 7 runs, drop the 2 farthest from the median);
+* ``ratio_vs_fp32`` — the wire compression factor.
+
+Persists ``BENCH_comm.json`` (schema ``comm.v1``, gated by
+``benchmarks/validate_bench.py``):
+
+    {"schema": "comm.v1",
+     "results": {codec: {"n=<n>,d=<d>": {"wire_bytes": ..,
+                                         "bytes_per_worker": ..,
+                                         "us_per_call": ..,
+                                         "ratio_vs_fp32": ..}}}}
+
+The validator additionally asserts the acceptance ordering: wire bytes
+strictly fp32 > bf16 > qsgd int8 on every shared (n, d) point.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.comm import codecs as CC
+from repro.core import api
+
+CODEC_SPECS = ("fp32", "bf16", "qsgd:bits=8", "signsgd", "topk:frac=0.01")
+NS = (11, 23)
+DS = (262_144, 1_048_576)
+SMOKE_NS = (7, 11)
+SMOKE_DS = (4_096, 16_384)
+BENCH_JSON = "BENCH_comm.json"
+
+
+def _f_for(n: int) -> int:
+    return max(1, (n - 3) // 4)          # the paper's f = floor((n-3)/4)
+
+
+def _timed(fn, *args, reps: int = 7, drop: int = 2) -> Tuple[float, float]:
+    out = fn(*args)
+    jax.block_until_ready(out)           # compile + warm
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times = np.asarray(times)
+    med = np.median(times)
+    keep = times[np.argsort(np.abs(times - med))][: reps - drop]
+    return float(keep.mean()), float(keep.std())
+
+
+def _round_fn(codec: CC.Codec, f: int):
+    """The full wire round: encode -> EncodedGrads -> multi-Bulyan."""
+
+    @jax.jit
+    def round_(G, key):
+        enc, _ = codec.encode(G, key=key)
+        return api.aggregate_tree(enc, f, "multi_bulyan")
+
+    return round_
+
+
+def write_json(results: Dict[str, Dict[str, Dict[str, float]]],
+               path: str = BENCH_JSON) -> None:
+    payload = {"schema": "comm.v1", "results": results}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+
+
+def run(csv_rows: List[str], *, smoke: bool = False,
+        json_path: str = BENCH_JSON) -> Dict[str, Dict[str, Dict[str, float]]]:
+    rng = np.random.default_rng(0)
+    key = jax.random.key(0)
+    ns, ds = (SMOKE_NS, SMOKE_DS) if smoke else (NS, DS)
+    reps, drop = (3, 1) if smoke else (7, 2)
+    results: Dict[str, Dict[str, Dict[str, float]]] = \
+        {spec: {} for spec in CODEC_SPECS}
+    for d in ds:
+        for n in ns:
+            G = jnp.asarray(rng.uniform(size=(n, d)).astype(np.float32))
+            f = _f_for(n)
+            cell_key = f"n={n},d={d}"
+            fp32_bytes = 4 * n * d
+            for spec in CODEC_SPECS:
+                codec = CC.get_codec(spec)
+                enc, _ = codec.encode(G, key=key)
+                mean, std = _timed(_round_fn(codec, f), G, key,
+                                   reps=reps, drop=drop)
+                cell = {
+                    "wire_bytes": enc.wire_bytes,
+                    "bytes_per_worker": enc.bytes_per_worker,
+                    "us_per_call": mean * 1e6,
+                    "ratio_vs_fp32": round(fp32_bytes / enc.wire_bytes, 4),
+                }
+                results[spec][cell_key] = cell
+                csv_rows.append(
+                    f"bandwidth/{spec}/n={n}/d={d},{mean*1e6:.1f},"
+                    f"bytes_per_worker={enc.bytes_per_worker}"
+                    f"_ratio={cell['ratio_vs_fp32']:.2f}"
+                    f"_std_us={std*1e6:.1f}")
+    # derived: the acceptance ordering on every point (also CI-gated by
+    # validate_bench's comm.v1 check)
+    for d in ds:
+        for n in ns:
+            ckey = f"n={n},d={d}"
+            o = [results[s][ckey]["wire_bytes"]
+                 for s in ("fp32", "bf16", "qsgd:bits=8")]
+            csv_rows.append(
+                f"bandwidth/order_fp32_bf16_int8/{ckey},"
+                f"{int(o[0] > o[1] > o[2])},strict_ordering_required")
+    write_json(results, json_path)
+    return results
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (same codecs, small shapes)")
+    ap.add_argument("--json", default=BENCH_JSON)
+    args = ap.parse_args(argv)
+    rows: List[str] = []
+    run(rows, smoke=args.smoke, json_path=args.json)
+    print("name,us_per_call,derived")
+    print("\n".join(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

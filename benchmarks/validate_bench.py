@@ -2,7 +2,7 @@
 
 Usage: python -m benchmarks.validate_bench [FILE ...]
 
-Defaults to ``BENCH_agg_time.json``.  Two schemas are known, dispatched on
+Defaults to ``BENCH_agg_time.json``.  Four schemas are known, dispatched on
 the payload's ``schema`` field:
 
 * agg_time (``rule -> 'n=<n>,d=<d>' -> us_per_call``) — must contain the
@@ -10,7 +10,13 @@ the payload's ``schema`` field:
   trajectory exists to track;
 * resilience (``sim.resilience.v1``) — rule × attack campaign cells from
   ``benchmarks/resilience.py``, each with finite honest-mean deviation,
-  byzantine selection mass in [0, 1] and a finite final loss.
+  byzantine selection mass in [0, 1] and a finite final loss;
+* comm (``comm.v1``) — codec × (n, d) wire cells from
+  ``benchmarks/bandwidth.py``: positive byte counts and round times, and
+  the acceptance ordering wire_bytes fp32 > bf16 > qsgd int8 *strict* on
+  every (n, d) point the three rows share;
+* accuracy (``accuracy.v1``) — rule × per-worker-batch cells from
+  ``benchmarks/accuracy.py``, accuracies in [0, 1].
 
 Fails (exit 1) when a file is missing, is not JSON, or deviates from its
 schema.
@@ -25,11 +31,18 @@ import sys
 REQUIRED_ROWS = ("multi_bulyan[xla]", "multi_bulyan[pallas]",
                  "multi_bulyan[fused]")
 _KEY_RE = re.compile(r"^n=\d+,d=\d+$")
+_BATCH_RE = re.compile(r"^b=\d+$")
 
 AGG_TIME_SCHEMA = "rule -> 'n=<n>,d=<d>' -> us_per_call"
 RESILIENCE_SCHEMA = "sim.resilience.v1"
 RESILIENCE_FIELDS = ("honest_dev_mean", "honest_dev_max", "byz_mass_mean",
                      "final_loss", "loss_delta_post")
+COMM_SCHEMA = "comm.v1"
+COMM_FIELDS = ("wire_bytes", "bytes_per_worker", "us_per_call",
+               "ratio_vs_fp32")
+COMM_ORDER = ("fp32", "bf16", "qsgd:bits=8")   # strictly decreasing bytes
+ACCURACY_SCHEMA = "accuracy.v1"
+ACCURACY_FIELDS = ("acc_mean", "acc_std")
 
 
 def _fail(msg: str) -> "list[str]":
@@ -86,6 +99,81 @@ def _check_resilience(path: str, results: dict) -> "list[str]":
     return problems
 
 
+def _check_comm(path: str, results: dict) -> "list[str]":
+    problems = []
+    for codec, grid in results.items():
+        if not isinstance(grid, dict) or not grid:
+            problems.append(f"codec {codec!r}: empty or non-object grid")
+            continue
+        for ckey, cell in grid.items():
+            if not _KEY_RE.match(ckey):
+                problems.append(f"codec {codec!r}: bad grid key {ckey!r} "
+                                "(want 'n=<n>,d=<d>')")
+            if not isinstance(cell, dict):
+                problems.append(f"{codec}/{ckey}: cell must be an object")
+                continue
+            missing = [f for f in COMM_FIELDS if f not in cell]
+            if missing:
+                problems.append(f"{codec}/{ckey}: missing {missing}")
+            for f in COMM_FIELDS:
+                v = cell.get(f)
+                if v is None:
+                    continue
+                if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                        or v <= 0:
+                    problems.append(f"{codec}/{ckey}: {f} must be a "
+                                    f"positive finite number, got {v!r}")
+    missing_rows = [c for c in COMM_ORDER if c not in results]
+    if missing_rows:
+        problems.append(f"missing required codec row(s) {missing_rows} "
+                        f"(the fp32 > bf16 > int8 ordering gate needs them)")
+        return problems
+    shared = set.intersection(*(set(results[c]) for c in COMM_ORDER))
+    if len(shared) < 2:
+        problems.append(
+            f"need >= 2 shared (n, d) points across {COMM_ORDER}, "
+            f"got {sorted(shared)}")
+    for ckey in sorted(shared):
+        sizes = [results[c][ckey].get("wire_bytes", 0) for c in COMM_ORDER]
+        if not (isinstance(sizes[0], (int, float))
+                and sizes[0] > sizes[1] > sizes[2] > 0):
+            problems.append(
+                f"[{ckey}]: wire_bytes not strictly ordered "
+                f"fp32 > bf16 > qsgd int8: {dict(zip(COMM_ORDER, sizes))}")
+    return problems
+
+
+def _check_accuracy(path: str, results: dict) -> "list[str]":
+    problems = []
+    for rule, grid in results.items():
+        if not isinstance(grid, dict) or not grid:
+            problems.append(f"rule {rule!r}: empty or non-object grid")
+            continue
+        for bkey, cell in grid.items():
+            if not _BATCH_RE.match(bkey):
+                problems.append(f"rule {rule!r}: bad grid key {bkey!r} "
+                                "(want 'b=<batch>')")
+            if not isinstance(cell, dict):
+                problems.append(f"{rule}/{bkey}: cell must be an object")
+                continue
+            missing = [f for f in ACCURACY_FIELDS if f not in cell]
+            if missing:
+                problems.append(f"{rule}/{bkey}: missing {missing}")
+            acc = cell.get("acc_mean")
+            if acc is not None and (not isinstance(acc, (int, float))
+                                    or not 0.0 <= acc <= 1.0):
+                problems.append(f"{rule}/{bkey}: acc_mean {acc!r} "
+                                "outside [0, 1]")
+            std = cell.get("acc_std")
+            if std is not None and (not isinstance(std, (int, float))
+                                    or std < 0.0 or not math.isfinite(std)):
+                problems.append(f"{rule}/{bkey}: bad acc_std {std!r}")
+    for rule in ("average", "multi_bulyan"):
+        if rule not in results:
+            problems.append(f"missing required rule row {rule!r}")
+    return problems
+
+
 def check(path: str) -> "list[str]":
     """Return a list of problems (empty = valid)."""
     try:
@@ -106,6 +194,10 @@ def check(path: str) -> "list[str]":
     schema = payload.get("schema")
     if schema == RESILIENCE_SCHEMA:
         problems += _check_resilience(path, results)
+    elif schema == COMM_SCHEMA:
+        problems += _check_comm(path, results)
+    elif schema == ACCURACY_SCHEMA:
+        problems += _check_accuracy(path, results)
     elif schema == AGG_TIME_SCHEMA or schema is None:
         # None: legacy agg_time files predate the schema tag — still
         # validate the grid, with the missing-field problem noted above
@@ -113,7 +205,7 @@ def check(path: str) -> "list[str]":
     else:
         problems.append(
             f"{path}: unrecognised schema {schema!r}; known: "
-            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA]}")
+            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA]}")
     return problems
 
 

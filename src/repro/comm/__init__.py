@@ -1,0 +1,30 @@
+"""repro.comm — compressed gradient wire formats + bandwidth accounting.
+
+The paper's O(d) local-cost claim leaves one bottleneck unmodelled: moving
+n gradients to the aggregator.  This package gives the repo a *wire*:
+
+* ``codecs``    — encode/decode pairs over stacked gradient pytrees
+  (:class:`~repro.comm.codecs.EncodedGrads`), addressed by the same
+  spec-string grammar as attacks (``get_codec("qsgd:bits=8")``), with
+  optional error-feedback residual state;
+* ``transport`` — the simulated mesh wire: exact per-worker byte
+  accounting and chunked-gather scheduling (:class:`WireStats`).
+
+The fused dequantize→stats kernel lives in ``repro.kernels.dequant_stats``;
+``core.api.compute_stats`` / ``Aggregator.apply`` accept encoded stacks
+directly (DESIGN.md §9).
+"""
+from repro.comm.codecs import (  # noqa: F401
+    CODECS,
+    Codec,
+    EncodedGrads,
+    available_codecs,
+    encoded_pairwise_stats,
+    get_codec,
+    is_encoded,
+)
+from repro.comm.transport import (  # noqa: F401
+    WireStats,
+    gather_stats,
+    wire_stats,
+)

@@ -1,0 +1,487 @@
+"""Gradient wire codecs: encode/decode pairs over stacked gradient pytrees.
+
+A codec maps the stacked gradient pytree (every leaf ``(n, ...)``) to an
+:class:`EncodedGrads` wire container — payload arrays + scale/index
+sidecars + the *exact* wire byte count — and back.  Codecs are addressed by
+the same spec-string grammar as attacks (``core.attacks.parse_spec``):
+
+* ``"identity"`` / ``"fp32"``     — the uncompressed reference wire;
+* ``"bf16"``                      — bfloat16 truncation (lossless round
+  trip for bf16 inputs, 2 B/coordinate);
+* ``"qsgd:bits=8"``               — QSGD stochastic quantization (Alistarh
+  et al. 2017): per-worker max-abs scale, unbiased stochastic rounding to
+  ``2^(bits-1)-1`` integer levels;
+* ``"signsgd"``                   — scaled sign compression (Bernstein et
+  al. 2018): 1 bit/coordinate + one per-worker magnitude;
+* ``"topk:frac=0.01"``            — magnitude top-k sparsification with an
+  int32 index sidecar.
+
+Any codec takes ``ef=1`` for error feedback (Karimireddy et al. 2019): the
+per-worker residual ``e_t = (g_t + e_{t-1}) - decode(encode(g_t + e_{t-1}))``
+is threaded through the trainer state exactly like the adaptive-attack slot
+(``dist.trainer`` state layouts), so the compression error telescopes
+instead of accumulating.
+
+Encoding is per-worker-row and per-leaf; per-leaf PRNG keys follow the
+``inject_byzantine`` convention (``fold_in(key, leaf_offset + i)``) so the
+streaming trainer's block-by-block encode reproduces the stacked trainer's
+randomness exactly.
+
+Decode invariant (DESIGN.md §9): for every codec whose payload admits the
+fused dequantize→stats kernel, ``decode`` is *exactly*
+``payload.astype(f32) * sidecar_row_multiplier`` — the sidecar stores the
+final per-row dequant multiplier, never a numerator/denominator pair, so
+the kernel and the XLA decode path are bitwise-identical in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attacks import parse_spec
+
+Array = jax.Array
+PyTree = Any
+
+
+# ==========================================================================
+# the wire container
+# ==========================================================================
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("payload", "sidecar"),
+    meta_fields=("spec", "n", "shapes", "wire_bytes"))
+@dataclasses.dataclass(frozen=True)
+class EncodedGrads:
+    """One round's wire messages from all n workers.
+
+    ``payload`` mirrors the gradient pytree structure (per-leaf quantized
+    arrays; top-k leaves are ``(n, k)`` value stacks); ``sidecar`` carries
+    the per-leaf per-worker dequant multipliers (or int32 indices for
+    top-k), ``None`` for sidecar-free codecs.  ``shapes`` records the
+    original leaf shapes in leaf order (decode needs them for top-k
+    scatter); ``wire_bytes`` is the exact total byte count all n workers
+    put on the wire this round — a static python int, so byte accounting
+    is free under jit.
+    """
+
+    payload: PyTree
+    sidecar: PyTree
+    spec: str
+    n: int
+    shapes: Tuple[Tuple[int, ...], ...]
+    wire_bytes: int
+
+    @property
+    def bytes_per_worker(self) -> int:
+        return self.wire_bytes // self.n
+
+
+def is_encoded(x: Any) -> bool:
+    return isinstance(x, EncodedGrads)
+
+
+def _leaf2d(x: Array) -> Array:
+    return x.reshape((x.shape[0], -1))
+
+
+def _row_shape(n: int) -> Tuple[int, ...]:
+    return (n,)
+
+
+# ==========================================================================
+# the codec protocol
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Encode/decode pair over stacked gradient pytrees.
+
+    Subclasses implement the three leaf-level primitives on the ``(n, m)``
+    2-d row view; the pytree walk, error feedback, byte totals and the
+    :class:`EncodedGrads` assembly are shared here.  ``ef=1`` (spec
+    ``"name:ef=1"``) turns on the error-feedback residual, which makes the
+    codec *stateful* — the trainer must thread the residual pytree
+    (``init_residual``) through its state.
+    """
+
+    name: str = ""
+    ef: float = 0.0
+
+    @property
+    def stateful(self) -> bool:
+        return bool(self.ef)
+
+    # ------------------------------------------------------- leaf primitives
+    def encode_leaf(self, x: Array, key: Optional[Array]
+                    ) -> Tuple[Array, Optional[Array]]:
+        """(n, m) fp32 -> (payload rows, sidecar rows or None)."""
+        raise NotImplementedError
+
+    def decode_leaf(self, payload: Array, sidecar: Optional[Array],
+                    shape: Tuple[int, ...]) -> Array:
+        """(payload, sidecar) -> (n, m) fp32 rows (m = prod(shape[1:]))."""
+        raise NotImplementedError
+
+    def leaf_wire_bytes(self, shape: Tuple[int, ...]) -> int:
+        """Exact bytes all n workers wire for one ``(n, ...)`` leaf."""
+        raise NotImplementedError
+
+    def dequant_form(self, payload: Array, sidecar: Optional[Array]
+                     ) -> Optional[Tuple[Array, Array]]:
+        """(payload2d, (n,) row multipliers) when the leaf admits the fused
+        dequantize→stats kernel (int8/bf16 payload × per-row multiplier);
+        ``None`` routes the leaf through decode-then-stats instead."""
+        return None
+
+    # ------------------------------------------------------------ tree walk
+    def init_residual(self, grads_like: PyTree) -> PyTree:
+        """Zero error-feedback state mirroring the stacked gradient shapes."""
+        return jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), grads_like)
+
+    def encode(self, grads: PyTree, *, key: Optional[Array] = None,
+               residual: Optional[PyTree] = None, leaf_offset: int = 0
+               ) -> Tuple[EncodedGrads, Optional[PyTree]]:
+        """Encode a stacked pytree; returns (wire container, new residual).
+
+        With error feedback the encoder compresses ``g + residual`` and the
+        new residual is the compression error; stateless codecs return
+        ``residual`` unchanged (``None`` normally).
+        """
+        if self.stateful:
+            if residual is None:
+                raise ValueError(
+                    f"codec {self.name!r} with ef=1 needs a residual pytree; "
+                    "seed it with init_residual()")
+            grads = jax.tree.map(
+                lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+        leaves, treedef = jax.tree.flatten(grads)
+        if not leaves:
+            raise ValueError("empty gradient pytree")
+        n = leaves[0].shape[0]
+        payloads, sidecars, shapes = [], [], []
+        total = 0
+        for i, leaf in enumerate(leaves):
+            if leaf.shape[0] != n:
+                raise ValueError("all leaves must share the worker axis size")
+            k = jax.random.fold_in(key, leaf_offset + i) \
+                if key is not None else None
+            p, s = self.encode_leaf(
+                _leaf2d(leaf).astype(jnp.float32), k)
+            payloads.append(self._payload_to_leaf_shape(p, leaf.shape))
+            sidecars.append(s)
+            shapes.append(tuple(leaf.shape))
+            total += self.leaf_wire_bytes(tuple(leaf.shape))
+        sidecar = None if all(s is None for s in sidecars) else \
+            jax.tree.unflatten(treedef, sidecars)
+        enc = EncodedGrads(payload=jax.tree.unflatten(treedef, payloads),
+                           sidecar=sidecar, spec=self.spec(), n=n,
+                           shapes=tuple(shapes), wire_bytes=total)
+        if not self.stateful:
+            return enc, residual
+        new_residual = jax.tree.map(
+            lambda g, d: g - d, grads, self.decode(enc))
+        return enc, new_residual
+
+    def decode(self, enc: EncodedGrads) -> PyTree:
+        """Wire container -> fp32 stacked pytree (original leaf shapes)."""
+        p_leaves, treedef = jax.tree.flatten(enc.payload)
+        s_leaves = jax.tree.leaves(enc.sidecar) \
+            if enc.sidecar is not None else [None] * len(p_leaves)
+        out = [
+            self.decode_leaf(p, s, shape).reshape(shape)
+            for p, s, shape in zip(p_leaves, s_leaves, enc.shapes)
+        ]
+        return jax.tree.unflatten(treedef, out)
+
+    def _payload_to_leaf_shape(self, payload: Array,
+                               shape: Tuple[int, ...]) -> Array:
+        """Payload rows back to the original leaf shape when size-preserving
+        (keeps the wire-attack / fused-stats row view trivial)."""
+        if payload.size == int(payload.shape[0]) * _numel(shape):
+            return payload.reshape(shape)
+        return payload
+
+    def spec(self) -> str:
+        kv = [f"{f.name}={_fmt(getattr(self, f.name))}"
+              for f in dataclasses.fields(self) if f.name != "name"
+              and getattr(self, f.name) != f.default]
+        return self.name + (":" + ",".join(kv) if kv else "")
+
+
+def _numel(shape: Tuple[int, ...]) -> int:
+    m = 1
+    for s in shape[1:]:
+        m *= s
+    return m
+
+
+def _fmt(v: float) -> str:
+    return str(int(v)) if float(v).is_integer() else str(v)
+
+
+# ==========================================================================
+# the codecs
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec(Codec):
+    """The uncompressed fp32 wire — the byte-accounting reference."""
+
+    name: str = "identity"
+
+    def encode_leaf(self, x, key):
+        return x, None
+
+    def decode_leaf(self, payload, sidecar, shape):
+        return _leaf2d(payload)
+
+    def leaf_wire_bytes(self, shape):
+        return 4 * shape[0] * _numel(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class BF16Codec(Codec):
+    """bfloat16 truncation: 2 B/coordinate, no sidecar.
+
+    Round trip is the identity on values already representable in bf16
+    (fp32 -> bf16 -> fp32 keeps the 8-bit exponent, truncates mantissa).
+    """
+
+    name: str = "bf16"
+
+    def encode_leaf(self, x, key):
+        return x.astype(jnp.bfloat16), None
+
+    def decode_leaf(self, payload, sidecar, shape):
+        # exact: *1.0 keeps bitwise parity with the fused kernel's
+        # payload.astype(f32) * multiplier form
+        return _leaf2d(payload).astype(jnp.float32)
+
+    def leaf_wire_bytes(self, shape):
+        return 2 * shape[0] * _numel(shape)
+
+    def dequant_form(self, payload, sidecar):
+        p = _leaf2d(payload)
+        return p, jnp.ones((p.shape[0],), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDCodec(Codec):
+    """QSGD stochastic quantization (Alistarh et al. 2017), max-abs scale.
+
+    Per worker row: ``L = 2^(bits-1) - 1`` levels, scale ``s = max|g|``,
+    payload ``stochastic_round(g · L/s)`` as int8, sidecar the dequant
+    multiplier ``s/L``.  Stochastic rounding (``floor(q + u)``,
+    u ~ U[0,1)) makes the decode *unbiased*: ``E[decode(encode(g))] = g``
+    coordinate-wise — property-tested in tests/test_comm.py.  Wire cost:
+    ``bits`` per coordinate + one fp32 scale per worker per leaf.
+    """
+
+    name: str = "qsgd"
+    bits: float = 8.0
+
+    def __post_init__(self):
+        b = int(self.bits)
+        if not 2 <= b <= 8 or b != self.bits:
+            raise ValueError(f"qsgd bits must be an integer in [2, 8], "
+                             f"got {self.bits}")
+
+    @property
+    def levels(self) -> int:
+        return 2 ** (int(self.bits) - 1) - 1
+
+    def encode_leaf(self, x, key):
+        if key is None:
+            raise ValueError("qsgd needs a PRNG key for stochastic rounding")
+        L = float(self.levels)
+        scale = jnp.max(jnp.abs(x), axis=1)                      # (n,)
+        mult = scale / L                                         # (n,)
+        safe = jnp.where(mult > 0.0, mult, 1.0)
+        q = x / safe[:, None]                                    # |q| <= L
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        ints = jnp.floor(q + u)                                  # unbiased
+        ints = jnp.clip(ints, -L, L)
+        return ints.astype(jnp.int8), mult
+
+    def decode_leaf(self, payload, sidecar, shape):
+        return _leaf2d(payload).astype(jnp.float32) * sidecar[:, None]
+
+    def leaf_wire_bytes(self, shape):
+        m = _numel(shape)
+        return shape[0] * ((m * int(self.bits) + 7) // 8 + 4)
+
+    def dequant_form(self, payload, sidecar):
+        return _leaf2d(payload), sidecar
+
+
+@dataclasses.dataclass(frozen=True)
+class SignSGDCodec(Codec):
+    """Scaled sign compression (Bernstein et al. 2018).
+
+    1 bit per coordinate on the wire (payload container is int8 ±1; the
+    byte count models the packed form) + one per-row magnitude — the
+    mean |g| so the decode preserves the row's l1 mass.  Biased; pair
+    with ``ef=1`` for convergence (error feedback telescopes the bias).
+    """
+
+    name: str = "signsgd"
+
+    def encode_leaf(self, x, key):
+        mult = jnp.mean(jnp.abs(x), axis=1)                      # (n,)
+        sign = jnp.where(x >= 0.0, 1, -1).astype(jnp.int8)
+        return sign, mult
+
+    def decode_leaf(self, payload, sidecar, shape):
+        return _leaf2d(payload).astype(jnp.float32) * sidecar[:, None]
+
+    def leaf_wire_bytes(self, shape):
+        m = _numel(shape)
+        return shape[0] * ((m + 7) // 8 + 4)
+
+    def dequant_form(self, payload, sidecar):
+        return _leaf2d(payload), sidecar
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification: keep the k = ceil(frac·m) largest
+    coordinates per worker row, wire (value, int32 index) pairs.
+
+    Keeps at least ``k/m`` of every row's squared-norm mass (the retained
+    coordinates are the largest).  Biased — the canonical error-feedback
+    client (``topk:frac=0.01,ef=1``).
+    """
+
+    name: str = "topk"
+    frac: float = 0.01
+
+    def __post_init__(self):
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(f"topk frac must be in (0, 1], got {self.frac}")
+
+    def row_k(self, m: int) -> int:
+        return max(1, min(m, int(-(-self.frac * m // 1))))   # ceil
+
+    def encode_leaf(self, x, key):
+        k = self.row_k(x.shape[1])
+        _, idx = jax.lax.top_k(jnp.abs(x), k)                    # (n, k)
+        vals = jnp.take_along_axis(x, idx, axis=1)
+        return vals, idx.astype(jnp.int32)
+
+    def decode_leaf(self, payload, sidecar, shape):
+        m = _numel(shape)
+        vals = _leaf2d(payload).astype(jnp.float32)       # (n, k)
+        idx = _leaf2d(sidecar)
+        out = jnp.zeros((vals.shape[0], m), jnp.float32)
+        rows = jnp.arange(vals.shape[0])[:, None]
+        return out.at[rows, idx].set(vals)
+
+    def leaf_wire_bytes(self, shape):
+        return shape[0] * self.row_k(_numel(shape)) * 8
+
+
+CODECS: Dict[str, Any] = {
+    "identity": IdentityCodec,
+    "fp32": IdentityCodec,
+    "bf16": BF16Codec,
+    "qsgd": QSGDCodec,
+    "signsgd": SignSGDCodec,
+    "topk": TopKCodec,
+}
+
+
+def get_codec(spec: str) -> Codec:
+    """Resolve a codec spec (``"name"`` or ``"name:k=v,..."``) to an
+    instance, mirroring ``core.attacks.get_adaptive``'s validation."""
+    name, kwargs = parse_spec(spec)
+    try:
+        cls = CODECS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown codec {name!r}; available: {sorted(CODECS)}") from None
+    fields = {f.name for f in dataclasses.fields(cls) if f.name != "name"}
+    unknown = set(kwargs) - fields
+    if unknown:
+        raise ValueError(
+            f"codec {name!r} has no parameter(s) {sorted(unknown)}; "
+            f"tunable: {sorted(fields)}")
+    return cls(**kwargs)
+
+
+def available_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(set(CODECS)))
+
+
+# ==========================================================================
+# encoded statistics — the fused dequantize→stats entry point
+# ==========================================================================
+def encoded_leaf_contrib(codec: Codec, payload: Array,
+                         sidecar: Optional[Array], shape: Tuple[int, ...],
+                         *, use_pallas: bool = False
+                         ) -> Tuple[Array, Array]:
+    """One encoded leaf's raw (dists, sq_norms) contribution.
+
+    Under ``use_pallas`` a leaf whose codec admits the dequant form
+    (int8/bf16 payload × per-row multiplier) goes through the fused
+    ``dequant_stats`` kernel — the fp32 rows never exist in HBM; identity
+    leaves take the plain ``pairwise_stats`` kernel, everything else
+    decodes then contracts (XLA).  Contract matches
+    ``core.api.leaf_sqdist_contrib``: raw (unclamped, diagonal kept) so
+    cross-leaf accumulation stays a plain sum.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        form = codec.dequant_form(payload, sidecar)
+        if form is not None:
+            return kops.dequant_stats(*form)
+        # no dequant form (identity / top-k): decode, then the same
+        # single-pass kernel the decoded fp32 path takes
+        g = codec.decode_leaf(payload, sidecar, shape)
+        return kops.pairwise_stats(_leaf2d(g))
+    from repro.core import api
+    # original leaf shape, so the contraction (and its float summation
+    # order) is exactly what decode-then-tree_pairwise_stats computes
+    g = codec.decode_leaf(payload, sidecar, shape).reshape(shape)
+    return api._leaf_stats_contrib(g)
+
+
+def _accumulate(enc: EncodedGrads, use_pallas: bool
+                ) -> Tuple[Array, Array]:
+    codec = get_codec(enc.spec)
+    p_leaves = jax.tree.leaves(enc.payload)
+    s_leaves = jax.tree.leaves(enc.sidecar) \
+        if enc.sidecar is not None else [None] * len(p_leaves)
+    total_d = jnp.zeros((enc.n, enc.n), jnp.float32)
+    total_s = jnp.zeros((enc.n,), jnp.float32)
+    for p, s, shape in zip(p_leaves, s_leaves, enc.shapes):
+        dd, sq = encoded_leaf_contrib(codec, p, s, shape,
+                                      use_pallas=use_pallas)
+        total_d = total_d + dd
+        total_s = total_s + sq
+    return total_d, total_s
+
+
+def encoded_raw_contrib(enc: EncodedGrads, *, use_pallas: bool = False
+                        ) -> Array:
+    """A container's raw (n, n) distance contribution (no clamp/diag) —
+    the streaming trainer's per-block accumulation unit, mirroring
+    ``core.api.leaf_sqdist_contrib`` so the cross-block float summation
+    stays identical to the stacked encoded path."""
+    return _accumulate(enc, use_pallas)[0]
+
+
+def encoded_pairwise_stats(enc: EncodedGrads, *, use_pallas: bool = False
+                           ) -> Tuple[Array, Array]:
+    """Single pass over the wire container: ((n, n) sq-dists, (n,) norms).
+
+    The encoded mirror of ``core.api.tree_pairwise_stats`` — same raw
+    accumulation, finalised once; bitwise-identical to decode-then-stats
+    in interpret mode for dequant-form codecs (tests/test_comm.py).
+    """
+    from repro.core import api
+    total_d, total_s = _accumulate(enc, use_pallas)
+    return api.finalize_dists(total_d), total_s

@@ -1,0 +1,120 @@
+"""Simulated mesh wire: per-worker byte accounting + chunked gather.
+
+The container has no multi-host fabric, so the wire is *accounted*, not
+transmitted: every quantity here is a static python int derived from leaf
+shapes and the codec's exact ``leaf_wire_bytes``, which makes the
+accounting free under jit and bit-stable across runs.  The model is the
+production gather the repo's trainers imply: each of the n workers ships
+its gradient row set to the aggregator over a mesh in ``chunk_bytes``
+chunks (chunking bounds the aggregator's receive buffer and is what a real
+ring/tree gather would pipeline).
+
+:class:`WireStats` is what campaigns surface per phase in the
+``sim.campaign.v1`` report and what ``benchmarks/bandwidth.py`` persists
+per codec × (n, d) cell in ``BENCH_comm.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.comm.codecs import Codec, EncodedGrads, get_codec
+
+PyTree = Any
+
+DEFAULT_CHUNK_BYTES = 4 << 20          # 4 MiB receive-buffer chunks
+
+
+@dataclasses.dataclass(frozen=True)
+class WireStats:
+    """One round's wire accounting for an n-worker gather.
+
+    ``bytes_per_worker`` is exact (codec ``leaf_wire_bytes`` summed over
+    leaves); ``fp32_bytes_per_worker`` is the uncompressed reference for
+    the same shapes, so ``compression`` is the end-to-end wire win.
+    ``chunks_per_worker`` is how many ``chunk_bytes`` transfers the gather
+    schedules per worker (the pipelining depth of the simulated wire).
+    """
+
+    codec: str
+    n: int
+    bytes_per_worker: int
+    fp32_bytes_per_worker: int
+    chunk_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        return self.n * self.bytes_per_worker
+
+    @property
+    def compression(self) -> float:
+        return self.fp32_bytes_per_worker / max(self.bytes_per_worker, 1)
+
+    @property
+    def chunks_per_worker(self) -> int:
+        return -(-self.bytes_per_worker // self.chunk_bytes)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "codec": self.codec,
+            "n_workers": self.n,
+            "bytes_per_worker": self.bytes_per_worker,
+            "total_bytes": self.total_bytes,
+            "fp32_bytes_per_worker": self.fp32_bytes_per_worker,
+            "compression": round(self.compression, 4),
+            "chunk_bytes": self.chunk_bytes,
+            "chunks_per_worker": self.chunks_per_worker,
+        }
+
+
+def _shapes_of(grads_like: PyTree, n: Optional[int]
+               ) -> Tuple[Tuple[int, ...], ...]:
+    """Leaf shapes of a stacked pytree — or of a *param* pytree with the
+    worker axis ``n`` prepended (the engine passes params, not grads)."""
+    leaves = jax.tree.leaves(grads_like)
+    if n is None:
+        return tuple(tuple(x.shape) for x in leaves)
+    return tuple((n,) + tuple(x.shape) for x in leaves)
+
+
+def wire_stats(codec: "str | Codec", grads_like: PyTree, *,
+               n: Optional[int] = None,
+               chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> WireStats:
+    """Byte accounting for one gather round of ``grads_like``.
+
+    ``grads_like`` is either the stacked gradient pytree (leaves
+    ``(n, ...)``; leave ``n=None``) or the *parameter* pytree with ``n``
+    given, in which case the worker axis is prepended shape-only — no
+    arrays are materialised.
+    """
+    c = get_codec(codec) if isinstance(codec, str) else codec
+    shapes = _shapes_of(grads_like, n)
+    if not shapes:
+        raise ValueError("empty pytree")
+    n_workers = shapes[0][0]
+    total = sum(c.leaf_wire_bytes(s) for s in shapes)
+    fp32 = sum(4 * s[0] * _numel(s) for s in shapes)
+    return WireStats(codec=c.spec(), n=n_workers,
+                     bytes_per_worker=total // n_workers,
+                     fp32_bytes_per_worker=fp32 // n_workers,
+                     chunk_bytes=chunk_bytes)
+
+
+def gather_stats(enc: EncodedGrads, *,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> WireStats:
+    """WireStats straight off a wire container (exact, already-encoded)."""
+    c = get_codec(enc.spec)
+    fp32 = sum(4 * s[0] * _numel(s) for s in enc.shapes)
+    return WireStats(codec=enc.spec, n=enc.n,
+                     bytes_per_worker=enc.bytes_per_worker,
+                     fp32_bytes_per_worker=fp32 // enc.n,
+                     chunk_bytes=chunk_bytes)
+
+
+def _numel(shape: Tuple[int, ...]) -> int:
+    m = 1
+    for s in shape[1:]:
+        m *= s
+    return m

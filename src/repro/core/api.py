@@ -142,6 +142,19 @@ def tree_sq_norms(grads: PyTree) -> Array:
     return total
 
 
+def _as_encoded(grads: PyTree):
+    """The wire container, or None for a plain pytree.
+
+    Cheap duck check first so the common path never imports ``repro.comm``
+    (``core`` stays the bottom layer; the comm subsystem imports only
+    ``core.attacks``, so the lazy import is cycle-free).
+    """
+    if type(grads).__name__ != "EncodedGrads":
+        return None
+    from repro.comm import codecs as CC
+    return grads if CC.is_encoded(grads) else None
+
+
 def compute_stats(grads: PyTree, f: int, *, needs_dists: bool = True,
                   needs_norms: bool = False, use_pallas: bool = False,
                   dists: Optional[Array] = None) -> AggStats:
@@ -152,7 +165,22 @@ def compute_stats(grads: PyTree, f: int, *, needs_dists: bool = True,
     When distances are needed the single-pass kernel also yields the norms
     as a free byproduct of the same HBM read, so ``sq_norms`` is populated
     whenever ``dists`` is computed here.
+
+    ``grads`` may be a ``repro.comm`` :class:`EncodedGrads` wire container:
+    statistics then run straight on the quantized payloads — through the
+    fused dequantize→stats kernel under ``use_pallas`` (DESIGN.md §9) —
+    without materialising the decoded stack here.
     """
+    enc = _as_encoded(grads)
+    if enc is not None:
+        from repro.comm import codecs as CC
+        norms = None
+        if needs_dists and dists is None:
+            dists, norms = CC.encoded_pairwise_stats(enc,
+                                                     use_pallas=use_pallas)
+        if needs_norms and norms is None:
+            norms = CC.encoded_pairwise_stats(enc, use_pallas=use_pallas)[1]
+        return AggStats(n=enc.n, f=f, dists=dists, sq_norms=norms)
     leaves = jax.tree.leaves(grads)
     if not leaves:
         raise ValueError("empty gradient pytree")
@@ -370,7 +398,16 @@ class Aggregator:
         With ``use_pallas`` the bulyan kind takes the fully fused kernel
         path (one HBM read per leaf, no (θ, d) intermediates); pass
         ``fused=False`` to benchmark the two-step Pallas path instead.
+
+        An :class:`EncodedGrads` wire container is decoded first — the
+        apply phase mixes values across workers, so it runs on the
+        codec-decoded fp32 rows (callers that already hold the decoded
+        stack should pass it directly to avoid a second decode).
         """
+        enc = _as_encoded(grads)
+        if enc is not None:
+            from repro.comm import codecs as CC
+            grads = CC.get_codec(enc.spec).decode(enc)
         if plan.kind == "mean":
             return jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
         if plan.kind == "weighted":

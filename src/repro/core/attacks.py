@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -273,6 +273,98 @@ ADAPTIVE: Dict[str, Callable[..., AdaptiveAttack]] = {
     "adaptive_lie": AdaptiveLittleIsEnough,
     "adaptive_mimic": AdaptiveMimic,
 }
+
+
+# --------------------------------------------------------------------------
+# wire-format attacks (the repro.comm attack surface)
+#
+# With a codec on the wire the adversary controls its *messages*, not its
+# gradients: the payload integers and the scale sidecar are separate fields
+# a GAR only sees after decode.  A wire attack is
+# ``(P_correct, S_correct, f, key) -> (P_byz, S_byz)`` per leaf, where
+# ``P_correct`` is the (n-f, ...) stack of honest payload rows and
+# ``S_correct`` the matching sidecar rows (``None`` for sidecar-free
+# codecs).  Byzantine rows must stay *wire-legal* (same dtype/shape) — the
+# attack model is a malicious worker, not a corrupted channel.  The
+# interesting asymmetry: a tiny, honest-looking payload with a poisoned
+# scale multiplies through the decode, which distance tests only catch
+# after dequantization — exactly the interaction repro.comm exists to
+# measure.
+# --------------------------------------------------------------------------
+WireAttack = Callable[[Array, Optional[Array], int, Array],
+                      Tuple[Array, Optional[Array]]]
+
+
+def scale_poison(P: Array, S: Optional[Array], f: int, key: Array,
+                 gain: float = 100.0) -> Tuple[Array, Optional[Array]]:
+    """Honest-looking payload, poisoned sidecar: copy a correct worker's
+    payload rows verbatim and inflate the dequant multiplier by ``gain``
+    (negated — the decoded rows point ``-gain×`` along a correct
+    gradient).  Sidecar-free codecs fall back to scaling the payload
+    itself (saturating in int8 — the wire stays legal)."""
+    del key
+    Pb = jnp.broadcast_to(P[:1], (f,) + P.shape[1:])
+    if S is None or not jnp.issubdtype(S.dtype, jnp.floating):
+        scaled = -gain * P[:1].astype(jnp.float32)
+        if jnp.issubdtype(P.dtype, jnp.integer):
+            info = jnp.iinfo(P.dtype)
+            scaled = jnp.clip(jnp.round(scaled), info.min, info.max)
+        Pb = jnp.broadcast_to(scaled.astype(P.dtype), (f,) + P.shape[1:])
+        Sb = None if S is None else jnp.broadcast_to(S[:1], (f,) + S.shape[1:])
+        return Pb, Sb
+    Sb = jnp.broadcast_to(-gain * S[:1], (f,) + S.shape[1:]).astype(S.dtype)
+    return Pb, Sb
+
+
+def payload_flip(P: Array, S: Optional[Array], f: int, key: Array
+                 ) -> Tuple[Array, Optional[Array]]:
+    """Negate a correct worker's payload rows, keep its sidecar: the wire
+    form of ``sign_flip``, invisible to any scale-level sanity check."""
+    del key
+    if jnp.issubdtype(P.dtype, jnp.integer):
+        info = jnp.iinfo(P.dtype)
+        neg = jnp.clip(-P[:1].astype(jnp.int32), info.min, info.max)
+        Pb = jnp.broadcast_to(neg.astype(P.dtype), (f,) + P.shape[1:])
+    else:
+        Pb = jnp.broadcast_to(-P[:1], (f,) + P.shape[1:]).astype(P.dtype)
+    Sb = None if S is None else jnp.broadcast_to(S[:1], (f,) + S.shape[1:])
+    return Pb, Sb
+
+
+WIRE_ATTACKS: Dict[str, WireAttack] = {
+    "scale_poison": scale_poison,
+    "payload_flip": payload_flip,
+}
+
+
+def is_wire_attack(spec: str) -> bool:
+    return parse_spec(spec)[0] in WIRE_ATTACKS
+
+
+def get_wire_attack(spec: str) -> WireAttack:
+    """Resolve a wire-attack spec to a callable (same grammar as attacks)."""
+    name, kwargs = parse_spec(spec)
+    try:
+        fn = WIRE_ATTACKS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown wire attack {name!r}; "
+            f"available: {sorted(WIRE_ATTACKS)}") from None
+    if not kwargs:
+        return fn
+    params = inspect.signature(fn).parameters
+    tunable = {k for k, p in params.items() if p.default is not p.empty}
+    unknown = set(kwargs) - tunable
+    if unknown:
+        raise ValueError(
+            f"wire attack {name!r} has no parameter(s) {sorted(unknown)}; "
+            f"tunable: {sorted(tunable)}")
+
+    def bound(P, S, f, key):
+        return fn(P, S, f, key, **kwargs)
+
+    bound.__name__ = name
+    return bound
 
 
 def is_adaptive(spec: str) -> bool:

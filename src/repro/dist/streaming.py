@@ -36,8 +36,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, RobustConfig
 from repro.core import api
-from repro.dist.trainer import (honest_dev_accumulate, honest_dev_finalize,
-                                inject_byzantine)
+from repro.dist.trainer import (_resolve_codec, honest_dev_accumulate,
+                                honest_dev_finalize, inject_byzantine,
+                                inject_wire)
 from repro import models as MD
 from repro.optim.optimizers import Optimizer
 
@@ -62,6 +63,7 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                               scope: str = "block", window: int = 0,
                               chunk_q: int = 1024, attack: str = "none",
                               attack_f: Optional[int] = None,
+                              codec: Optional[str] = None,
                               coord_chunk: int = 0, telemetry: bool = False,
                               transforms: Sequence[api.Transform] = (),
                               boundary_spec=None, dx_spec=None):
@@ -71,6 +73,14 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
     (``"little_is_enough:z=2.0"``); adaptive attacks are rejected — their
     plan feedback needs the full-stack step structure.  ``attack_f``
     (default ``rcfg.f``) is the number of rows the attack controls.
+
+    ``codec`` puts the compressed wire (``repro.comm``) between workers and
+    aggregator *per block*: each block's stack is encoded with the global
+    leaf-offset key convention, so the wire payloads — and any wire attack
+    on them — are identical to the stacked trainer's; pass-1 statistics
+    accumulate straight off the quantized payloads (fused dequantize→stats
+    under ``rcfg.use_pallas``).  Error-feedback codecs (``ef=1``) are
+    rejected — their residual needs the stacked trainer's state slot.
 
     With ``telemetry`` the metrics gain the same ``"telemetry"`` sub-dict as
     the stacked trainer; under ``scope="block"`` the plan diagnostics are
@@ -88,7 +98,8 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             "pre-aggregation transforms need the full stack; use the "
             "stacked trainer (dist.make_train_step) with transforms")
     from repro.core import attacks as ATK
-    if isinstance(attack, str) and ATK.is_adaptive(attack):
+    wire = isinstance(attack, str) and ATK.is_wire_attack(attack)
+    if not wire and isinstance(attack, str) and ATK.is_adaptive(attack):
         raise NotImplementedError(
             "adaptive attacks need the stacked trainer's plan-feedback "
             "state; use dist.make_train_step")
@@ -99,6 +110,14 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
     if not 0 <= f_eff <= rcfg.f:
         raise ValueError(
             f"attack_f must be in [0, f] (attack_f={f_eff}, f={rcfg.f})")
+    codec_obj = _resolve_codec(codec)
+    if wire and codec_obj is None:
+        raise ValueError(
+            f"wire attack {attack!r} needs a codec= wire to attack")
+    if codec_obj is not None and codec_obj.stateful:
+        raise NotImplementedError(
+            "error-feedback codecs carry a per-worker residual; use the "
+            "stacked trainer (dist.make_train_step) with codec")
 
     def worker_loss(p, wb):
         return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
@@ -131,6 +150,24 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             offsets[k] = off
             off += len(jax.tree.leaves(sub))
 
+        def wire_block(g, off):
+            """Injection + the simulated wire for one block's stack.
+
+            Returns ``(enc, decoded)`` — ``enc`` is None without a codec.
+            Encode keys use the global-leaf-offset convention, so payloads
+            (and wire-attack randomness) match the stacked trainer's
+            bit for bit.
+            """
+            if not wire:
+                g = inject_byzantine(g, f_eff, attack, key, leaf_offset=off)
+            if codec_obj is None:
+                return None, g
+            ekey = jax.random.fold_in(key, 2 ** 31 - 2)
+            enc, _ = codec_obj.encode(g, key=ekey, leaf_offset=off)
+            if wire:
+                enc = inject_wire(enc, f_eff, attack, key, leaf_offset=off)
+            return enc, codec_obj.decode(enc)
+
         plan = None
         global_diag = None
         if scope == "global" and (aggregator.needs_dists or telemetry):
@@ -141,8 +178,12 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             # score spectrum is part of the campaign trace schema.)
             total = jnp.zeros((rcfg.n_workers, rcfg.n_workers), jnp.float32)
             for k in blocks:
-                g = inject_byzantine(block_grads(params, k), f_eff, attack,
-                                     key, leaf_offset=offsets[k])
+                enc, g = wire_block(block_grads(params, k), offsets[k])
+                if enc is not None:
+                    from repro.comm import codecs as CC
+                    total = total + CC.encoded_raw_contrib(
+                        enc, use_pallas=rcfg.use_pallas)
+                    continue
                 for leaf in jax.tree.leaves(g):
                     total = total + api.leaf_sqdist_contrib(
                         leaf, use_pallas=rcfg.use_pallas)
@@ -171,6 +212,7 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
         agg_blocks = {}
         losses = None
         block_diags = []
+        wire_total = 0
         dev_sq = jnp.zeros((), jnp.float32)
         ref_sq = jnp.zeros((), jnp.float32)
         for k in blocks:
@@ -178,12 +220,14 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                 losses, g = block_grads(params, k, with_loss=True)
             else:
                 g = block_grads(params, k)
-            g = inject_byzantine(g, f_eff, attack, key,
-                                 leaf_offset=offsets[k])
+            enc, g = wire_block(g, offsets[k])
+            if enc is not None:
+                wire_total += enc.wire_bytes
             block_plan = plan
             if block_plan is None or (telemetry and scope == "block"):
                 stats_k = api.compute_stats(
-                    g, rcfg.f, needs_dists=True, use_pallas=rcfg.use_pallas)
+                    enc if enc is not None else g, rcfg.f,
+                    needs_dists=True, use_pallas=rcfg.use_pallas)
                 if block_plan is None:  # scope == "block", distance rule
                     aggregator.validate(stats_k.n, stats_k.f)
                     block_plan = aggregator.plan(stats_k)
@@ -223,6 +267,9 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             # captured mass over the rows the attack actually holds (f_eff)
             diag["byz_mass"] = jnp.sum(diag["selection"][:f_eff])
             diag["honest_dev"] = honest_dev_finalize(dev_sq, ref_sq)
+            if codec_obj is not None:
+                diag["wire_bytes_per_worker"] = jnp.asarray(
+                    wire_total / rcfg.n_workers, jnp.float32)
             metrics["telemetry"] = diag
         return new_params, new_opt, metrics
 

@@ -91,63 +91,117 @@ def inject_byzantine(grads: PyTree, f: int, attack, key,
     return jax.tree.unflatten(treedef, out)
 
 
+def inject_wire(enc, f: int, attack, key, *, leaf_offset: int = 0):
+    """Overwrite the first ``f`` workers' *wire messages* with the attack.
+
+    The wire-format counterpart of :func:`inject_byzantine`: ``attack`` is
+    a wire-attack spec (``core.attacks.WIRE_ATTACKS`` — ``scale_poison``,
+    ``payload_flip``) mutating payload rows and scale sidecars of a
+    ``repro.comm`` :class:`EncodedGrads` container directly, after honest
+    workers encoded.  Same per-leaf key convention as gradient injection
+    (``fold_in(key, leaf_offset + leaf_index)``) so streaming blocks
+    reproduce the stacked randomness.
+    """
+    if f == 0:
+        return enc
+    import dataclasses as _dc
+    fn = ATK.get_wire_attack(attack) if isinstance(attack, str) else attack
+    p_leaves, treedef = jax.tree.flatten(enc.payload)
+    s_leaves = jax.tree.leaves(enc.sidecar) \
+        if enc.sidecar is not None else [None] * len(p_leaves)
+    new_p, new_s = [], []
+    for i, (p, s) in enumerate(zip(p_leaves, s_leaves)):
+        k = jax.random.fold_in(key, leaf_offset + i)
+        pb, sb = fn(p[f:], None if s is None else s[f:], f, k)
+        new_p.append(jnp.concatenate([pb.astype(p.dtype), p[f:]], axis=0))
+        new_s.append(None if s is None else
+                     jnp.concatenate([sb.astype(s.dtype), s[f:]], axis=0))
+    payload = jax.tree.unflatten(treedef, new_p)
+    sidecar = None if enc.sidecar is None else \
+        jax.tree.unflatten(treedef, new_s)
+    return _dc.replace(enc, payload=payload, sidecar=sidecar)
+
+
 # ------------------------------------------------------------ state packing
-# Three layouts, chosen by flags both the packer and the step derive from
-# the same (transforms, attack) configuration:
+# Four layouts, chosen by flags both the packer and the step derive from
+# the same (transforms, attack, codec) configuration:
 #   plain                      -> opt_state
 #   stateful transforms        -> (opt_state, tstates)
-#   adaptive attack (either)   -> (opt_state, tstates, attack_state)
+#   adaptive attack            -> (opt_state, tstates, attack_state)
+#   error-feedback codec       -> (opt_state, tstates, attack_state, cres)
 # split/merge are the ONLY readers/writers of this layout — external
 # drivers (repro.sim.engine) must go through them, never restructure the
 # tuple themselves.
-def split_train_state(state, stateful: bool, adaptive: bool = False):
-    """Unpack a trainer state into (opt_state, tstates, attack_state)."""
-    if adaptive:
+def split_train_state(state, stateful: bool, adaptive: bool = False,
+                      ef: bool = False):
+    """Unpack a trainer state into (opt_state, tstates, astate, cres)."""
+    if ef:
         return state
+    if adaptive:
+        opt_state, tstates, astate = state
+        return opt_state, tstates, astate, None
     if stateful:
         opt_state, tstates = state
-        return opt_state, tstates, None
-    return state, (), None
+        return opt_state, tstates, None, None
+    return state, (), None, None
 
 
-def merge_train_state(opt_state: OptState, tstates: Tuple, astate,
-                      stateful: bool, adaptive: bool = False):
-    """Pack (opt_state, tstates, attack_state) into the trainer layout."""
+def merge_train_state(opt_state: OptState, tstates: Tuple, astate, cres,
+                      stateful: bool, adaptive: bool = False,
+                      ef: bool = False):
+    """Pack (opt_state, tstates, astate, cres) into the trainer layout."""
+    if ef:
+        return (opt_state, tstates, astate, cres)
     if adaptive:
         return (opt_state, tstates, astate)
     return (opt_state, tstates) if stateful else opt_state
 
 
+def _resolve_codec(codec):
+    """Codec spec string / instance / None -> codec instance or None."""
+    if codec is None or not isinstance(codec, str):
+        return codec
+    from repro.comm import codecs as CC
+    return CC.get_codec(codec)
+
+
 def init_train_state(opt: Optimizer, params: PyTree,
                      transforms: Sequence[api.Transform] = (),
                      n_workers: int = 0, attack: str = "none",
-                     attack_f: int = 0):
+                     attack_f: int = 0, codec=None):
     """Initial trainer state for :func:`make_train_step`.
 
     Plain runs get a bare ``OptState``; stateful transforms (worker
     momentum) add a per-worker state tuple mirroring the *stacked* gradient
     shapes (hence ``n_workers``); an adaptive attack spec (``adaptive_lie``,
     ``adaptive_mimic`` — ``core.attacks.ADAPTIVE``) adds the attack's
-    feedback state as a third slot, seeded for ``attack_f`` byzantine rows.
+    feedback state as a third slot, seeded for ``attack_f`` byzantine rows;
+    an error-feedback codec spec (``"topk:frac=0.01,ef=1"`` —
+    ``repro.comm.get_codec``) adds the per-worker compression residual as a
+    fourth slot.
     """
     opt_state = opt.init(params)
     stateful = any(t.stateful for t in transforms)
     adaptive = isinstance(attack, str) and ATK.is_adaptive(attack)
-    if not stateful and not adaptive:
+    codec_obj = _resolve_codec(codec)
+    ef = codec_obj is not None and codec_obj.stateful
+    if not stateful and not adaptive and not ef:
         return opt_state
     if n_workers <= 0:
-        raise ValueError("stateful transforms / adaptive attacks need "
-                         "n_workers > 0")
+        raise ValueError("stateful transforms / adaptive attacks / "
+                         "error-feedback codecs need n_workers > 0")
+    stacked = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, p.dtype),
+        params)
     tstates: Tuple = ()
     if stateful:
-        stacked = jax.tree.map(
-            lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, p.dtype),
-            params)
         tstates = api.init_transform_states(transforms, stacked)
-    if not adaptive:
-        return opt_state, tstates
-    astate = ATK.get_adaptive(attack).init_state(n_workers, attack_f)
-    return opt_state, tstates, astate
+    astate = None
+    if adaptive:
+        astate = ATK.get_adaptive(attack).init_state(n_workers, attack_f)
+    cres = codec_obj.init_residual(stacked) if ef else None
+    return merge_train_state(opt_state, tstates, astate, cres,
+                             stateful, adaptive, ef)
 
 
 # ------------------------------------------------------------------ trainer
@@ -186,6 +240,7 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                     lr_fn, *, window: int = 0, chunk_q: int = 1024,
                     attack: str = "none", attack_f: Optional[int] = None,
                     transforms: Sequence[api.Transform] = (),
+                    codec: Optional[str] = None,
                     coord_chunk: int = 0, telemetry: bool = False,
                     grad_specs: Optional[PyTree] = None,
                     boundary_spec=None,
@@ -199,10 +254,23 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     attack actually controls this phase (defaults to ``rcfg.f``, may be
     lower — the rule keeps defending against the full contract ``f``).
 
+    ``codec`` puts a compressed wire between workers and aggregator
+    (``repro.comm.get_codec`` specs — ``"qsgd:bits=8"``, ``"bf16"``, …):
+    every worker *encodes* its gradient rows, byzantine injection then
+    happens on the wire format — gradient-space attacks propose rows that
+    get encoded like honest ones, wire attacks (``scale_poison``,
+    ``payload_flip``) mutate payloads/sidecars directly — and the
+    aggregator consumes the wire container (statistics straight off the
+    quantized payloads under ``rcfg.use_pallas`` via the fused
+    dequantize→stats kernel, apply on the decoded rows).  Error-feedback
+    codecs (``ef=1``) thread a per-worker residual through the state
+    (:func:`init_train_state`).
+
     With ``telemetry`` the metrics dict gains a ``"telemetry"`` sub-dict of
     plan diagnostics (``AggPlan.diagnostics``: per-worker selection mass,
     byzantine captured mass, Krum score spectrum, selection-boundary gap)
-    plus ``honest_dev`` — campaign traces in ``repro.sim`` scan over these.
+    plus ``honest_dev`` — campaign traces in ``repro.sim`` scan over these
+    — and, under a codec, ``wire_bytes_per_worker``.
 
     ``grad_specs``/``shard_map_mesh``: optional PartitionSpec pytree pinned
     onto the stacked gradients (the transposed grad-stack layout the
@@ -218,7 +286,15 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     if not 0 <= f_eff <= rcfg.f:
         raise ValueError(
             f"attack_f must be in [0, f] (attack_f={f_eff}, f={rcfg.f})")
-    adaptive = ATK.get_adaptive(attack) if ATK.is_adaptive(attack) else None
+    codec_obj = _resolve_codec(codec)
+    ef = codec_obj is not None and codec_obj.stateful
+    wire = isinstance(attack, str) and ATK.is_wire_attack(attack)
+    if wire and codec_obj is None:
+        raise ValueError(
+            f"wire attack {attack!r} needs a codec= wire to attack "
+            f"(available codecs: see repro.comm.available_codecs())")
+    adaptive = ATK.get_adaptive(attack) \
+        if not wire and ATK.is_adaptive(attack) else None
     # telemetry wants the score spectrum even for distance-free rules
     # (average / median campaigns report why they would have been rejected)
     needs_dists = aggregator.needs_dists or telemetry
@@ -228,15 +304,29 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                           boundary_spec=boundary_spec)
 
     def step(params, state, batch, key):
-        opt_state, tstates, astate = split_train_state(
-            state, stateful, adaptive is not None)
+        opt_state, tstates, astate, cres = split_train_state(
+            state, stateful, adaptive is not None, ef)
         losses, grads = jax.vmap(
             lambda wb: jax.value_and_grad(worker_loss)(params, wb))(batch)
         if adaptive is not None:
             atk = functools.partial(adaptive.propose, state=astate)
         else:
             atk = attack
-        grads = inject_byzantine(grads, f_eff, atk, key)
+        if not wire:
+            # gradient-space adversary: proposes rows before encoding (it
+            # controls its wire messages, so it encodes like anyone else)
+            grads = inject_byzantine(grads, f_eff, atk, key)
+        enc = None
+        if codec_obj is not None:
+            # distinct fold for quantization randomness: attack leaves use
+            # fold_in(key, leaf_index), transforms 2^31-1 (below)
+            ekey = jax.random.fold_in(key, 2 ** 31 - 2)
+            enc, cres = codec_obj.encode(grads, key=ekey, residual=cres)
+            if wire:
+                enc = inject_wire(enc, f_eff, attack, key)
+            # the aggregator-side view: everything downstream (transforms,
+            # apply, honest_dev) sees what survived the wire
+            grads = codec_obj.decode(enc)
         if grad_specs is not None and shard_map_mesh is not None:
             from jax.sharding import NamedSharding
             grads = jax.lax.with_sharding_constraint(
@@ -250,7 +340,10 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
         grads, tstates = api.apply_transforms(
             grads, transforms, tstates or None, key=tkey,
             use_pallas=rcfg.use_pallas)
-        stats = api.compute_stats(grads, rcfg.f, needs_dists=needs_dists,
+        # statistics straight off the wire container (fused dequant→stats
+        # under use_pallas) unless a transform rewrote the decoded stack
+        stats_src = enc if (enc is not None and not transforms) else grads
+        stats = api.compute_stats(stats_src, rcfg.f, needs_dists=needs_dists,
                                   use_pallas=rcfg.use_pallas)
         # guard against an out-of-band worker count: stats.n comes from the
         # actual batch split, which RobustConfig's construction-time check
@@ -278,10 +371,13 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
             # this phase (f_eff), not the rule's contract f
             diag["byz_mass"] = jnp.sum(diag["selection"][:f_eff])
             diag["honest_dev"] = _honest_mean_dev(agg, grads, f_eff)
+            if enc is not None:
+                diag["wire_bytes_per_worker"] = jnp.asarray(
+                    enc.bytes_per_worker, jnp.float32)
             metrics["telemetry"] = diag
         return (new_params,
-                merge_train_state(new_opt, tstates, astate, stateful,
-                                  adaptive is not None),
+                merge_train_state(new_opt, tstates, astate, cres, stateful,
+                                  adaptive is not None, ef),
                 metrics)
 
     return step

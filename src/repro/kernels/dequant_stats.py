@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused dequantize → pairwise statistics.
+
+The wire (repro.comm) hands the aggregator *quantized* payloads — int8
+QSGD/sign levels or bf16 rows — plus a per-worker dequant multiplier.  The
+unfused pipeline would materialise the fp32 (n, d) stack in HBM
+(``decode`` = payload · mult), then stream it back through
+``pairwise_stats``: two O(n·d) HBM round-trips of the *widened* data, 4–8×
+the payload's own footprint.  This kernel extends the PR-2 single-pass
+stats contract one layer down the memory hierarchy: each grid step loads
+one ``(n, d_tile)`` *payload* block HBM→VMEM (1–2 B/coordinate — the wire
+format is also the HBM format), widens and scales it in VMEM, and emits
+the tile's raw distance contribution (MXU gram) and squared-norm rows
+(VPU) exactly like ``pairwise_sqdist._stats_kernel``.  The fp32 stack
+never exists in HBM.
+
+Bitwise contract (DESIGN.md §9): the in-VMEM dequantize is *exactly* the
+codec's decode — ``payload.astype(f32) * mult[row]`` — and the wrapper in
+``kernels/ops.py`` derives ``d_tile`` with the same autotune call
+``pairwise_stats`` uses for the decoded fp32 stack, so tile boundaries and
+per-tile float summation match decode-then-``pairwise_stats`` bit for bit
+in interpret mode (tested on the PR-2 edge-shape grid in
+tests/test_comm.py).
+
+Row padding follows the payload dtype's sublane tile (int8 → 32, bf16 →
+16, else 8); padded rows carry zero payload *and* zero multiplier, so
+their contributions vanish and the ``[:n, :n]`` slice is exact.  The
+distance output is raw (unclamped, diagonal kept) for cross-leaf
+accumulation — finalise with ``core.api.finalize_dists``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_SUBLANES = {jnp.int8.dtype: 32, jnp.bfloat16.dtype: 16}
+
+
+def _kernel(p_ref, s_ref, d_ref, o_ref):
+    """One grid step: dequantize the payload tile in VMEM, contribute the
+    tile's distances AND norms from that single load."""
+    i = pl.program_id(0)
+    mult = s_ref[...][0]                              # (n,)
+    # the codec decode, in VMEM: widen then one multiply per element
+    x = p_ref[...].astype(jnp.float32) * mult[:, None]   # (n, d_tile)
+    # HIGHEST: score order decides selection (same rationale as
+    # pairwise_sqdist._stats_kernel, whose math this mirrors exactly)
+    gram = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)           # (n, n) — MXU
+    sq = jnp.sum(x * x, axis=1)                       # (n,)   — VPU
+    tile = sq[:, None] + sq[None, :] - 2.0 * gram
+
+    @pl.when(i == 0)
+    def _init():
+        d_ref[...] = tile
+        o_ref[...] = sq[None, :]
+
+    @pl.when(i > 0)
+    def _acc():
+        d_ref[...] += tile
+        o_ref[...] += sq[None, :]
+
+
+def dequant_stats_pallas(payload: Array, mult: Array, *, d_tile: int = 2048,
+                         interpret: bool = False):
+    """(n, d) quantized payload + (n,) row multipliers ->
+    ((n, n) raw sq-dists, (n,) sq-norms) of the *decoded* rows.
+
+    ``payload`` is int8 or bfloat16 (fp32 accepted for the identity
+    multiplier path); ``mult`` is the codec's per-row dequant multiplier.
+    Pads the worker axis to the payload dtype's sublane tile and d up to a
+    multiple of ``d_tile`` (zero payload × zero mult padding is exact).
+    """
+    if payload.ndim != 2:
+        raise ValueError(f"payload must be (n, d), got {payload.shape}")
+    n, d = payload.shape
+    if mult.shape != (n,):
+        raise ValueError(f"mult must be ({n},), got {mult.shape}")
+    sublane = _SUBLANES.get(payload.dtype, 8)
+    n_pad = (-n) % sublane
+    d_tile = min(d_tile, max(128, ((d - 1) // 128 + 1) * 128))
+    d_pad = (-d) % d_tile
+    if n_pad or d_pad:
+        payload = jnp.pad(payload, ((0, n_pad), (0, d_pad)))
+    if n_pad:
+        mult = jnp.pad(mult, (0, n_pad))
+    np_, dp = payload.shape
+    grid = (dp // d_tile,)
+    dists, norms = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((np_, d_tile), lambda i: (0, i)),
+                  pl.BlockSpec((1, np_), lambda i: (0, 0))],
+        out_specs=(pl.BlockSpec((np_, np_), lambda i: (0, 0)),
+                   pl.BlockSpec((1, np_), lambda i: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((np_, np_), jnp.float32),
+                   jax.ShapeDtypeStruct((1, np_), jnp.float32)),
+        interpret=interpret,
+    )(payload, mult.astype(jnp.float32)[None, :])
+    return dists[:n, :n], norms[0, :n]

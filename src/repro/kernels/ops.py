@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.coord_select import coord_select_pallas
+from repro.kernels.dequant_stats import dequant_stats_pallas
 from repro.kernels.fused_select import fused_select_pallas
 from repro.kernels.pairwise_sqdist import (pairwise_sqdist_pallas,
                                            pairwise_stats_pallas)
@@ -118,6 +119,34 @@ def pairwise_stats(x: Array, *, d_tile: Optional[int] = None,
         d_tile = autotune_d_tile(n_rows, x.shape[1],
                                  fixed_bytes=n_rows * (n_rows + 8) * 4)
     return _pairwise_stats(x, d_tile=d_tile, interpret=_resolve(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def _dequant_stats(payload: Array, mult: Array, *, d_tile: int,
+                   interpret: bool) -> Tuple[Array, Array]:
+    return dequant_stats_pallas(payload, mult, d_tile=d_tile,
+                                interpret=interpret)
+
+
+def dequant_stats(payload: Array, mult: Array, *,
+                  d_tile: Optional[int] = None,
+                  interpret: Optional[bool] = None) -> Tuple[Array, Array]:
+    """Fused dequantize → single-pass stats on a quantized (n, d) payload.
+
+    ``payload`` int8/bf16 + ``mult`` (n,) per-row dequant multipliers ->
+    ((n, n) raw sq-dists, (n,) sq-norms) of the decoded rows, without the
+    fp32 stack ever existing in HBM.  The default ``d_tile`` is the SAME
+    autotune call :func:`pairwise_stats` makes for the decoded fp32 stack:
+    identical tile boundaries keep the float accumulation order — and
+    therefore bitwise parity with decode-then-``pairwise_stats`` in
+    interpret mode — intact (DESIGN.md §9).
+    """
+    if d_tile is None:
+        n_rows = payload.shape[0] + (-payload.shape[0]) % 8
+        d_tile = autotune_d_tile(n_rows, payload.shape[1],
+                                 fixed_bytes=n_rows * (n_rows + 8) * 4)
+    return _dequant_stats(payload, mult, d_tile=d_tile,
+                          interpret=_resolve(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "d_tile", "interpret"))

@@ -18,6 +18,11 @@ byzantine workers for that phase:
 for plain averaging, asserts the paper's story on the traces (robust rule:
 bounded post-switch honest-mean deviation, ≈ 0 byzantine selection mass;
 averaging: dragged far off the honest mean), and exits non-zero otherwise.
+It then sweeps codec × attack (ISSUE-4): short switch campaigns over the
+``repro.comm`` wire formats — including a wire-level attack — asserting
+the robust rule stays bounded on the *decoded* stack, per-phase
+``WireStats`` land in the ``sim.campaign.v1`` summary, and wire bytes are
+strictly ordered fp32 > bf16 > qsgd int8.
 """
 from __future__ import annotations
 
@@ -114,12 +119,66 @@ def _smoke(args) -> int:
                         f"{args.gar}'s {rb_final:.3f} + "
                         f"{AVERAGE_LOSS_MARGIN} — averaging kept learning "
                         f"under the attack")
+    problems += _smoke_codec_sweep(args)
     for p in problems:
         print(f"[sim] SMOKE FAILED: {p}", file=sys.stderr)
     if not problems:
         print("[sim] --smoke OK: robust rule bounded, byzantine rows "
-              "deselected, averaging dragged off the honest mean")
+              "deselected, averaging dragged off the honest mean; codec "
+              "sweep bounded with ordered wire bytes")
     return 1 if problems else 0
+
+
+# codec × attack sweep grid: a gradient-space attack that must survive the
+# quantized wire + a wire-format attack that only exists because of it
+SWEEP_CODECS = ("fp32", "bf16", "qsgd:bits=8")
+SWEEP_ATTACKS = ("little_is_enough:z=4.0", "scale_poison:gain=50")
+SWEEP_STEPS = 6                 # per phase — selection stabilises in 2-3
+
+
+def _smoke_codec_sweep(args) -> List[str]:
+    """Short codec × attack switch campaigns on the robust rule."""
+    import numpy as np
+
+    problems: List[str] = []
+    bytes_per_worker = {}
+    for codec in SWEEP_CODECS:
+        for attack in SWEEP_ATTACKS:
+            if attack.startswith("scale_poison") and codec == "fp32":
+                # the identity wire has no scale sidecar — the attack
+                # degenerates to payload scaling; skip the redundant cell
+                continue
+            sc = switch_scenario(
+                args.gar, pre=SWEEP_STEPS, post=SWEEP_STEPS, attack=attack,
+                n_workers=args.workers, f=args.f, trainer=args.trainer,
+                use_pallas=args.use_pallas, seed=args.seed, codec=codec)
+            r = run_campaign(sc)
+            post = slice(SWEEP_STEPS, 2 * SWEEP_STEPS)
+            byz = float(np.mean(r.trace["byz_mass"][post]))
+            dev = float(np.max(r.trace["honest_dev"][post]))
+            wire = r.summary.get("wire")
+            print(f"[sim] codec sweep {codec} × {attack}: honest_dev "
+                  f"max={dev:.3f} byz_mass={byz:.4f} "
+                  f"bytes/worker={wire and wire['bytes_per_worker']}")
+            tag = f"codec {codec} × {attack}"
+            if wire is None or \
+                    any("wire" not in ph for ph in r.summary["phases"]):
+                problems.append(f"{tag}: WireStats missing from the "
+                                "campaign summary phases")
+                continue
+            bytes_per_worker[codec] = wire["bytes_per_worker"]
+            if dev > ROBUST_DEV_MAX:
+                problems.append(f"{tag}: post-switch honest_dev {dev:.3f} "
+                                f"> {ROBUST_DEV_MAX}")
+            if byz > ROBUST_BYZ_MASS:
+                problems.append(f"{tag}: byzantine selection mass "
+                                f"{byz:.4f} > {ROBUST_BYZ_MASS}")
+    order = [bytes_per_worker.get(c, 0) for c in SWEEP_CODECS]
+    if not order[0] > order[1] > order[2] > 0:
+        problems.append(
+            f"wire bytes not strictly ordered fp32 > bf16 > qsgd int8: "
+            f"{dict(zip(SWEEP_CODECS, order))}")
+    return problems
 
 
 def main(argv: Optional[Tuple[str, ...]] = None) -> int:
@@ -139,6 +198,11 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
     ap.add_argument("--transform", action="append", default=[],
                     help="pre-aggregation transform spec (repeatable), "
                          "e.g. worker_momentum:beta=0.9")
+    ap.add_argument("--codec", default=None,
+                    help="wire codec spec (repro.comm), e.g. qsgd:bits=8; "
+                         "enables wire attacks (scale_poison, payload_flip) "
+                         "in --phase specs and per-phase WireStats in the "
+                         "report")
     ap.add_argument("--noniid-alpha", type=float, default=0.0,
                     help="Dirichlet alpha for non-IID worker data "
                          "(0 = i.i.d.)")
@@ -165,8 +229,8 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
         name=args.name,
         schedule=AttackSchedule(tuple(parse_phase(p) for p in args.phase)),
         n_workers=args.workers, f=args.f, gar=args.gar,
-        transforms=tuple(args.transform), trainer=args.trainer,
-        use_pallas=args.use_pallas,
+        transforms=tuple(args.transform), codec=args.codec,
+        trainer=args.trainer, use_pallas=args.use_pallas,
         data=DataConfig(noniid_alpha=args.noniid_alpha,
                         n_domains=args.n_domains),
         per_worker_batch=args.per_worker_batch, seq=args.seq, lr=args.lr,

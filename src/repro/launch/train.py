@@ -41,6 +41,11 @@ def main(argv=None) -> int:
                     help="route stats + bulyan apply through the Pallas "
                          "kernels (fused fast path; interpret mode on CPU)")
     ap.add_argument("--attack", default="none")
+    ap.add_argument("--codec", default=None,
+                    help="wire codec spec (repro.comm): qsgd:bits=8, bf16, "
+                         "signsgd, topk:frac=0.01[,ef=1], fp32; attacks "
+                         "then hit the wire format (scale_poison, "
+                         "payload_flip are wire-level attacks)")
     ap.add_argument("--trainer", default="stacked",
                     choices=("stacked", "stream_block", "stream_global"))
     ap.add_argument("--optimizer", default="sgd")
@@ -63,25 +68,35 @@ def main(argv=None) -> int:
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"[train] arch={cfg.name} params={n_params:,} workers={args.workers} "
           f"f={args.f} gar={args.gar} attack={args.attack} "
-          f"trainer={args.trainer} pallas={args.use_pallas}")
+          f"codec={args.codec} trainer={args.trainer} "
+          f"pallas={args.use_pallas}")
+    if args.codec:
+        from repro.comm import wire_stats
+        ws = wire_stats(args.codec, params, n=args.workers)
+        print(f"[train] wire: {ws.bytes_per_worker:,} B/worker/step "
+              f"({ws.compression:.1f}x vs fp32, "
+              f"{ws.chunks_per_worker} chunk(s) of {ws.chunk_bytes:,} B)")
 
     opt = make_optimizer(args.optimizer,
                          **({"momentum": 0.9} if args.optimizer == "sgd" else {}))
-    # seeds the adaptive-attack feedback slot when --attack is adaptive
-    # (plain OptState otherwise)
+    # seeds the adaptive-attack feedback slot when --attack is adaptive and
+    # the error-feedback residual when --codec has ef=1 (plain OptState
+    # otherwise)
     state = init_train_state(opt, params, n_workers=args.workers,
-                             attack=args.attack, attack_f=args.f)
+                             attack=args.attack, attack_f=args.f,
+                             codec=args.codec)
     lr_fn = warmup_cosine(args.lr, warmup=max(args.steps // 20, 1),
                           total_steps=args.steps)
     chunk_q = min(args.seq, 512)
     if args.trainer == "stacked":
         step_fn = make_train_step(cfg, rcfg, opt, lr_fn, chunk_q=chunk_q,
-                                  attack=args.attack)
+                                  attack=args.attack, codec=args.codec)
     else:
         scope = "global" if args.trainer.endswith("global") else "block"
         step_fn = make_streaming_train_step(cfg, rcfg, opt, lr_fn,
                                             scope=scope, chunk_q=chunk_q,
-                                            attack=args.attack)
+                                            attack=args.attack,
+                                            codec=args.codec)
     step_fn = jax.jit(step_fn)
 
     global_batch = args.workers * args.per_worker_batch

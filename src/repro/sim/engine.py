@@ -48,6 +48,9 @@ class CampaignResult:
     ``telemetry.step_record`` for the schema); ``summary`` is the host-side
     per-phase digest (``telemetry.summarize``).  ``start_step`` > 0 when the
     run resumed from a checkpoint (the trace covers executed steps only).
+    ``wire`` is the campaign's :class:`~repro.comm.transport.WireStats`
+    accounting as a plain dict (None without a codec) — ``summarize``
+    repeats it per phase so the ``sim.campaign.v1`` report carries it.
     """
 
     scenario: Scenario
@@ -55,6 +58,7 @@ class CampaignResult:
     summary: Dict[str, Any]
     start_step: int = 0
     wall_s: float = 0.0
+    wire: Optional[Dict[str, Any]] = None
 
 
 def _phase_batches(scenario: Scenario, phase: AttackPhase, start: int,
@@ -110,11 +114,20 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
     key = jax.random.key(scenario.seed)
     params = MD.init_model(key, cfg)
     opt = sgd(momentum=scenario.momentum)
+    wire = None
+    ef = False
+    if scenario.codec is not None:
+        from repro.comm import get_codec, wire_stats
+        ef = get_codec(scenario.codec).stateful
+        wire = wire_stats(scenario.codec, params,
+                          n=scenario.n_workers).to_json()
     # attack state is per-phase (seeded at each phase entry below), so the
-    # initial state is built attack-free and split into its components
-    opt_state, tstates, _ = split_train_state(
+    # initial state is built attack-free and split into its components;
+    # the error-feedback residual (like transform states) is cross-phase
+    opt_state, tstates, _, cres = split_train_state(
         init_train_state(opt, params, transforms,
-                         n_workers=scenario.n_workers), stateful)
+                         n_workers=scenario.n_workers,
+                         codec=scenario.codec), stateful, ef=ef)
     susp = TEL.init_suspicion(scenario.n_workers)
     lr_fn = warmup_cosine(scenario.lr, warmup=max(total_steps // 20, 1),
                           total_steps=total_steps)
@@ -136,9 +149,12 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
         if latest is not None:
             like = {"params": params, "opt": opt_state,
                     "tstates": tstates, "susp": susp}
+            if ef:
+                like["cres"] = cres
             loaded = restore(ckpt_dir, latest, like)
             params, opt_state = loaded["params"], loaded["opt"]
             tstates, susp = loaded["tstates"], loaded["susp"]
+            cres = loaded.get("cres", cres)
             start_step = latest
             if verbose:
                 print(f"[sim] resumed {scenario.name} at step {latest}")
@@ -154,21 +170,23 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
         if scenario.trainer == "stacked":
             step_fn = make_train_step(
                 cfg, rcfg, opt, lr_fn, chunk_q=chunk_q, attack=phase.attack,
-                attack_f=f_eff, transforms=transforms, telemetry=True)
+                attack_f=f_eff, transforms=transforms,
+                codec=scenario.codec, telemetry=True)
         else:
             scope = "global" if scenario.trainer.endswith("global") else \
                 "block"
             step_fn = make_streaming_train_step(
                 cfg, rcfg, opt, lr_fn, scope=scope, chunk_q=chunk_q,
-                attack=phase.attack, attack_f=f_eff, telemetry=True)
+                attack=phase.attack, attack_f=f_eff,
+                codec=scenario.codec, telemetry=True)
 
         astate = None
         if adaptive:
             astate = ATK.get_adaptive(phase.attack).init_state(
                 scenario.n_workers, f_eff)
         if scenario.trainer == "stacked":
-            state = merge_train_state(opt_state, tstates, astate, stateful,
-                                      adaptive)
+            state = merge_train_state(opt_state, tstates, astate, cres,
+                                      stateful, adaptive, ef)
         else:
             state = opt_state  # streaming carries the bare OptState
 
@@ -187,8 +205,8 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
             lambda c, xs: jax.lax.scan(body, c, xs))(
                 (params, state, susp), (batches, keys))
         if scenario.trainer == "stacked":
-            opt_state, tstates, _ = split_train_state(state, stateful,
-                                                      adaptive)
+            opt_state, tstates, _, cres = split_train_state(state, stateful,
+                                                            adaptive, ef)
         else:
             opt_state = state
         phase_traces.append(jax.device_get(rec))
@@ -200,10 +218,15 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
                   f"honest_dev {np.mean(tr['honest_dev']):.3f} "
                   f"byz_mass {np.mean(tr['byz_mass']):.3f}", flush=True)
         if ckpt_dir:
-            save(ckpt_dir, stop, {"params": params, "opt": opt_state,
-                                  "tstates": tstates, "susp": susp})
+            payload = {"params": params, "opt": opt_state,
+                       "tstates": tstates, "susp": susp}
+            if ef:
+                payload["cres"] = cres
+            save(ckpt_dir, stop, payload)
 
     trace = TEL.concat_traces(phase_traces)
-    summary = TEL.summarize(trace, scenario, start_step) if trace else {}
+    summary = TEL.summarize(trace, scenario, start_step, wire=wire) \
+        if trace else {}
     return CampaignResult(scenario=scenario, trace=trace, summary=summary,
-                          start_step=start_step, wall_s=time.time() - t0)
+                          start_step=start_step, wall_s=time.time() - t0,
+                          wire=wire)

@@ -107,6 +107,7 @@ class Scenario:
     f: int = 2
     gar: str = "multi_bulyan"
     transforms: Tuple[str, ...] = ()          # transform spec strings
+    codec: Optional[str] = None               # wire codec spec (repro.comm)
     trainer: str = "stacked"                  # stacked|stream_block|stream_global
     use_pallas: bool = False
     arch: ArchConfig = TINY
@@ -139,13 +140,24 @@ class Scenario:
         from repro.core import attacks as ATK
         for p in self.schedule.phases:
             name, _ = ATK.parse_spec(p.attack)
-            if name not in ATK.ATTACKS and name not in ATK.ADAPTIVE:
+            if name not in ATK.ATTACKS and name not in ATK.ADAPTIVE \
+                    and name not in ATK.WIRE_ATTACKS:
                 raise ValueError(
                     f"unknown attack {name!r}; available: "
-                    f"{sorted(ATK.ATTACKS)} + {sorted(ATK.ADAPTIVE)}")
+                    f"{sorted(ATK.ATTACKS)} + {sorted(ATK.ADAPTIVE)} + "
+                    f"wire: {sorted(ATK.WIRE_ATTACKS)}")
             if name in ATK.ADAPTIVE and self.trainer != "stacked":
                 raise ValueError(
                     f"adaptive attack {name!r} needs trainer='stacked'")
+            if name in ATK.WIRE_ATTACKS and self.codec is None:
+                raise ValueError(
+                    f"wire attack {name!r} needs a codec= wire to attack")
+        if self.codec is not None:
+            from repro.comm import get_codec
+            c = get_codec(self.codec)   # validates the spec eagerly
+            if c.stateful and self.trainer != "stacked":
+                raise ValueError(
+                    "error-feedback codecs (ef=1) need trainer='stacked'")
 
     def phase_f(self, phase: AttackPhase) -> int:
         return self.f if phase.f is None else phase.f
@@ -174,6 +186,7 @@ class Scenario:
             "f": self.f,
             "gar": self.gar,
             "transforms": list(self.transforms),
+            "codec": self.codec,
             "trainer": self.trainer,
             "use_pallas": self.use_pallas,
             "arch": self.arch.name,

@@ -69,7 +69,8 @@ def concat_traces(traces: Sequence[Dict[str, np.ndarray]]
 
 
 def summarize(trace: Dict[str, np.ndarray], scenario,
-              start_step: int = 0) -> Dict[str, Any]:
+              start_step: int = 0,
+              wire: "Dict[str, Any] | None" = None) -> Dict[str, Any]:
     """Host-side per-phase digest of a campaign trace.
 
     Per phase: loss at entry/exit, mean/max honest-mean deviation, mean
@@ -77,7 +78,9 @@ def summarize(trace: Dict[str, np.ndarray], scenario,
     final suspicion vector.  The acceptance assertions
     (``launch/simulate.py --smoke``, ``tests/test_sim.py``) read these.
     ``start_step`` offsets the schedule against a resumed run's trace
-    (which only covers executed steps).
+    (which only covers executed steps).  ``wire`` (a
+    ``repro.comm.WireStats`` dict) is repeated per phase — byte accounting
+    is shape-static, so every phase of a campaign pays the same wire.
     """
     phases = []
     for i, ((start, stop), p) in enumerate(
@@ -107,6 +110,8 @@ def summarize(trace: Dict[str, np.ndarray], scenario,
                 trace["selection"][sl], axis=0).tolist()
         if "suspicion" in trace:
             ph["suspicion_last"] = trace["suspicion"][stop - 1].tolist()
+        if wire is not None:
+            ph["wire"] = wire
         phases.append(ph)
     out: Dict[str, Any] = {
         "total_steps": int(len(trace["loss"])),
@@ -117,4 +122,6 @@ def summarize(trace: Dict[str, np.ndarray], scenario,
         out["honest_dev_max"] = float(np.max(trace["honest_dev"]))
     if "byz_mass" in trace:
         out["byz_mass_mean"] = float(np.mean(trace["byz_mass"]))
+    if wire is not None:
+        out["wire"] = wire
     return out

@@ -1,0 +1,493 @@
+"""repro.comm: codec laws, the fused dequantize→stats kernel, wire attacks,
+trainer integration and the codec regression on the sim acceptance scenario.
+
+Codec laws are property-style via tests/_mini_hypothesis.py (the container
+has no hypothesis): round-trip identity for identity/bf16, unbiasedness of
+QSGD stochastic rounding (mean over keys), top-k norm retention, and the
+error-feedback residual telescoping identity.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.comm import codecs as CC
+from repro.comm import transport as TP
+from repro.core import api, attacks
+from repro.kernels import ops as kops
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container path
+    from _mini_hypothesis import given, settings, strategies as st
+
+KEY = jax.random.key(0)
+
+
+def _tree(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(n, 6, 9)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.normal(size=(n, 77)), jnp.float32)}}
+
+
+@st.composite
+def _stack_shape(draw):
+    return draw(st.integers(3, 12)), draw(st.integers(1, 90))
+
+
+# ============================================================== codec laws
+@settings(max_examples=10)
+@given(_stack_shape())
+def test_identity_and_bf16_round_trip(shape):
+    """identity is exact on fp32; bf16 is exact on bf16-representable
+    values (the encode→decode→encode fixed point)."""
+    n, m = shape
+    rng = np.random.default_rng(n * 100 + m)
+    g = {"w": jnp.asarray(rng.normal(size=(n, m)), jnp.float32)}
+    enc, _ = CC.get_codec("identity").encode(g)
+    np.testing.assert_array_equal(
+        np.asarray(CC.get_codec("identity").decode(enc)["w"]),
+        np.asarray(g["w"]))
+    gb = jax.tree.map(lambda x: x.astype(jnp.bfloat16).astype(jnp.float32), g)
+    c = CC.get_codec("bf16")
+    enc, _ = c.encode(gb)
+    np.testing.assert_array_equal(np.asarray(c.decode(enc)["w"]),
+                                  np.asarray(gb["w"]))
+
+
+@settings(max_examples=5)
+@given(st.integers(2, 8))
+def test_qsgd_unbiased_over_keys(bits):
+    """E[decode(encode(g))] = g: the stochastic rounding mean over many
+    keys converges to the input coordinate-wise."""
+    rng = np.random.default_rng(bits)
+    g = {"w": jnp.asarray(rng.normal(size=(5, 40)), jnp.float32)}
+    c = CC.get_codec(f"qsgd:bits={bits}")
+    n_keys = 300
+    acc = np.zeros((5, 40), np.float64)
+    for i in range(n_keys):
+        enc, _ = c.encode(g, key=jax.random.fold_in(KEY, i))
+        acc += np.asarray(c.decode(enc)["w"], np.float64)
+    # per-coordinate quantization step is scale/levels; the mean of n_keys
+    # draws concentrates within ~3 standard errors of that step
+    step = np.asarray(jnp.max(jnp.abs(g["w"]), axis=1))[:, None] / c.levels
+    tol = np.broadcast_to(3.0 * step / np.sqrt(n_keys) + 1e-6, (5, 40))
+    np.testing.assert_array_less(np.abs(acc / n_keys - np.asarray(g["w"])),
+                                 tol)
+
+
+@settings(max_examples=10)
+@given(_stack_shape())
+def test_topk_norm_retention(shape):
+    """Top-k keeps exactly the k largest-magnitude coordinates per row, so
+    the decoded row retains >= k/m of the squared-norm mass and matches
+    the exact top-k energy."""
+    n, m = shape
+    rng = np.random.default_rng(n * 7 + m)
+    x = rng.normal(size=(n, m)).astype(np.float32)
+    c = CC.get_codec("topk:frac=0.25")
+    k = c.row_k(m)
+    enc, _ = c.encode({"w": jnp.asarray(x)})
+    dec = np.asarray(c.decode(enc)["w"])
+    want = np.sort(x ** 2, axis=1)[:, ::-1][:, :k].sum(axis=1)
+    np.testing.assert_allclose((dec ** 2).sum(axis=1), want, rtol=1e-5)
+    total = (x ** 2).sum(axis=1)
+    assert np.all((dec ** 2).sum(axis=1) >= (k / m) * total - 1e-5)
+
+
+@pytest.mark.parametrize("spec", ["signsgd:ef=1", "topk:frac=0.1,ef=1",
+                                  "qsgd:bits=4,ef=1"])
+def test_error_feedback_telescopes(spec):
+    """sum_t decode_t + e_T = sum_t g_t: the residual chain telescopes, so
+    compression error does not accumulate across steps."""
+    c = CC.get_codec(spec)
+    assert c.stateful
+    rng = np.random.default_rng(3)
+    gs = [{"w": jnp.asarray(rng.normal(size=(4, 30)), jnp.float32)}
+          for _ in range(6)]
+    res = c.init_residual(gs[0])
+    sent = np.zeros((4, 30), np.float64)
+    total = np.zeros((4, 30), np.float64)
+    for t, g in enumerate(gs):
+        enc, res = c.encode(g, key=jax.random.fold_in(KEY, t), residual=res)
+        sent += np.asarray(c.decode(enc)["w"], np.float64)
+        total += np.asarray(g["w"], np.float64)
+    np.testing.assert_allclose(sent + np.asarray(res["w"], np.float64),
+                               total, atol=1e-3)
+
+
+def test_stateless_codec_rejects_missing_residual_only_when_ef():
+    g = _tree(5)
+    CC.get_codec("bf16").encode(g)                 # stateless: fine
+    with pytest.raises(ValueError, match="residual"):
+        CC.get_codec("bf16:ef=1").encode(g)
+
+
+# ================================================== container + accounting
+def test_wire_bytes_ordering_and_container():
+    g = _tree(11)
+    sizes = {}
+    for spec in ("fp32", "bf16", "qsgd:bits=8", "signsgd"):
+        enc, _ = CC.get_codec(spec).encode(g, key=KEY)
+        assert enc.n == 11
+        assert enc.wire_bytes == 11 * enc.bytes_per_worker
+        sizes[spec] = enc.wire_bytes
+    assert sizes["fp32"] > sizes["bf16"] > sizes["qsgd:bits=8"] \
+        > sizes["signsgd"]
+
+
+def test_transport_wire_stats_params_vs_encoded():
+    """Shape-only accounting from a param tree == exact accounting off the
+    encoded container, including the chunked-gather schedule."""
+    params = {"w": jnp.zeros((40, 30)), "b": jnp.zeros((30,))}
+    ws = TP.wire_stats("qsgd:bits=8", params, n=11, chunk_bytes=1024)
+    g = jax.tree.map(lambda x: jnp.zeros((11,) + x.shape, jnp.float32),
+                     params)
+    enc, _ = CC.get_codec("qsgd:bits=8").encode(g, key=KEY)
+    assert ws.bytes_per_worker == enc.bytes_per_worker
+    assert ws.total_bytes == enc.wire_bytes
+    assert ws.chunks_per_worker == -(-ws.bytes_per_worker // 1024)
+    assert ws.compression > 3.5
+    js = ws.to_json()
+    assert js["codec"] == "qsgd" and js["n_workers"] == 11
+    # the container-side entry point must agree with the shape-only one
+    gs = TP.gather_stats(enc, chunk_bytes=1024)
+    assert gs.bytes_per_worker == ws.bytes_per_worker
+    assert gs.fp32_bytes_per_worker == ws.fp32_bytes_per_worker
+    assert gs.to_json() == js
+
+
+def test_codec_spec_errors():
+    with pytest.raises(KeyError, match="unknown codec"):
+        CC.get_codec("zstd")
+    with pytest.raises(ValueError, match="no parameter"):
+        CC.get_codec("bf16:bits=8")
+    with pytest.raises(ValueError, match="bits"):
+        CC.get_codec("qsgd:bits=9")
+    with pytest.raises(ValueError, match="frac"):
+        CC.get_codec("topk:frac=0")
+    with pytest.raises(ValueError, match="PRNG key"):
+        CC.get_codec("qsgd").encode(_tree(4))
+
+
+# ============================== fused dequantize→stats kernel (acceptance)
+# PR-2 edge-shape grid: n not a multiple of 8, d not a multiple of 128
+# (and below the d_tile), plus d=1 and a multi-tile width.
+EDGE_NS = (7, 11, 15)
+EDGE_DS = (1, 100, 257)
+
+
+@pytest.mark.parametrize("spec", ["bf16", "qsgd:bits=8", "signsgd"])
+@pytest.mark.parametrize("n", EDGE_NS)
+@pytest.mark.parametrize("d", EDGE_DS)
+def test_dequant_stats_bitwise_vs_decode_reference(spec, n, d):
+    """The fused kernel == decode-then-pairwise_stats, bit for bit, in
+    interpret mode on the edge-shape grid."""
+    rng = np.random.default_rng(n * 1000 + d)
+    g = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = CC.get_codec(spec)
+    enc, _ = c.encode(g, key=KEY)
+    payload, mult = c.dequant_form(jax.tree.leaves(enc.payload)[0],
+                                   jax.tree.leaves(enc.sidecar)[0]
+                                   if enc.sidecar is not None else None)
+    dd, sq = kops.dequant_stats(payload, mult)
+    dec = c.decode(enc)
+    dd_ref, sq_ref = kops.pairwise_stats(dec.reshape(n, d))
+    np.testing.assert_array_equal(np.asarray(dd), np.asarray(dd_ref))
+    np.testing.assert_array_equal(np.asarray(sq), np.asarray(sq_ref))
+
+
+@pytest.mark.parametrize("spec", ["bf16", "qsgd:bits=8", "topk:frac=0.2"])
+@pytest.mark.parametrize("n,d", [(7, 100), (11, 257)])
+def test_encoded_compute_stats_matches_decoded(spec, n, d):
+    """core.api.compute_stats on the wire container == on the decoded
+    stack, on both substrates; aggregate_tree accepts the container."""
+    rng = np.random.default_rng(n + d)
+    tree = {"a": jnp.asarray(rng.normal(size=(n, d)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n, 5, 7)), jnp.float32)}
+    c = CC.get_codec(spec)
+    enc, _ = c.encode(tree, key=KEY)
+    dec = c.decode(enc)
+    f = 1
+    for up in (False, True):
+        se = api.compute_stats(enc, f, needs_dists=True, needs_norms=True,
+                               use_pallas=up)
+        sd = api.compute_stats(dec, f, needs_dists=True, needs_norms=True,
+                               use_pallas=up)
+        np.testing.assert_array_equal(np.asarray(se.dists),
+                                      np.asarray(sd.dists))
+        np.testing.assert_array_equal(np.asarray(se.sq_norms),
+                                      np.asarray(sd.sq_norms))
+    oe = api.aggregate_tree(enc, f, "multi_bulyan")
+    od = api.aggregate_tree(dec, f, "multi_bulyan")
+    for a, b in zip(jax.tree.leaves(oe), jax.tree.leaves(od)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_encoded_grads_is_a_jit_pytree():
+    tree = _tree(7)
+    c = CC.get_codec("qsgd:bits=8")
+    enc, _ = c.encode(tree, key=KEY)
+    out = jax.jit(lambda e: api.aggregate_tree(e, 1, "multi_bulyan"))(enc)
+    ref = api.aggregate_tree(enc, 1, "multi_bulyan")
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ========================================================== wire attacks
+def _honest_stack(n_honest, d=60, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((np.ones(d) + 0.05 * rng.normal(
+        size=(n_honest, d))).astype(np.float32))
+
+
+@pytest.mark.parametrize("wa", ["scale_poison:gain=100", "payload_flip"])
+def test_wire_attacks_rejected_by_multi_bulyan(wa):
+    """On a tight honest cluster the decoded wire-attack rows are far
+    outliers: multi-Bulyan must give them zero selection mass."""
+    from repro.dist.trainer import inject_wire
+    n, f = 11, 2
+    G = jnp.concatenate([_honest_stack(f), _honest_stack(n - f, seed=1)])
+    c = CC.get_codec("qsgd:bits=8")
+    enc, _ = c.encode(G, key=KEY)
+    enc = inject_wire(enc, f, wa, KEY)
+    stats = api.compute_stats(enc, f, needs_dists=True)
+    plan = api.get_aggregator("multi_bulyan").plan(stats)
+    diag = plan.diagnostics(stats)
+    assert float(diag["byz_mass"]) < 1e-6
+    # and averaging is captured by construction (uniform mass)
+    avg_diag = api.get_aggregator("average").plan(stats).diagnostics(stats)
+    np.testing.assert_allclose(float(avg_diag["byz_mass"]), f / n, atol=1e-5)
+
+
+def test_scale_poison_decodes_to_outlier():
+    """The poisoned sidecar multiplies through the decode: byz rows sit
+    -gain× along an honest row, while their payloads look honest."""
+    from repro.dist.trainer import inject_wire
+    n, f, gain = 7, 2, 50.0
+    G = jnp.concatenate([_honest_stack(f), _honest_stack(n - f, seed=1)])
+    c = CC.get_codec("qsgd:bits=8")
+    enc, _ = c.encode(G, key=KEY)
+    poisoned = inject_wire(enc, f, f"scale_poison:gain={gain}", KEY)
+    # payload rows are copied from the first honest worker (wire-legal)
+    np.testing.assert_array_equal(np.asarray(poisoned.payload[0]),
+                                  np.asarray(poisoned.payload[f]))
+    dec = c.decode(poisoned)
+    honest0 = np.asarray(c.decode(enc))[f]
+    np.testing.assert_allclose(np.asarray(dec[0]), -gain * honest0,
+                               rtol=1e-5)
+
+
+def test_wire_attack_spec_validation():
+    with pytest.raises(KeyError, match="unknown wire attack"):
+        attacks.get_wire_attack("garbage")
+    with pytest.raises(ValueError, match="no parameter"):
+        attacks.get_wire_attack("payload_flip:gain=2")
+    assert attacks.is_wire_attack("scale_poison:gain=3")
+    assert not attacks.is_wire_attack("sign_flip")
+
+
+def test_wire_attack_requires_codec():
+    from repro.configs.base import ArchConfig, RobustConfig
+    from repro.dist import make_train_step
+    from repro.optim import sgd, constant
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128)
+    rcfg = RobustConfig(n_workers=11, f=2, gar="multi_bulyan")
+    with pytest.raises(ValueError, match="codec"):
+        make_train_step(cfg, rcfg, sgd(), constant(0.1),
+                        attack="scale_poison")
+
+
+# ==================================================== trainer integration
+SMALL_ARCH = None
+
+
+def _small_arch():
+    global SMALL_ARCH
+    if SMALL_ARCH is None:
+        from repro.configs.base import ArchConfig
+        SMALL_ARCH = ArchConfig(name="comm-test", family="dense",
+                                n_layers=2, d_model=64, n_heads=4,
+                                n_kv_heads=2, d_ff=128, vocab_size=128)
+    return SMALL_ARCH
+
+
+@pytest.mark.parametrize("codec,attack",
+                         [("bf16", "sign_flip"),
+                          ("qsgd:bits=8", "scale_poison:gain=50")])
+def test_stacked_vs_streaming_bit_parity_under_codec(codec, attack):
+    """The leaf-offset encode-key convention: per-block encode + wire
+    injection reproduces the stacked trainer bit for bit."""
+    from repro.configs.base import RobustConfig
+    from repro.data import make_lm_batch
+    from repro.dist import make_train_step, split_workers
+    from repro.dist.streaming import make_streaming_train_step
+    from repro import models as MD
+    from repro.optim import sgd, constant
+    cfg = _small_arch()
+    n = 11
+    params = MD.init_model(KEY, cfg)
+    opt = sgd(momentum=0.9)
+    batch = split_workers(make_lm_batch(KEY, 128, n * 2, 16, seed=7), n)
+    rcfg = RobustConfig(n_workers=n, f=2, gar="multi_bulyan")
+    stacked = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.05),
+                                      chunk_q=16, attack=attack,
+                                      codec=codec, telemetry=True))
+    stream = jax.jit(make_streaming_train_step(
+        cfg, rcfg, opt, constant(0.05), scope="global", chunk_q=16,
+        attack=attack, codec=codec, telemetry=True))
+    ps, _, ms = stacked(params, opt.init(params), batch, KEY)
+    pg, _, mg = stream(params, opt.init(params), batch, KEY)
+    for a, b in zip(jax.tree.leaves(ps), jax.tree.leaves(pg)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(ms["telemetry"]["selection"]),
+        np.asarray(mg["telemetry"]["selection"]))
+    assert float(ms["telemetry"]["wire_bytes_per_worker"]) == \
+        float(mg["telemetry"]["wire_bytes_per_worker"]) > 0
+
+
+def test_error_feedback_state_threads_through_trainer():
+    """An ef=1 codec adds the residual as the fourth state slot; the
+    residual becomes nonzero after one lossy step."""
+    from repro.configs.base import RobustConfig
+    from repro.data import make_lm_batch
+    from repro.dist import init_train_state, make_train_step, split_workers
+    from repro.dist.trainer import split_train_state
+    from repro import models as MD
+    from repro.optim import sgd, constant
+    cfg = _small_arch()
+    n = 11
+    params = MD.init_model(KEY, cfg)
+    opt = sgd(momentum=0.9)
+    codec = "topk:frac=0.05,ef=1"
+    state = init_train_state(opt, params, n_workers=n, codec=codec)
+    _, _, _, cres = split_train_state(state, False, False, True)
+    assert all(float(jnp.max(jnp.abs(x))) == 0.0
+               for x in jax.tree.leaves(cres))
+    rcfg = RobustConfig(n_workers=n, f=2, gar="multi_bulyan")
+    step = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.05),
+                                   chunk_q=16, codec=codec))
+    batch = split_workers(make_lm_batch(KEY, 128, n * 2, 16, seed=7), n)
+    _, state2, _ = step(params, state, batch, KEY)
+    _, _, _, cres2 = split_train_state(state2, False, False, True)
+    assert any(float(jnp.max(jnp.abs(x))) > 0.0
+               for x in jax.tree.leaves(cres2))
+
+
+def test_streaming_rejects_error_feedback_codec():
+    from repro.configs.base import RobustConfig
+    from repro.dist.streaming import make_streaming_train_step
+    from repro.optim import sgd, constant
+    rcfg = RobustConfig(n_workers=11, f=2, gar="multi_bulyan")
+    with pytest.raises(NotImplementedError, match="error-feedback"):
+        make_streaming_train_step(_small_arch(), rcfg, sgd(),
+                                  constant(0.1), codec="signsgd:ef=1")
+
+
+# ========================= regression: selection preserved under codecs
+# (satellite: the PR-3 acceptance scenario must keep multi_bulyan's
+# selection under bf16 and qsgd:bits=8 wires)
+def _attacked_stats(codec=None, rule_f=2, n=11, d=50,
+                    attack="little_is_enough:z=4.0"):
+    rng = np.random.default_rng(0)
+    correct = (np.ones(d) + 0.1 * rng.normal(size=(n - rule_f, d))
+               ).astype(np.float32)
+    G = attacks.apply_attack(jnp.asarray(correct), rule_f, attack, KEY)
+    if codec is None:
+        return api.compute_stats(G, rule_f, needs_dists=True)
+    enc, _ = CC.get_codec(codec).encode(G, key=KEY)
+    return api.compute_stats(enc, rule_f, needs_dists=True)
+
+
+def test_plan_selection_preserved_under_codecs():
+    """bf16 must reproduce the fp32 selection support exactly on the
+    attacked reference stack; qsgd:bits=8 must keep byzantine mass at 0
+    (quantization noise may permute near-tied honest rows)."""
+    ref = api.get_aggregator("multi_bulyan").plan(_attacked_stats())
+    ref_sel = np.asarray(ref.selection_weights()) > 0
+    for codec in ("bf16", "qsgd:bits=8"):
+        stats = _attacked_stats(codec)
+        plan = api.get_aggregator("multi_bulyan").plan(stats)
+        sel = np.asarray(plan.selection_weights())
+        assert float(np.sum(sel[:2])) < 1e-6, codec
+        if codec == "bf16":
+            np.testing.assert_array_equal(sel > 0, ref_sel)
+
+
+@pytest.mark.parametrize("codec", ["bf16", "qsgd:bits=8"])
+def test_switch_campaign_bounded_under_codec(codec):
+    """The PR-3 acceptance switch scenario over a compressed wire:
+    multi-Bulyan's post-switch honest-mean deviation (measured against
+    the *decoded* stack the rule consumed) stays within the acceptance
+    bound max < 2.0 with < 2% byzantine selection — the documented
+    tolerance: quantization must not widen the acceptance thresholds.
+    Per-phase WireStats must land in the summary."""
+    from repro.sim import run_campaign, switch_scenario
+    sc = switch_scenario("multi_bulyan", pre=8, post=8, codec=codec)
+    r = run_campaign(sc)
+    post = slice(8, 16)
+    assert float(np.max(r.trace["honest_dev"][post])) < 2.0
+    assert float(np.mean(r.trace["byz_mass"][post])) < 0.02
+    assert r.wire is not None and r.wire["bytes_per_worker"] > 0
+    for ph in r.summary["phases"]:
+        assert ph["wire"] == r.wire
+    np.testing.assert_allclose(
+        r.trace["wire_bytes_per_worker"],
+        float(r.wire["bytes_per_worker"]), rtol=1e-6)
+
+
+def test_scenario_codec_validation():
+    from repro.sim import AttackPhase, AttackSchedule, Scenario
+    sched = AttackSchedule((AttackPhase(steps=2),))
+    with pytest.raises(KeyError, match="unknown codec"):
+        Scenario(name="x", schedule=sched, codec="zstd")
+    with pytest.raises(ValueError, match="needs a codec"):
+        Scenario(name="x", schedule=AttackSchedule(
+            (AttackPhase(steps=2, attack="scale_poison"),)))
+    with pytest.raises(ValueError, match="trainer='stacked'"):
+        Scenario(name="x", schedule=sched, codec="signsgd:ef=1",
+                 trainer="stream_block")
+    sc = Scenario(name="x", schedule=sched, codec="qsgd:bits=8")
+    assert sc.to_json()["codec"] == "qsgd:bits=8"
+
+
+# ===================================================== bench schema gate
+def test_validate_bench_comm_schema(tmp_path):
+    import json
+    from benchmarks.validate_bench import check
+    good = {
+        "schema": "comm.v1",
+        "results": {
+            c: {k: {"wire_bytes": wb, "bytes_per_worker": wb // 11,
+                    "us_per_call": 10.0, "ratio_vs_fp32": 4.0}
+                for k, wb in (("n=11,d=100", base), ("n=11,d=200", 2 * base))}
+            for c, base in (("fp32", 4400), ("bf16", 2200),
+                            ("qsgd:bits=8", 1144))
+        },
+    }
+    p = tmp_path / "BENCH_comm.json"
+    p.write_text(json.dumps(good))
+    assert check(str(p)) == []
+    bad = json.loads(json.dumps(good))
+    bad["results"]["bf16"]["n=11,d=100"]["wire_bytes"] = 9999
+    p.write_text(json.dumps(bad))
+    assert any("strictly ordered" in pr for pr in check(str(p)))
+    del bad["results"]["fp32"]
+    p.write_text(json.dumps(bad))
+    assert any("missing required codec" in pr for pr in check(str(p)))
+
+
+def test_validate_bench_accuracy_schema(tmp_path):
+    import json
+    from benchmarks.validate_bench import check
+    good = {"schema": "accuracy.v1",
+            "results": {r: {"b=5": {"acc_mean": 0.8, "acc_std": 0.01}}
+                        for r in ("average", "multi_bulyan")}}
+    p = tmp_path / "BENCH_accuracy.json"
+    p.write_text(json.dumps(good))
+    assert check(str(p)) == []
+    good["results"]["average"]["b=5"]["acc_mean"] = 1.5
+    p.write_text(json.dumps(good))
+    assert any("outside [0, 1]" in pr for pr in check(str(p)))
