@@ -9,14 +9,18 @@ so absolute times differ — the claims under test are the SHAPES:
 * O(n²) scaling in the number of workers for (MULTI-)KRUM/BULYAN;
 * MEDIAN's advantage shrinks as d grows (the paper's crossover argument).
 
-On top of the paper's grid this times the three apply substrates for
+On top of the paper's grid this times the apply substrates for
 multi_bulyan — ``[xla]`` (unfused tensordots + coordinate phase),
-``[pallas]`` (materialised einsums + coord_select kernel) and ``[fused]``
-(single fused_select kernel, no (θ, d) HBM intermediates) — and persists
-everything to ``BENCH_agg_time.json`` so later PRs have a perf trajectory
-to diff against (schema: rule -> "n=<n>,d=<d>" -> us_per_call).  On CPU the
-Pallas rows run in interpret mode: their absolute numbers measure the
-schedule, not the hardware — the TPU claim is the HBM-traffic count.
+``[pallas]`` (materialised einsums + coord_select kernel), ``[fused]``
+(single fused_select kernel, no (θ, d) HBM intermediates) and ``[sharded]``
+(the whole stats→plan→apply pipeline mesh-native through shard_map over
+the host mesh — DESIGN.md §10) — and persists everything to
+``BENCH_agg_time.json`` so later PRs have a perf trajectory to diff
+against (schema: rule -> "n=<n>,d=<d>" -> us_per_call).  On CPU the
+Pallas rows run in interpret mode and the sharded row usually sees a 1×1
+host mesh: those absolute numbers measure schedule + partitioning
+overhead, not the hardware — the TPU claims are the HBM-traffic count and
+the n/W row-block split of the distance phase.
 
 CSV: name,us_per_call,derived
 """
@@ -44,6 +48,7 @@ PATHS = (
     ("multi_bulyan[xla]", dict(use_pallas=False, fused=False)),
     ("multi_bulyan[pallas]", dict(use_pallas=True, fused=False)),
     ("multi_bulyan[fused]", dict(use_pallas=True, fused=True)),
+    ("multi_bulyan[sharded]", dict(sharded=True)),
 )
 PATH_NS = (15,)
 BENCH_JSON = "BENCH_agg_time.json"
@@ -70,7 +75,10 @@ def _timed(fn, *args, reps: int = 7, drop: int = 2) -> Tuple[float, float]:
     return float(keep.mean()), float(keep.std())
 
 
-def _path_fn(f: int, **kw):
+def _path_fn(f: int, sharded: bool = False, **kw):
+    if sharded:
+        from repro.launch.mesh import make_host_mesh
+        kw["mesh_ctx"] = api.MeshContext.for_mesh(make_host_mesh())
     return jax.jit(functools.partial(
         api.aggregate_tree, f=f, name="multi_bulyan", **kw))
 

@@ -6,8 +6,8 @@ Defaults to ``BENCH_agg_time.json``.  Four schemas are known, dispatched on
 the payload's ``schema`` field:
 
 * agg_time (``rule -> 'n=<n>,d=<d>' -> us_per_call``) — must contain the
-  three apply substrate rows (multi_bulyan[xla|pallas|fused]) the perf
-  trajectory exists to track;
+  four apply substrate rows (multi_bulyan[xla|pallas|fused|sharded]) the
+  perf trajectory exists to track;
 * resilience (``sim.resilience.v1``) — rule × attack campaign cells from
   ``benchmarks/resilience.py``, each with finite honest-mean deviation,
   byzantine selection mass in [0, 1] and a finite final loss;
@@ -29,7 +29,7 @@ import re
 import sys
 
 REQUIRED_ROWS = ("multi_bulyan[xla]", "multi_bulyan[pallas]",
-                 "multi_bulyan[fused]")
+                 "multi_bulyan[fused]", "multi_bulyan[sharded]")
 _KEY_RE = re.compile(r"^n=\d+,d=\d+$")
 _BATCH_RE = re.compile(r"^b=\d+$")
 

@@ -12,7 +12,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, RobustConfig
 from repro.core import aggregate, apply_attack, theory
 from repro.data import lm_batches
-from repro.dist import make_train_step, split_workers
+from repro.dist import init_train_state, make_train_step, split_workers
 from repro import models as MD
 from repro.optim import sgd, constant
 
@@ -43,7 +43,7 @@ def part2_training():
     key = jax.random.key(0)
     params = MD.init_model(key, cfg)
     opt = sgd(momentum=0.9)
-    state = opt.init(params)
+    state = init_train_state(opt, params)   # the named TrainerState pytree
     step = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.05),
                                    chunk_q=16, attack="inf"))
     data = lm_batches(cfg.vocab_size, 22, 16)

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MoEConfig, RobustConfig, SSMConfig, HybridConfig
 from repro.data import lm_batches
-from repro.dist import make_train_step, split_workers
+from repro.dist import init_train_state, make_train_step, split_workers
 from repro.dist.streaming import make_streaming_train_step
 from repro import models as MD
 from repro.optim import sgd, constant
@@ -33,7 +33,7 @@ def main():
     key = jax.random.key(0)
     params = MD.init_model(key, cfg)
     opt = sgd(momentum=0.9)
-    state = opt.init(params)
+    state = init_train_state(opt, params)
     batch = split_workers(next(lm_batches(cfg.vocab_size, 22, 32)), 11)
 
     stacked = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.05),

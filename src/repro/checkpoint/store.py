@@ -63,8 +63,27 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(directory: str, step: int, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+def _alias_key(ks: str, key_aliases) -> Optional[str]:
+    """Translate a missing key through prefix aliases (oldest-first)."""
+    for new_pre, old_pre in (key_aliases or {}).items():
+        if ks == new_pre:
+            return old_pre
+        if ks.startswith(new_pre + _SEP):
+            return old_pre + ks[len(new_pre):]
+    return None
+
+
+def restore(directory: str, step: int, like: PyTree, *,
+            key_aliases=None) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    ``key_aliases`` maps key-path *prefixes* of ``like`` to the prefixes an
+    older writer used — the migration shim for layout renames (e.g. the
+    PR-5 ``TrainerState`` unification reads PR-3-era checkpoints whose
+    optimizer lived under a top-level ``opt`` key via
+    ``{"state|opt": "opt", ...}``).  An alias is consulted only when the
+    canonical key is absent, so current-layout checkpoints never take it.
+    """
     import ml_dtypes
 
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
@@ -81,7 +100,11 @@ def restore(directory: str, step: int, like: PyTree) -> PyTree:
         for kpath, leaf in flat:
             ks = _key_str(kpath)
             if ks not in tagged:
-                raise KeyError(f"checkpoint missing key {ks!r}")
+                alias = _alias_key(ks, key_aliases)
+                if alias is not None and alias in tagged:
+                    ks = alias
+                else:
+                    raise KeyError(f"checkpoint missing key {ks!r}")
             arr = tagged[ks]
             if tuple(arr.shape) != tuple(leaf.shape):
                 raise ValueError(f"shape mismatch for {ks}: "

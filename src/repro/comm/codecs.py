@@ -449,8 +449,11 @@ def encoded_leaf_contrib(codec: Codec, payload: Array,
     return api._leaf_stats_contrib(g)
 
 
-def _accumulate(enc: EncodedGrads, use_pallas: bool
-                ) -> Tuple[Array, Array]:
+def encoded_raw_stats(enc: EncodedGrads, *, use_pallas: bool = False
+                      ) -> Tuple[Array, Array]:
+    """Raw accumulation over a wire container: ((n, n) unfinalised
+    sq-dists, (n,) sq-norms) — the encoded counterpart of one full pass of
+    ``core.api.raw_pairwise_stats`` (which delegates here)."""
     codec = get_codec(enc.spec)
     p_leaves = jax.tree.leaves(enc.payload)
     s_leaves = jax.tree.leaves(enc.sidecar) \
@@ -471,7 +474,7 @@ def encoded_raw_contrib(enc: EncodedGrads, *, use_pallas: bool = False
     the streaming trainer's per-block accumulation unit, mirroring
     ``core.api.leaf_sqdist_contrib`` so the cross-block float summation
     stays identical to the stacked encoded path."""
-    return _accumulate(enc, use_pallas)[0]
+    return encoded_raw_stats(enc, use_pallas=use_pallas)[0]
 
 
 def encoded_pairwise_stats(enc: EncodedGrads, *, use_pallas: bool = False
@@ -483,5 +486,5 @@ def encoded_pairwise_stats(enc: EncodedGrads, *, use_pallas: bool = False
     in interpret mode for dequant-form codecs (tests/test_comm.py).
     """
     from repro.core import api
-    total_d, total_s = _accumulate(enc, use_pallas)
+    total_d, total_s = encoded_raw_stats(enc, use_pallas=use_pallas)
     return api.finalize_dists(total_d), total_s

@@ -28,6 +28,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import gar as G
 
@@ -114,20 +115,7 @@ def tree_pairwise_stats(grads: PyTree, *, use_pallas: bool = False
     accumulated across leaves and the distances finalised once.  The XLA
     path shares the gram intermediate so the norms also cost no extra read.
     """
-    leaves = jax.tree.leaves(grads)
-    if not leaves:
-        raise ValueError("empty gradient pytree")
-    n = leaves[0].shape[0]
-    total_d = jnp.zeros((n, n), dtype=jnp.float32)
-    total_s = jnp.zeros((n,), dtype=jnp.float32)
-    for leaf in leaves:
-        if use_pallas:
-            from repro.kernels import ops as kops
-            dd, sq = kops.pairwise_stats(_leaf2d(leaf))
-        else:
-            dd, sq = _leaf_stats_contrib(leaf)
-        total_d = total_d + dd
-        total_s = total_s + sq
+    total_d, total_s = raw_pairwise_stats(grads, use_pallas=use_pallas)
     return finalize_dists(total_d), total_s
 
 
@@ -157,7 +145,8 @@ def _as_encoded(grads: PyTree):
 
 def compute_stats(grads: PyTree, f: int, *, needs_dists: bool = True,
                   needs_norms: bool = False, use_pallas: bool = False,
-                  dists: Optional[Array] = None) -> AggStats:
+                  dists: Optional[Array] = None,
+                  mesh_ctx: Optional["MeshContext"] = None) -> AggStats:
     """Build the :class:`AggStats` a rule's ``plan`` consumes.
 
     Only what the capability flags ask for is computed — ``average`` pays
@@ -170,16 +159,27 @@ def compute_stats(grads: PyTree, f: int, *, needs_dists: bool = True,
     statistics then run straight on the quantized payloads — through the
     fused dequantize→stats kernel under ``use_pallas`` (DESIGN.md §9) —
     without materialising the decoded stack here.
+
+    With ``mesh_ctx`` the statistics run mesh-native (DESIGN.md §10): the
+    worker axis is sharded over ``mesh_ctx.worker_axes`` inside a
+    ``shard_map`` and every device computes only its row block of the
+    (n, n) matrix — bitwise-identical to the replicated path.
     """
     enc = _as_encoded(grads)
     if enc is not None:
-        from repro.comm import codecs as CC
+        def enc_stats():
+            if mesh_ctx is not None:
+                raw, sq = sharded_raw_stats(enc, mesh_ctx=mesh_ctx,
+                                            use_pallas=use_pallas)
+                return finalize_dists(raw), sq
+            from repro.comm import codecs as CC
+            return CC.encoded_pairwise_stats(enc, use_pallas=use_pallas)
+
         norms = None
         if needs_dists and dists is None:
-            dists, norms = CC.encoded_pairwise_stats(enc,
-                                                     use_pallas=use_pallas)
+            dists, norms = enc_stats()
         if needs_norms and norms is None:
-            norms = CC.encoded_pairwise_stats(enc, use_pallas=use_pallas)[1]
+            norms = enc_stats()[1]
         return AggStats(n=enc.n, f=f, dists=dists, sq_norms=norms)
     leaves = jax.tree.leaves(grads)
     if not leaves:
@@ -190,10 +190,253 @@ def compute_stats(grads: PyTree, f: int, *, needs_dists: bool = True,
             raise ValueError("all leaves must share the worker axis size")
     norms = None
     if needs_dists and dists is None:
-        dists, norms = tree_pairwise_stats(grads, use_pallas=use_pallas)
+        if mesh_ctx is not None:
+            raw, norms = sharded_raw_stats(grads, mesh_ctx=mesh_ctx,
+                                           use_pallas=use_pallas)
+            dists = finalize_dists(raw)
+        else:
+            dists, norms = tree_pairwise_stats(grads, use_pallas=use_pallas)
     if needs_norms and norms is None:
+        # norms alone are O(n·d) row sums — replicated compute is cheaper
+        # than the sharded distance phase even on a mesh, and the values
+        # are identical (same per-leaf accumulation order)
         norms = tree_sq_norms(grads)
     return AggStats(n=n, f=f, dists=dists, sq_norms=norms)
+
+
+# ==========================================================================
+# mesh-native (SPMD) execution — DESIGN.md §10
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """Execution context for the mesh-native (shard_map) aggregation path.
+
+    ``worker_axes`` name the mesh axes carrying the byzantine worker
+    dimension (``("pod", "data")`` multi-pod, ``("data",)`` single-pod);
+    ``model_axis`` the tensor-parallel axis the apply phase shards the
+    d dimension over (``None`` disables d-sharding).  The context is pure
+    metadata — hashable, jit-static — so step builders can close over it.
+    """
+
+    mesh: Any
+    worker_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"
+
+    @classmethod
+    def for_mesh(cls, mesh, worker_axes: Optional[Sequence[str]] = None
+                 ) -> "MeshContext":
+        """Derive the canonical context from a mesh's axis names."""
+        names = tuple(mesh.axis_names)
+        if worker_axes is None:
+            worker_axes = ("pod", "data") if "pod" in names else ("data",)
+        missing = [a for a in worker_axes if a not in names]
+        if missing:
+            raise ValueError(
+                f"worker axes {missing} not in mesh axes {names}")
+        return cls(mesh=mesh, worker_axes=tuple(worker_axes),
+                   model_axis="model" if "model" in names else None)
+
+    @property
+    def worker_size(self) -> int:
+        sizes = dict(self.mesh.shape)
+        out = 1
+        for a in self.worker_axes:
+            out *= sizes[a]
+        return out
+
+    @property
+    def model_size(self) -> int:
+        return dict(self.mesh.shape)[self.model_axis] \
+            if self.model_axis is not None else 1
+
+    @property
+    def worker_entry(self):
+        """The PartitionSpec entry for the worker axis (str or tuple)."""
+        return self.worker_axes if len(self.worker_axes) > 1 \
+            else self.worker_axes[0]
+
+
+def _shard_map(fn, ctx: MeshContext, in_specs, out_specs):
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=ctx.mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def _worker_index(ctx: MeshContext) -> Array:
+    """Flat index of this device's worker-axis shard (inside shard_map)."""
+    idx = jnp.zeros((), jnp.int32)
+    sizes = dict(ctx.mesh.shape)
+    for a in ctx.worker_axes:
+        idx = idx * sizes[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _pad_rows(x: Array, n_pad: int) -> Array:
+    return jnp.pad(x, ((0, n_pad - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+
+
+def _block_stats_contrib(x_loc: Array, x_full: Array
+                         ) -> Tuple[Array, Array]:
+    """Row-block partial of :func:`_leaf_stats_contrib`.
+
+    ``x_loc`` is this device's worker rows, ``x_full`` the gathered stack.
+    Each output element is the same full-d reduction the replicated formula
+    computes, so the block is bitwise-identical to the matching rows of
+    ``_leaf_stats_contrib(x_full)`` (tests/test_spmd.py).
+    """
+    xl = x_loc.astype(jnp.float32)
+    xf = x_full.astype(jnp.float32)
+    axes = _param_axes(xf)
+    sq_full = jnp.sum(xf * xf, axis=axes)
+    sq_loc = jnp.sum(xl * xl, axis=axes)
+    gram = jax.lax.dot_general(
+        xl, xf, ((axes, axes), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32) if xf.ndim == 2 else \
+        jnp.tensordot(xl, xf, axes=(axes, axes),
+                      precision=jax.lax.Precision.HIGHEST)
+    return sq_loc[:, None] + sq_full[None, :] - 2.0 * gram, sq_full
+
+
+def sharded_raw_stats(grads: PyTree, *, mesh_ctx: MeshContext,
+                      use_pallas: bool = False) -> Tuple[Array, Array]:
+    """Mesh-native single pass: (raw (n, n) sq-dists, (n,) sq-norms).
+
+    The worker axis of every leaf (gradient rows, or ``EncodedGrads``
+    payload/sidecar rows) is sharded over ``mesh_ctx.worker_axes`` inside a
+    ``shard_map``; each device all-gathers the rows of one leaf at a time,
+    computes its *row block* of that leaf's contribution — the O(n²·d)
+    distance phase decomposes across the worker shards, the paper's §IV
+    parallelisation claim — and the blocks are reassembled by the out-spec.
+    Raw contract matches :func:`leaf_sqdist_contrib` (no clamp, diagonal
+    kept), and the float summation order matches the replicated path
+    exactly, so results are bitwise-identical (tests/test_spmd.py).
+
+    n not divisible by the worker-shard count is zero-row padded; padded
+    rows decode/contract to exact zeros and are sliced away.  Under
+    ``use_pallas`` each device runs the existing square ``pairwise_stats``
+    / ``dequant_stats`` kernel on the gathered rows and keeps its block —
+    redundant flops pending a rectangular kernel variant, same wire cost.
+    """
+    enc = _as_encoded(grads)
+    W = mesh_ctx.worker_size
+    lead = mesh_ctx.worker_entry
+    axes_names = mesh_ctx.worker_axes
+
+    if enc is not None:
+        from repro.comm import codecs as CC
+        codec = CC.get_codec(enc.spec)
+        n = enc.n
+        n_pad = -(-n // W) * W
+        n_loc = n_pad // W
+        p_leaves = jax.tree.leaves(enc.payload)
+        s_leaves = jax.tree.leaves(enc.sidecar) \
+            if enc.sidecar is not None else [None] * len(p_leaves)
+        shapes = [(n_pad,) + tuple(s[1:]) for s in enc.shapes]
+        operands = [_pad_rows(x, n_pad) for x in p_leaves] + \
+            [_pad_rows(s, n_pad) for s in s_leaves if s is not None]
+        has_sidecar = [s is not None for s in s_leaves]
+        in_specs = tuple(P(*((lead,) + (None,) * (x.ndim - 1)))
+                         for x in operands)
+
+        def local(*flat):
+            ps = flat[: len(p_leaves)]
+            ss_iter = iter(flat[len(p_leaves):])
+            idx = _worker_index(mesh_ctx)
+            total_d = jnp.zeros((n_loc, n_pad), jnp.float32)
+            total_s = jnp.zeros((n_pad,), jnp.float32)
+            for p_loc, has_s, shape in zip(ps, has_sidecar, shapes):
+                s_loc = next(ss_iter) if has_s else None
+                p_full = jax.lax.all_gather(p_loc, axes_names, axis=0,
+                                            tiled=True)
+                s_full = None if s_loc is None else \
+                    jax.lax.all_gather(s_loc, axes_names, axis=0, tiled=True)
+                if use_pallas:
+                    dd, sq = CC.encoded_leaf_contrib(
+                        codec, p_full, s_full, shape, use_pallas=True)
+                    dd = jax.lax.dynamic_slice_in_dim(dd, idx * n_loc,
+                                                      n_loc, 0)
+                else:
+                    g_full = codec.decode_leaf(
+                        _leaf2d(p_full), s_full, shape).reshape(shape)
+                    g_loc = jax.lax.dynamic_slice_in_dim(
+                        g_full, idx * n_loc, n_loc, 0)
+                    dd, sq = _block_stats_contrib(g_loc, g_full)
+                total_d = total_d + dd
+                total_s = total_s + sq
+            return total_d, total_s
+
+        fn = _shard_map(local, mesh_ctx, in_specs,
+                        (P(lead, None), P(None)))
+        dd, sq = fn(*operands)
+        return dd[:n, :n], sq[:n]
+
+    leaves = jax.tree.leaves(grads)
+    if not leaves:
+        raise ValueError("empty gradient pytree")
+    n = leaves[0].shape[0]
+    n_pad = -(-n // W) * W
+    n_loc = n_pad // W
+    padded = [_pad_rows(x, n_pad) for x in leaves]
+    in_specs = tuple(P(*((lead,) + (None,) * (x.ndim - 1))) for x in padded)
+
+    def local(*loc_leaves):
+        idx = _worker_index(mesh_ctx)
+        total_d = jnp.zeros((n_loc, n_pad), jnp.float32)
+        total_s = jnp.zeros((n_pad,), jnp.float32)
+        for xl in loc_leaves:
+            full = jax.lax.all_gather(xl, axes_names, axis=0, tiled=True)
+            if use_pallas:
+                from repro.kernels import ops as kops
+                dd, sq = kops.pairwise_stats(_leaf2d(full))
+                dd = jax.lax.dynamic_slice_in_dim(dd, idx * n_loc, n_loc, 0)
+            else:
+                dd, sq = _block_stats_contrib(xl, full)
+            total_d = total_d + dd
+            total_s = total_s + sq
+        return total_d, total_s
+
+    fn = _shard_map(local, mesh_ctx, in_specs, (P(lead, None), P(None)))
+    dd, sq = fn(*padded)
+    return dd[:n, :n], sq[:n]
+
+
+def raw_pairwise_stats(grads: PyTree, *, use_pallas: bool = False,
+                       mesh_ctx: Optional[MeshContext] = None
+                       ) -> Tuple[Array, Array]:
+    """Raw accumulation unit shared by stacked and streaming trainers.
+
+    (raw (n, n) sq-dists, (n,) sq-norms) of a stacked pytree *or* an
+    ``EncodedGrads`` container — unclamped, diagonal kept; finalise once
+    with :func:`finalize_dists`.  Bit-exact parity with the stacked
+    single pass requires matching its flat per-leaf accumulation order:
+    a cross-block accumulator must add one *leaf* at a time (as the
+    streaming pass-1 does), not pre-summed per-block subtotals, or the
+    float sums reassociate.  Routes through :func:`sharded_raw_stats`
+    when a :class:`MeshContext` is given.
+    """
+    if mesh_ctx is not None:
+        return sharded_raw_stats(grads, mesh_ctx=mesh_ctx,
+                                 use_pallas=use_pallas)
+    enc = _as_encoded(grads)
+    if enc is not None:
+        from repro.comm import codecs as CC
+        return CC.encoded_raw_stats(enc, use_pallas=use_pallas)
+    leaves = jax.tree.leaves(grads)
+    if not leaves:
+        raise ValueError("empty gradient pytree")
+    n = leaves[0].shape[0]
+    total_d = jnp.zeros((n, n), jnp.float32)
+    total_s = jnp.zeros((n,), jnp.float32)
+    for leaf in leaves:
+        if use_pallas:
+            from repro.kernels import ops as kops
+            dd, sq = kops.pairwise_stats(_leaf2d(leaf))
+        else:
+            dd, sq = _leaf_stats_contrib(leaf)
+        total_d = total_d + dd
+        total_s = total_s + sq
+    return total_d, total_s
 
 
 # ==========================================================================
@@ -359,6 +602,124 @@ def _bulyan_leaf(w_ext: Array, w_agr: Array, beta: int,
     return G.bulyan_coordinate_phase(g_ext, g_agr, beta).astype(leaf.dtype)
 
 
+def _sharded_apply_leaf(plan: "AggPlan", leaf: Array, ctx: MeshContext,
+                        coordinate_fn=None, *, use_pallas: bool = False,
+                        fused: bool = True,
+                        row_mult: Optional[Array] = None) -> Array:
+    """Mesh-native apply of one plan to one leaf (DESIGN.md §10).
+
+    The leaf's flattened d axis is sharded over ``ctx.model_axis`` and the
+    worker axis over ``ctx.worker_axes``; inside the shard_map each device
+    all-gathers the worker rows of its d-shard — the one worker→model
+    reshard the pipeline admits — and runs the coordinate phase purely
+    locally, so no device ever holds more than (n, d/M) of the stack and
+    the model axis pays zero collectives after the gather.
+
+    With ``row_mult`` the leaf is a quantized wire *payload* (int8/bf16)
+    and the (n,) per-row dequant multipliers are applied after the gather
+    — the §9 decode invariant ``payload.astype(f32) * mult[row]`` runs
+    per shard, so the fp32 stack never exists replicated; the result is
+    fp32 (the decoded dtype), not the payload dtype.
+
+    Coordinate-kind plans (median / trimmed mean) shard only d: zero-row
+    worker padding would perturb order statistics, and their apply never
+    mixes workers with weights that could mask padding.
+    """
+    n = leaf.shape[0]
+    M = ctx.model_size
+    lead = ctx.worker_entry
+    kind = plan.kind
+    out_dtype = jnp.float32 if row_mult is not None else leaf.dtype
+    x = _leaf2d(leaf)                                  # (n, numel)
+    if row_mult is None:
+        x = x.astype(jnp.float32)
+    numel = x.shape[1]
+    d_pad = -(-numel // M) * M
+    x = jnp.pad(x, ((0, 0), (0, d_pad - numel)))
+    model = ctx.model_axis
+
+    def dequant(rows, mult):
+        if mult is None:
+            return rows
+        return rows.astype(jnp.float32) * mult[:, None]
+
+    if kind == "coordinate":
+        fn = _shard_map(
+            lambda xl: coordinate_fn(plan, dequant(xl, row_mult)), ctx,
+            (P(None, model),), P(model))
+        out = fn(x)
+        return out[:numel].reshape(leaf.shape[1:]).astype(out_dtype)
+
+    if kind not in ("mean", "weighted", "bulyan"):
+        raise ValueError(f"unknown plan kind {kind!r}")
+    W = ctx.worker_size
+    n_pad = -(-n // W) * W
+    x = _pad_rows(x, n_pad)
+    mult_pad = None if row_mult is None else \
+        jnp.pad(row_mult.astype(jnp.float32), (0, n_pad - n))
+    if kind == "weighted":
+        w = jnp.pad(plan.weights.astype(jnp.float32), (0, n_pad - n))
+    elif kind == "bulyan":
+        w_ext = jnp.pad(plan.w_ext, ((0, 0), (0, n_pad - n)))
+        w_agr = jnp.pad(plan.w_agr, ((0, 0), (0, n_pad - n)))
+
+    def local(xl):                                     # (n_loc, d_loc)
+        xfull = jax.lax.all_gather(xl, ctx.worker_axes, axis=0, tiled=True)
+        xfull = dequant(xfull, mult_pad)
+        if kind == "mean":
+            return jnp.sum(xfull, axis=0) / n
+        if kind == "weighted":
+            return jnp.tensordot(w, xfull, axes=(0, 0))
+        if use_pallas and fused:
+            from repro.kernels import ops as kops
+            return kops.fused_select(xfull, w_ext, w_agr, plan.beta)
+        g_ext = jnp.matmul(w_ext, xfull,
+                           precision=jax.lax.Precision.HIGHEST)
+        g_agr = jnp.matmul(w_agr, xfull,
+                           precision=jax.lax.Precision.HIGHEST)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            return kops.coord_select(g_ext, g_agr, plan.beta)
+        return G.bulyan_coordinate_phase(g_ext, g_agr, plan.beta)
+
+    fn = _shard_map(local, ctx, (P(lead, model),), P(model))
+    out = fn(x)
+    return out[:numel].reshape(leaf.shape[1:]).astype(out_dtype)
+
+
+def _sharded_apply_encoded(plan: "AggPlan", enc, ctx: MeshContext,
+                           coordinate_fn=None, *, use_pallas: bool = False,
+                           fused: bool = True) -> PyTree:
+    """Sharded apply straight off an ``EncodedGrads`` container.
+
+    Leaves whose codec admits the dequant form (int8/bf16 payload × one
+    fp32 multiplier per worker row — §9) shard the *payload* columns over
+    the model axis and dequantize per shard inside the shard_map, so the
+    replicated fp32 (n, d) stack never materializes.  Codecs without the
+    form (identity — already fp32; top-k — the index scatter is not
+    column-local) decode that leaf replicated first.
+    """
+    from repro.comm import codecs as CC
+    codec = CC.get_codec(enc.spec)
+    p_leaves, treedef = jax.tree.flatten(enc.payload)
+    s_leaves = jax.tree.leaves(enc.sidecar) \
+        if enc.sidecar is not None else [None] * len(p_leaves)
+    out = []
+    for p, s, shape in zip(p_leaves, s_leaves, enc.shapes):
+        form = codec.dequant_form(p, s)
+        if form is not None:
+            payload2d, mult = form
+            out.append(_sharded_apply_leaf(
+                plan, payload2d.reshape(shape), ctx, coordinate_fn,
+                use_pallas=use_pallas, fused=fused, row_mult=mult))
+        else:
+            g = codec.decode_leaf(_leaf2d(p), s, shape).reshape(shape)
+            out.append(_sharded_apply_leaf(
+                plan, g, ctx, coordinate_fn,
+                use_pallas=use_pallas, fused=fused))
+    return jax.tree.unflatten(treedef, out)
+
+
 # ==========================================================================
 # the Aggregator protocol + registry
 # ==========================================================================
@@ -392,7 +753,8 @@ class Aggregator:
         raise NotImplementedError
 
     def apply(self, plan: AggPlan, grads: PyTree, *, coord_chunk: int = 0,
-              use_pallas: bool = False, fused: bool = True) -> PyTree:
+              use_pallas: bool = False, fused: bool = True,
+              mesh_ctx: Optional[MeshContext] = None) -> PyTree:
         """Plan application — shared across rules, dispatched on plan.kind.
 
         With ``use_pallas`` the bulyan kind takes the fully fused kernel
@@ -403,11 +765,27 @@ class Aggregator:
         apply phase mixes values across workers, so it runs on the
         codec-decoded fp32 rows (callers that already hold the decoded
         stack should pass it directly to avoid a second decode).
+
+        With ``mesh_ctx`` every leaf's apply runs mesh-native: the d axis
+        shards over the model axis inside a shard_map — no device holds
+        more than (n, d/M) of the stack (DESIGN.md §10); wire containers
+        with a dequant-form codec shard the quantized payload and decode
+        per shard instead of decoding replicated.
         """
         enc = _as_encoded(grads)
         if enc is not None:
+            if mesh_ctx is not None:
+                return _sharded_apply_encoded(
+                    plan, enc, mesh_ctx, self._coordinate_leaf,
+                    use_pallas=use_pallas, fused=fused)
             from repro.comm import codecs as CC
             grads = CC.get_codec(enc.spec).decode(enc)
+        if mesh_ctx is not None:
+            fn = functools.partial(
+                _sharded_apply_leaf, plan, ctx=mesh_ctx,
+                coordinate_fn=self._coordinate_leaf,
+                use_pallas=use_pallas, fused=fused)
+            return jax.tree.map(lambda x: fn(x), grads)
         if plan.kind == "mean":
             return jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
         if plan.kind == "weighted":
@@ -429,12 +807,14 @@ class Aggregator:
     # --------------------------------------------------------- convenience
     def __call__(self, grads: PyTree, f: int, *,
                  dists: Optional[Array] = None, coord_chunk: int = 0,
-                 use_pallas: bool = False) -> PyTree:
+                 use_pallas: bool = False,
+                 mesh_ctx: Optional[MeshContext] = None) -> PyTree:
         stats = compute_stats(grads, f, needs_dists=self.needs_dists,
-                              use_pallas=use_pallas, dists=dists)
+                              use_pallas=use_pallas, dists=dists,
+                              mesh_ctx=mesh_ctx)
         self.validate(stats.n, stats.f)
         return self.apply(self.plan(stats), grads, coord_chunk=coord_chunk,
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas, mesh_ctx=mesh_ctx)
 
 
 REGISTRY: Dict[str, Aggregator] = {}
@@ -594,15 +974,16 @@ class MultiBulyan(_BulyanFamily):
 # ==========================================================================
 def aggregate_tree(grads: PyTree, f: int, name: str = "multi_bulyan", *,
                    coord_chunk: int = 0, use_pallas: bool = False,
-                   fused: bool = True,
-                   dists: Optional[Array] = None) -> PyTree:
+                   fused: bool = True, dists: Optional[Array] = None,
+                   mesh_ctx: Optional[MeshContext] = None) -> PyTree:
     """Aggregate a stacked gradient pytree with the named registered rule."""
     agg = get_aggregator(name)
     stats = compute_stats(grads, f, needs_dists=agg.needs_dists,
-                          use_pallas=use_pallas, dists=dists)
+                          use_pallas=use_pallas, dists=dists,
+                          mesh_ctx=mesh_ctx)
     agg.validate(stats.n, stats.f)
     return agg.apply(agg.plan(stats), grads, coord_chunk=coord_chunk,
-                     use_pallas=use_pallas, fused=fused)
+                     use_pallas=use_pallas, fused=fused, mesh_ctx=mesh_ctx)
 
 
 def aggregate_matrix(Gm: Array, f: int, name: str = "multi_bulyan", *,

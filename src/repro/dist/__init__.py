@@ -8,6 +8,8 @@
 * ``sharding``  — PartitionSpec heuristics for the production mesh.
 """
 from repro.dist.trainer import (  # noqa: F401
+    TrainerState,
+    as_trainer_state,
     init_train_state,
     inject_byzantine,
     make_train_step,

@@ -29,6 +29,7 @@ VMEM via ``fused_select`` — see DESIGN.md §7 for the fused-apply contract.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional, Sequence
 
 import jax
@@ -36,7 +37,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, RobustConfig
 from repro.core import api
-from repro.dist.trainer import (_resolve_codec, honest_dev_accumulate,
+from repro.dist.trainer import (_derive_mesh_ctx, _resolve_codec,
+                                as_trainer_state, honest_dev_accumulate,
                                 honest_dev_finalize, inject_byzantine,
                                 inject_wire)
 from repro import models as MD
@@ -66,7 +68,9 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                               codec: Optional[str] = None,
                               coord_chunk: int = 0, telemetry: bool = False,
                               transforms: Sequence[api.Transform] = (),
-                              boundary_spec=None, dx_spec=None):
+                              boundary_spec=None, dx_spec=None,
+                              shard_map_mesh=None, shard_map_axes=None,
+                              spmd: Optional[bool] = None):
     """Build the streaming-trainer step function (same signature as stacked).
 
     ``attack`` accepts the same spec strings as the stacked trainer
@@ -90,6 +94,15 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
     ``dx_spec`` (a PartitionSpec for the per-block stacked gradients) is
     accepted for the dry-run builder's mesh plumbing; it only matters when
     lowering on a production mesh.
+
+    ``shard_map_mesh``/``shard_map_axes``/``spmd`` mirror the stacked
+    trainer (DESIGN.md §10): pass-1 statistics accumulate each block's
+    row-block contributions inside a shard_map over the worker axes, and
+    the apply phase shards d over the model axis.  The step takes and
+    returns a :class:`~repro.dist.trainer.TrainerState` (only the ``opt``
+    slot is live — a state carrying transform/attack/residual extras is
+    rejected at trace time, since this trainer would silently never
+    update them); a bare ``OptState`` is coerced on entry.
     """
     if scope not in ("block", "global"):
         raise ValueError(f"scope must be 'block' or 'global', got {scope!r}")
@@ -118,12 +131,21 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
         raise NotImplementedError(
             "error-feedback codecs carry a per-worker residual; use the "
             "stacked trainer (dist.make_train_step) with codec")
+    mesh_ctx = _derive_mesh_ctx(shard_map_mesh, shard_map_axes, spmd)
 
     def worker_loss(p, wb):
         return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
                           boundary_spec=boundary_spec)
 
-    def step(params, opt_state, batch, key):
+    def step(params, state, batch, key):
+        state = as_trainer_state(state)
+        if state.tstates or state.astate is not None \
+                or state.cres is not None:
+            raise NotImplementedError(
+                "the streaming trainer carries only the opt slot; a "
+                "TrainerState with live tstates/astate/cres belongs to "
+                "the stacked trainer (dist.make_train_step)")
+        opt_state = state.opt
         block_keys = _block_keys(params)
 
         def block_grads(p, k, with_loss=False):
@@ -180,13 +202,18 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             for k in blocks:
                 enc, g = wire_block(block_grads(params, k), offsets[k])
                 if enc is not None:
-                    from repro.comm import codecs as CC
-                    total = total + CC.encoded_raw_contrib(
-                        enc, use_pallas=rcfg.use_pallas)
+                    total = total + api.raw_pairwise_stats(
+                        enc, use_pallas=rcfg.use_pallas, mesh_ctx=mesh_ctx)[0]
                     continue
+                # leaf-by-leaf into the running total: one flat left-to-
+                # right float accumulation across ALL blocks' leaves, the
+                # exact summation order of the stacked single pass —
+                # grouping per block would reassociate the (n, n) sums by
+                # up to ~last-ulp·leaves, enough to flip near-tied scores
                 for leaf in jax.tree.leaves(g):
-                    total = total + api.leaf_sqdist_contrib(
-                        leaf, use_pallas=rcfg.use_pallas)
+                    total = total + api.raw_pairwise_stats(
+                        leaf, use_pallas=rcfg.use_pallas,
+                        mesh_ctx=mesh_ctx)[0]
             stats = api.AggStats(n=rcfg.n_workers, f=rcfg.f,
                                  dists=api.finalize_dists(total))
             aggregator.validate(stats.n, stats.f)
@@ -227,7 +254,8 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             if block_plan is None or (telemetry and scope == "block"):
                 stats_k = api.compute_stats(
                     enc if enc is not None else g, rcfg.f,
-                    needs_dists=True, use_pallas=rcfg.use_pallas)
+                    needs_dists=True, use_pallas=rcfg.use_pallas,
+                    mesh_ctx=mesh_ctx)
                 if block_plan is None:  # scope == "block", distance rule
                     aggregator.validate(stats_k.n, stats_k.f)
                     block_plan = aggregator.plan(stats_k)
@@ -235,7 +263,7 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                     block_diags.append(block_plan.diagnostics(stats_k))
             agg_blocks[k] = aggregator.apply(
                 block_plan, g, coord_chunk=coord_chunk,
-                use_pallas=rcfg.use_pallas)
+                use_pallas=rcfg.use_pallas, mesh_ctx=mesh_ctx)
             if telemetry:
                 dev_sq, ref_sq = honest_dev_accumulate(
                     dev_sq, ref_sq, agg_blocks[k], g, f_eff)
@@ -271,6 +299,6 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                 diag["wire_bytes_per_worker"] = jnp.asarray(
                     wire_total / rcfg.n_workers, jnp.float32)
             metrics["telemetry"] = diag
-        return new_params, new_opt, metrics
+        return new_params, dataclasses.replace(state, opt=new_opt), metrics
 
     return step

@@ -13,14 +13,15 @@ One train step (DESIGN.md §3):
    coordinate phase);
 5. one optimizer update from the aggregated gradient.
 
-The returned step has signature ``(params, opt_state, batch, key) ->
-(params, opt_state, metrics)``; when a stateful transform is configured the
-state slot instead carries ``(opt_state, transform_states)``, and an
-adaptive attack adds its plan-feedback state as a third slot — seed either
-layout with :func:`init_train_state`.
+The returned step has signature ``(params, state, batch, key) ->
+(params, state, metrics)`` where ``state`` is the named
+:class:`TrainerState` pytree (optimizer + transform + adaptive-attack +
+error-feedback slots) — seed it with :func:`init_train_state`.  A bare
+``OptState`` is accepted for convenience and coerced on entry.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Optional, Sequence, Tuple
 
@@ -122,39 +123,47 @@ def inject_wire(enc, f: int, attack, key, *, leaf_offset: int = 0):
     return _dc.replace(enc, payload=payload, sidecar=sidecar)
 
 
-# ------------------------------------------------------------ state packing
-# Four layouts, chosen by flags both the packer and the step derive from
-# the same (transforms, attack, codec) configuration:
-#   plain                      -> opt_state
-#   stateful transforms        -> (opt_state, tstates)
-#   adaptive attack            -> (opt_state, tstates, attack_state)
-#   error-feedback codec       -> (opt_state, tstates, attack_state, cres)
-# split/merge are the ONLY readers/writers of this layout — external
-# drivers (repro.sim.engine) must go through them, never restructure the
-# tuple themselves.
-def split_train_state(state, stateful: bool, adaptive: bool = False,
-                      ef: bool = False):
-    """Unpack a trainer state into (opt_state, tstates, astate, cres)."""
-    if ef:
+# -------------------------------------------------------------- state
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("opt", "tstates", "astate", "cres"),
+    meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class TrainerState:
+    """The one trainer-state container — a named, registered jit pytree.
+
+    * ``opt``     — the optimizer's :class:`OptState` (always present);
+    * ``tstates`` — per-transform state tuple (``()`` without stateful
+      transforms; ``None`` entries for stateless ones);
+    * ``astate``  — adaptive-attack plan-feedback state (``None`` unless
+      the attack spec is adaptive);
+    * ``cres``    — error-feedback compression residual (``None`` unless
+      the codec spec has ``ef=1``).
+
+    Unused slots are ``None``/``()`` and flatten to zero leaves, so the
+    container costs nothing under jit and checkpoints by field *name*
+    (``state|opt|…``) — no consumer pattern-matches slot positions.  This
+    replaced the PR-3/PR-4-era positional layouts (bare ``OptState`` /
+    2- / 3- / 4-tuples); ``checkpoint.store.restore`` still reads those
+    via the legacy key aliases (tests/test_trainer_state.py).
+    """
+
+    opt: OptState
+    tstates: Tuple = ()
+    astate: Any = None
+    cres: Any = None
+
+
+def as_trainer_state(state) -> TrainerState:
+    """Coerce a bare :class:`OptState` (the pre-PR-5 plain layout) into a
+    :class:`TrainerState`; pass a TrainerState through unchanged."""
+    if isinstance(state, TrainerState):
         return state
-    if adaptive:
-        opt_state, tstates, astate = state
-        return opt_state, tstates, astate, None
-    if stateful:
-        opt_state, tstates = state
-        return opt_state, tstates, None, None
-    return state, (), None, None
-
-
-def merge_train_state(opt_state: OptState, tstates: Tuple, astate, cres,
-                      stateful: bool, adaptive: bool = False,
-                      ef: bool = False):
-    """Pack (opt_state, tstates, astate, cres) into the trainer layout."""
-    if ef:
-        return (opt_state, tstates, astate, cres)
-    if adaptive:
-        return (opt_state, tstates, astate)
-    return (opt_state, tstates) if stateful else opt_state
+    if isinstance(state, OptState):
+        return TrainerState(opt=state)
+    raise TypeError(
+        f"expected TrainerState (or a bare OptState), got {type(state)}; "
+        "seed trainer state with dist.init_train_state")
 
 
 def _resolve_codec(codec):
@@ -165,20 +174,40 @@ def _resolve_codec(codec):
     return CC.get_codec(codec)
 
 
+def _derive_mesh_ctx(shard_map_mesh, shard_map_axes, spmd
+                     ) -> Optional[api.MeshContext]:
+    """Resolve the (mesh, axes, spmd) trio both trainers accept.
+
+    ``spmd=None`` auto-enables the mesh-native path whenever a mesh is
+    given; ``shard_map_axes`` overrides the worker-axis derivation from
+    the mesh's axis names (the satellite fix: the parameter is honored,
+    not recorded-and-dropped).
+    """
+    if spmd is None:
+        spmd = shard_map_mesh is not None
+    if not spmd:
+        return None
+    if shard_map_mesh is None:
+        raise ValueError("spmd aggregation needs shard_map_mesh")
+    return api.MeshContext.for_mesh(
+        shard_map_mesh,
+        worker_axes=tuple(shard_map_axes) if shard_map_axes else None)
+
+
 def init_train_state(opt: Optimizer, params: PyTree,
                      transforms: Sequence[api.Transform] = (),
                      n_workers: int = 0, attack: str = "none",
-                     attack_f: int = 0, codec=None):
-    """Initial trainer state for :func:`make_train_step`.
+                     attack_f: int = 0, codec=None) -> TrainerState:
+    """Initial :class:`TrainerState` for :func:`make_train_step`.
 
-    Plain runs get a bare ``OptState``; stateful transforms (worker
-    momentum) add a per-worker state tuple mirroring the *stacked* gradient
-    shapes (hence ``n_workers``); an adaptive attack spec (``adaptive_lie``,
-    ``adaptive_mimic`` — ``core.attacks.ADAPTIVE``) adds the attack's
-    feedback state as a third slot, seeded for ``attack_f`` byzantine rows;
-    an error-feedback codec spec (``"topk:frac=0.01,ef=1"`` —
-    ``repro.comm.get_codec``) adds the per-worker compression residual as a
-    fourth slot.
+    Plain runs get only the ``opt`` slot populated; stateful transforms
+    (worker momentum) fill ``tstates`` with a per-worker state tuple
+    mirroring the *stacked* gradient shapes (hence ``n_workers``); an
+    adaptive attack spec (``adaptive_lie``, ``adaptive_mimic`` —
+    ``core.attacks.ADAPTIVE``) fills ``astate``, seeded for ``attack_f``
+    byzantine rows; an error-feedback codec spec
+    (``"topk:frac=0.01,ef=1"`` — ``repro.comm.get_codec``) fills ``cres``
+    with the per-worker compression residual.
     """
     opt_state = opt.init(params)
     stateful = any(t.stateful for t in transforms)
@@ -186,7 +215,7 @@ def init_train_state(opt: Optimizer, params: PyTree,
     codec_obj = _resolve_codec(codec)
     ef = codec_obj is not None and codec_obj.stateful
     if not stateful and not adaptive and not ef:
-        return opt_state
+        return TrainerState(opt=opt_state)
     if n_workers <= 0:
         raise ValueError("stateful transforms / adaptive attacks / "
                          "error-feedback codecs need n_workers > 0")
@@ -200,8 +229,8 @@ def init_train_state(opt: Optimizer, params: PyTree,
     if adaptive:
         astate = ATK.get_adaptive(attack).init_state(n_workers, attack_f)
     cres = codec_obj.init_residual(stacked) if ef else None
-    return merge_train_state(opt_state, tstates, astate, cres,
-                             stateful, adaptive, ef)
+    return TrainerState(opt=opt_state, tstates=tstates, astate=astate,
+                        cres=cres)
 
 
 # ------------------------------------------------------------------ trainer
@@ -244,7 +273,8 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                     coord_chunk: int = 0, telemetry: bool = False,
                     grad_specs: Optional[PyTree] = None,
                     boundary_spec=None,
-                    shard_map_mesh=None, shard_map_axes=None):
+                    shard_map_mesh=None, shard_map_axes=None,
+                    spmd: Optional[bool] = None):
     """Build the stacked-trainer step function (jit it yourself).
 
     ``attack`` is a spec string (``"little_is_enough:z=2.0"`` — see
@@ -275,19 +305,24 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     ``grad_specs``/``shard_map_mesh``: optional PartitionSpec pytree pinned
     onto the stacked gradients (the transposed grad-stack layout the
     production mesh wants); ``boundary_spec`` threads to the model's remat
-    boundaries.  ``shard_map_axes`` names the worker axes (dry-run plumbing).
+    boundaries.
+
+    ``shard_map_mesh`` + ``spmd`` (default: on whenever a mesh is given)
+    run the whole stats→plan→apply pipeline mesh-native (DESIGN.md §10):
+    statistics shard the worker axis inside a shard_map (each device
+    computes its row block of the (n, n) matrix), the apply phase shards
+    d over the model axis.  ``shard_map_axes`` names the worker axes of
+    that path explicitly (default: derived from the mesh's axis names —
+    ``("pod", "data")`` multi-pod, ``("data",)`` otherwise).
     """
-    del shard_map_axes  # recorded by the builder; worker axis comes from specs
     rcfg.validate()
     aggregator = api.get_aggregator(rcfg.gar)
     transforms = tuple(transforms)
-    stateful = any(t.stateful for t in transforms)
     f_eff = rcfg.f if attack_f is None else attack_f
     if not 0 <= f_eff <= rcfg.f:
         raise ValueError(
             f"attack_f must be in [0, f] (attack_f={f_eff}, f={rcfg.f})")
     codec_obj = _resolve_codec(codec)
-    ef = codec_obj is not None and codec_obj.stateful
     wire = isinstance(attack, str) and ATK.is_wire_attack(attack)
     if wire and codec_obj is None:
         raise ValueError(
@@ -298,14 +333,16 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     # telemetry wants the score spectrum even for distance-free rules
     # (average / median campaigns report why they would have been rejected)
     needs_dists = aggregator.needs_dists or telemetry
+    mesh_ctx = _derive_mesh_ctx(shard_map_mesh, shard_map_axes, spmd)
 
     def worker_loss(p, wb):
         return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
                           boundary_spec=boundary_spec)
 
     def step(params, state, batch, key):
-        opt_state, tstates, astate, cres = split_train_state(
-            state, stateful, adaptive is not None, ef)
+        state = as_trainer_state(state)
+        opt_state, tstates = state.opt, state.tstates
+        astate, cres = state.astate, state.cres
         losses, grads = jax.vmap(
             lambda wb: jax.value_and_grad(worker_loss)(params, wb))(batch)
         if adaptive is not None:
@@ -344,7 +381,8 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
         # under use_pallas) unless a transform rewrote the decoded stack
         stats_src = enc if (enc is not None and not transforms) else grads
         stats = api.compute_stats(stats_src, rcfg.f, needs_dists=needs_dists,
-                                  use_pallas=rcfg.use_pallas)
+                                  use_pallas=rcfg.use_pallas,
+                                  mesh_ctx=mesh_ctx)
         # guard against an out-of-band worker count: stats.n comes from the
         # actual batch split, which RobustConfig's construction-time check
         # never saw.  plan() implementations are not required to
@@ -352,7 +390,8 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
         aggregator.validate(stats.n, stats.f)
         plan = aggregator.plan(stats)
         agg = aggregator.apply(plan, grads, coord_chunk=coord_chunk,
-                               use_pallas=rcfg.use_pallas)
+                               use_pallas=rcfg.use_pallas,
+                               mesh_ctx=mesh_ctx)
         if adaptive is not None:
             astate = adaptive.update(astate, plan.selection_weights())
         lr = lr_fn(opt_state.step)
@@ -376,8 +415,8 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                     enc.bytes_per_worker, jnp.float32)
             metrics["telemetry"] = diag
         return (new_params,
-                merge_train_state(new_opt, tstates, astate, cres, stateful,
-                                  adaptive is not None, ef),
+                TrainerState(opt=new_opt, tstates=tstates, astate=astate,
+                             cres=cres),
                 metrics)
 
     return step

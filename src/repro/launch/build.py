@@ -126,7 +126,14 @@ def train_workload(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
                    gar: str = "multi_bulyan",
                    use_pallas: bool = False,
                    chunk_q: int = 1024,
-                   grad_constraints: bool = True) -> Workload:
+                   grad_constraints: bool = True,
+                   spmd: bool = False) -> Workload:
+    # spmd=True lowers the mesh-native stats→plan→apply pipeline
+    # (DESIGN.md §10).  Default off for the dry-run: the flatten/reshape
+    # seam around the sharded apply triggers involuntary GSPMD
+    # rematerializations against the committed tp grad layout (measured
+    # 79.8 GB vs 10.4 GB peak/device on qwen2-1.5b×256 chips) — the §10
+    # open item tracks aligning the leaf shard dim with the tp spec.
     assert shape.kind == "train"
     rcfg = rcfg or default_robust_config(mesh, gar, use_pallas)
     if fsdp is None:
@@ -168,21 +175,26 @@ def train_workload(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
     # stay replicated; activation memory is instead controlled by the
     # q-chunk/xent remat and the transposed grad-stack layout.
     bspec = None
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     if trainer == "stacked":
-        axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        # shard_map_axes names the mesh-native worker axes when the
+        # caller opts into spmd=True (off by default here — see the
+        # rematerialization note at the top of this function)
         fn = make_train_step(cfg, rcfg, opt, lr_fn, window=window,
                              chunk_q=chunk_q, grad_specs=gspecs,
                              boundary_spec=bspec,
-                             shard_map_mesh=mesh, shard_map_axes=axes)
+                             shard_map_mesh=mesh, shard_map_axes=axes,
+                             spmd=spmd)
     else:
         scope = "global" if trainer.endswith("global") else "block"
-        axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
         lead = axes if len(axes) > 1 else axes[0]
         d_ax = "model" if cfg.d_model % mesh.shape["model"] == 0 else None
         dx_spec = P(lead, None, None, d_ax)
         fn = make_streaming_train_step(cfg, rcfg, opt, lr_fn, scope=scope,
                                        window=window, chunk_q=chunk_q,
-                                       boundary_spec=bspec, dx_spec=dx_spec)
+                                       boundary_spec=bspec, dx_spec=dx_spec,
+                                       shard_map_mesh=mesh,
+                                       shard_map_axes=axes, spmd=spmd)
 
     key_spec = jax.eval_shape(lambda: jax.random.key(0))
     mu_shardings = _named(mesh, pspecs) if oshapes.mu is not None else None

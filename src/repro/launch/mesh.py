@@ -19,11 +19,20 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh() -> Mesh:
-    """Degenerate 1×1 mesh over the real local device (tests/examples)."""
+    """("data", "model") mesh over whatever host devices exist.
+
+    The device count is factored into the most-square (data, model) split
+    with data <= model — so the forced-8-device CPU mesh
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) becomes 2×4
+    and exercises *both* the worker-axis and the d-axis sharding of the
+    mesh-native aggregation path (DESIGN.md §10); a single real device
+    degenerates to 1×1.
+    """
     n = len(jax.devices())
-    if n >= 2:
-        return jax.make_mesh((1, n), ("data", "model"))
-    return jax.make_mesh((1, 1), ("data", "model"))
+    data = 1
+    while n % (data * 2) == 0 and data * 2 <= n // (data * 2):
+        data *= 2
+    return jax.make_mesh((data, n // data), ("data", "model"))
 
 
 def data_parallel_size(mesh: Mesh) -> int:

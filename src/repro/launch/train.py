@@ -48,18 +48,39 @@ def main(argv=None) -> int:
                          "payload_flip are wire-level attacks)")
     ap.add_argument("--trainer", default="stacked",
                     choices=("stacked", "stream_block", "stream_global"))
+    ap.add_argument("--mesh", default="none",
+                    choices=("none", "host", "production"),
+                    help="run aggregation mesh-native (DESIGN.md §10): "
+                         "'host' factors the local devices into a "
+                         "(data, model) mesh (use XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 to "
+                         "exercise real sharding on CPU), 'production' "
+                         "builds the 256-chip pod mesh")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke preset: --reduced, 3 steps, log every "
+                         "step")
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.reduced = True
+        args.steps = min(args.steps, 3)
+        args.log_every = 1
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     if cfg.is_encdec and args.trainer != "stacked":
         raise SystemExit("enc-dec supports only the stacked trainer")
+
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_host_mesh, make_production_mesh
+        mesh = make_host_mesh() if args.mesh == "host" \
+            else make_production_mesh()
 
     rcfg = RobustConfig(n_workers=args.workers, f=args.f, gar=args.gar,
                         use_pallas=args.use_pallas)
@@ -70,6 +91,11 @@ def main(argv=None) -> int:
           f"f={args.f} gar={args.gar} attack={args.attack} "
           f"codec={args.codec} trainer={args.trainer} "
           f"pallas={args.use_pallas}")
+    if mesh is not None:
+        print(f"[train] mesh={args.mesh} shape={dict(mesh.shape)} "
+              f"(worker axis sharded over "
+              f"{'pod×data' if 'pod' in mesh.axis_names else 'data'}, "
+              f"d over model)")
     if args.codec:
         from repro.comm import wire_stats
         ws = wire_stats(args.codec, params, n=args.workers)
@@ -90,13 +116,15 @@ def main(argv=None) -> int:
     chunk_q = min(args.seq, 512)
     if args.trainer == "stacked":
         step_fn = make_train_step(cfg, rcfg, opt, lr_fn, chunk_q=chunk_q,
-                                  attack=args.attack, codec=args.codec)
+                                  attack=args.attack, codec=args.codec,
+                                  shard_map_mesh=mesh)
     else:
         scope = "global" if args.trainer.endswith("global") else "block"
         step_fn = make_streaming_train_step(cfg, rcfg, opt, lr_fn,
                                             scope=scope, chunk_q=chunk_q,
                                             attack=args.attack,
-                                            codec=args.codec)
+                                            codec=args.codec,
+                                            shard_map_mesh=mesh)
     step_fn = jax.jit(step_fn)
 
     global_batch = args.workers * args.per_worker_batch

@@ -31,13 +31,19 @@ from repro.core import attacks as ATK
 from repro.data import dirichlet_mixture, make_lm_batch, make_noniid_lm_batch
 from repro.dist import init_train_state, make_train_step, split_workers
 from repro.dist.streaming import make_streaming_train_step
-from repro.dist.trainer import merge_train_state, split_train_state
+from repro.dist.trainer import TrainerState
 from repro import models as MD
 from repro.optim import sgd, warmup_cosine
 from repro.sim import telemetry as TEL
 from repro.sim.scenario import AttackPhase, Scenario
 
 PyTree = Any
+
+# PR-3/PR-4-era checkpoints stored the trainer-state components as
+# top-level keys; the TrainerState unification nests them under "state".
+# restore() consults these only when the canonical key is absent.
+LEGACY_STATE_ALIASES = {"state|opt": "opt", "state|tstates": "tstates",
+                        "state|cres": "cres"}
 
 
 @dataclasses.dataclass
@@ -108,26 +114,22 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
     rcfg = RobustConfig(n_workers=scenario.n_workers, f=scenario.f,
                         gar=scenario.gar, use_pallas=scenario.use_pallas)
     transforms = scenario.build_transforms()
-    stateful = any(t.stateful for t in transforms)
     total_steps = scenario.schedule.total_steps
 
     key = jax.random.key(scenario.seed)
     params = MD.init_model(key, cfg)
     opt = sgd(momentum=scenario.momentum)
     wire = None
-    ef = False
     if scenario.codec is not None:
-        from repro.comm import get_codec, wire_stats
-        ef = get_codec(scenario.codec).stateful
+        from repro.comm import wire_stats
         wire = wire_stats(scenario.codec, params,
                           n=scenario.n_workers).to_json()
     # attack state is per-phase (seeded at each phase entry below), so the
-    # initial state is built attack-free and split into its components;
-    # the error-feedback residual (like transform states) is cross-phase
-    opt_state, tstates, _, cres = split_train_state(
-        init_train_state(opt, params, transforms,
-                         n_workers=scenario.n_workers,
-                         codec=scenario.codec), stateful, ef=ef)
+    # cross-phase TrainerState carries astate=None between phases; the
+    # error-feedback residual (like transform states) is cross-phase
+    tstate: TrainerState = init_train_state(
+        opt, params, transforms, n_workers=scenario.n_workers,
+        codec=scenario.codec)
     susp = TEL.init_suspicion(scenario.n_workers)
     lr_fn = warmup_cosine(scenario.lr, warmup=max(total_steps // 20, 1),
                           total_steps=total_steps)
@@ -147,14 +149,11 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
                 f"checkpoint step {latest} is not a phase boundary of "
                 f"schedule {scenario.schedule.describe()!r}")
         if latest is not None:
-            like = {"params": params, "opt": opt_state,
-                    "tstates": tstates, "susp": susp}
-            if ef:
-                like["cres"] = cres
-            loaded = restore(ckpt_dir, latest, like)
-            params, opt_state = loaded["params"], loaded["opt"]
-            tstates, susp = loaded["tstates"], loaded["susp"]
-            cres = loaded.get("cres", cres)
+            like = {"params": params, "state": tstate, "susp": susp}
+            loaded = restore(ckpt_dir, latest, like,
+                             key_aliases=LEGACY_STATE_ALIASES)
+            params, tstate = loaded["params"], loaded["state"]
+            susp = loaded["susp"]
             start_step = latest
             if verbose:
                 print(f"[sim] resumed {scenario.name} at step {latest}")
@@ -184,11 +183,9 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
         if adaptive:
             astate = ATK.get_adaptive(phase.attack).init_state(
                 scenario.n_workers, f_eff)
-        if scenario.trainer == "stacked":
-            state = merge_train_state(opt_state, tstates, astate, cres,
-                                      stateful, adaptive, ef)
-        else:
-            state = opt_state  # streaming carries the bare OptState
+        # both trainers speak TrainerState; the adaptive-attack slot is
+        # phase-local, everything else carries across phases
+        state = dataclasses.replace(tstate, astate=astate)
 
         def body(carry, xs, _step=step_fn, _pi=phase_idx):
             p, st, sp = carry
@@ -204,11 +201,7 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
         (params, state, susp), rec = jax.jit(
             lambda c, xs: jax.lax.scan(body, c, xs))(
                 (params, state, susp), (batches, keys))
-        if scenario.trainer == "stacked":
-            opt_state, tstates, _, cres = split_train_state(state, stateful,
-                                                            adaptive, ef)
-        else:
-            opt_state = state
+        tstate = dataclasses.replace(state, astate=None)
         phase_traces.append(jax.device_get(rec))
         if verbose:
             tr = phase_traces[-1]
@@ -218,11 +211,8 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
                   f"honest_dev {np.mean(tr['honest_dev']):.3f} "
                   f"byz_mass {np.mean(tr['byz_mass']):.3f}", flush=True)
         if ckpt_dir:
-            payload = {"params": params, "opt": opt_state,
-                       "tstates": tstates, "susp": susp}
-            if ef:
-                payload["cres"] = cres
-            save(ckpt_dir, stop, payload)
+            save(ckpt_dir, stop,
+                 {"params": params, "state": tstate, "susp": susp})
 
     trace = TEL.concat_traces(phase_traces)
     summary = TEL.summarize(trace, scenario, start_step, wire=wire) \

@@ -1,8 +1,14 @@
 import os
 
 # Tests must see the single real CPU device (the 512-device override is
-# strictly dryrun.py-local).
-assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+# strictly dryrun.py-local) — unless the SPMD equivalence job opts in:
+# CI's spmd-host-mesh job sets REPRO_FORCED_DEVICES=1 together with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 so the sharded-vs-
+# single-device tests (tests/test_spmd.py) exercise real worker/model
+# sharding on CPU (DESIGN.md §10).
+if os.environ.get("REPRO_FORCED_DEVICES") != "1":
+    assert "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", "")
 
 import jax  # noqa: E402
 

@@ -209,8 +209,8 @@ def test_stateful_transform_through_train_step():
         b = split_workers(next(it), 11)
         params, state, m = step(params, state, b, jax.random.fold_in(KEY, i))
         losses.append(float(m["loss"]))
-    opt_state, tstates = state
-    assert len(tstates) == 1
+    assert len(state.tstates) == 1
     # momentum state is live (nonzero) and training stays finite
-    assert any(float(jnp.max(jnp.abs(x))) > 0 for x in jax.tree.leaves(tstates[0]))
+    assert any(float(jnp.max(jnp.abs(x))) > 0
+               for x in jax.tree.leaves(state.tstates[0]))
     assert np.isfinite(losses[-1])

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, RobustConfig, get_config
 from repro import models as MD
-from repro.dist import make_train_step, split_workers
+from repro.dist import init_train_state, make_train_step, split_workers
 from repro.data import lm_batches
 from repro.optim import sgd, constant
 
@@ -64,14 +64,14 @@ def test_one_robust_train_step(name):
     rcfg = RobustConfig(n_workers=n, f=f, gar="multi_bulyan")
     params = MD.init_model(KEY, cfg)
     opt = sgd(momentum=0.9)
-    state = opt.init(params)
+    state = init_train_state(opt, params)
     step = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.01), chunk_q=16))
     batch = _batch_for(cfg, "train", n * BATCH, SEQ)
     wb = split_workers(batch, n)
     new_params, new_state, metrics = step(params, state, wb, KEY)
     assert bool(jnp.isfinite(metrics["loss"]))
     assert metrics["loss_per_worker"].shape == (n,)
-    assert int(new_state.step) == 1
+    assert int(new_state.opt.step) == 1
     # params actually moved
     moved = any(
         float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0

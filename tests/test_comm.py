@@ -337,8 +337,10 @@ def test_stacked_vs_streaming_bit_parity_under_codec(codec, attack):
     stream = jax.jit(make_streaming_train_step(
         cfg, rcfg, opt, constant(0.05), scope="global", chunk_q=16,
         attack=attack, codec=codec, telemetry=True))
-    ps, _, ms = stacked(params, opt.init(params), batch, KEY)
-    pg, _, mg = stream(params, opt.init(params), batch, KEY)
+    from repro.dist import init_train_state
+    state = init_train_state(opt, params)
+    ps, _, ms = stacked(params, state, batch, KEY)
+    pg, _, mg = stream(params, state, batch, KEY)
     for a, b in zip(jax.tree.leaves(ps), jax.tree.leaves(pg)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(
@@ -349,12 +351,11 @@ def test_stacked_vs_streaming_bit_parity_under_codec(codec, attack):
 
 
 def test_error_feedback_state_threads_through_trainer():
-    """An ef=1 codec adds the residual as the fourth state slot; the
-    residual becomes nonzero after one lossy step."""
+    """An ef=1 codec fills the TrainerState ``cres`` slot; the residual
+    becomes nonzero after one lossy step."""
     from repro.configs.base import RobustConfig
     from repro.data import make_lm_batch
     from repro.dist import init_train_state, make_train_step, split_workers
-    from repro.dist.trainer import split_train_state
     from repro import models as MD
     from repro.optim import sgd, constant
     cfg = _small_arch()
@@ -363,17 +364,16 @@ def test_error_feedback_state_threads_through_trainer():
     opt = sgd(momentum=0.9)
     codec = "topk:frac=0.05,ef=1"
     state = init_train_state(opt, params, n_workers=n, codec=codec)
-    _, _, _, cres = split_train_state(state, False, False, True)
+    assert state.cres is not None
     assert all(float(jnp.max(jnp.abs(x))) == 0.0
-               for x in jax.tree.leaves(cres))
+               for x in jax.tree.leaves(state.cres))
     rcfg = RobustConfig(n_workers=n, f=2, gar="multi_bulyan")
     step = jax.jit(make_train_step(cfg, rcfg, opt, constant(0.05),
                                    chunk_q=16, codec=codec))
     batch = split_workers(make_lm_batch(KEY, 128, n * 2, 16, seed=7), n)
     _, state2, _ = step(params, state, batch, KEY)
-    _, _, _, cres2 = split_train_state(state2, False, False, True)
     assert any(float(jnp.max(jnp.abs(x))) > 0.0
-               for x in jax.tree.leaves(cres2))
+               for x in jax.tree.leaves(state2.cres))
 
 
 def test_streaming_rejects_error_feedback_codec():

@@ -1,0 +1,103 @@
+"""Unit coverage for dist/sharding.py and launch/mesh.py heuristics —
+previously the only untested ``dist`` module (PR-5 satellite)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (_worker_axes, batch_specs,
+                                 grad_stack_specs, sanitize_spec)
+from repro.launch.mesh import data_parallel_size, make_host_mesh
+
+
+class FakeMesh:
+    """Shape-only stand-in (sanitize_spec/_worker_axes read ``.shape``)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+# --------------------------------------------------------- sanitize_spec
+def test_sanitize_spec_drops_non_dividing_dims():
+    mesh = FakeMesh(data=16, model=16)
+    # 51865 % 16 != 0 -> the model entry drops to replicated
+    assert tuple(sanitize_spec(P(None, "model"), (384, 51865), mesh)) == \
+        (None, None)
+    assert tuple(sanitize_spec(P(None, "model"), (384, 51872), mesh)) == \
+        (None, "model")
+
+
+def test_sanitize_spec_tuple_entries_use_axis_product():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    # ("pod", "data") needs divisibility by 32
+    ok = sanitize_spec(P(("pod", "data"), None), (64, 7), mesh)
+    assert tuple(ok) == (("pod", "data"), None)
+    bad = sanitize_spec(P(("pod", "data"), None), (48, 7), mesh)
+    assert tuple(bad) == (None, None)
+
+
+def test_sanitize_spec_rank_overflow_drops():
+    """A spec entry past the shape's rank cannot divide anything."""
+    mesh = FakeMesh(data=2, model=2)
+    s = sanitize_spec(P(None, "model"), (4,), mesh)
+    assert tuple(s) == (None, None)
+
+
+def test_sanitize_spec_preserves_none_entries():
+    mesh = FakeMesh(data=4, model=4)
+    s = sanitize_spec(P(None, None, "model"), (3, 5, 8), mesh)
+    assert tuple(s) == (None, None, "model")
+
+
+# ----------------------------------------------------------- worker axes
+def test_worker_axes_pod_vs_single_pod():
+    assert _worker_axes(FakeMesh(pod=2, data=16, model=16)) == \
+        ("pod", "data")
+    assert _worker_axes(FakeMesh(data=16, model=16)) == "data"
+    assert _worker_axes(None) == "data"
+
+
+def test_data_parallel_size_multiplies_pod():
+    assert data_parallel_size(FakeMesh(data=16, model=16)) == 16
+    assert data_parallel_size(FakeMesh(pod=2, data=16, model=16)) == 32
+
+
+def test_make_host_mesh_factors_devices():
+    mesh = make_host_mesh()
+    sizes = dict(mesh.shape)
+    assert set(mesh.axis_names) == {"data", "model"}
+    assert sizes["data"] * sizes["model"] == len(jax.devices())
+    assert sizes["data"] <= sizes["model"]
+
+
+# ------------------------------------------------------------ spec trees
+@pytest.fixture
+def host_mesh():
+    return make_host_mesh()
+
+
+def test_batch_specs_lead_axis(host_mesh):
+    import jax.numpy as jnp
+    n = dict(host_mesh.shape)["data"]
+    batch = {"tokens": jnp.zeros((4 * n, 16), jnp.int32)}
+    specs = batch_specs(batch, host_mesh)
+    spec = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert tuple(spec)[0] in ("data", ("data",), None)
+    # a leading axis the mesh cannot divide stays replicated
+    odd = {"tokens": jnp.zeros((3, 16), jnp.int32)}
+    if n > 3:
+        spec = jax.tree.leaves(batch_specs(odd, host_mesh),
+                               is_leaf=lambda x: isinstance(x, P))[0]
+        assert tuple(spec)[0] is None
+
+
+def test_grad_stack_specs_shift_param_spec_right(host_mesh):
+    import jax.numpy as jnp
+    msize = dict(host_mesh.shape)["model"]
+    params = {"w": jnp.zeros((8 * msize, 4 * msize), jnp.float32)}
+    specs = grad_stack_specs(params, host_mesh)
+    spec = tuple(jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, P))[0])
+    # (n, *param): dim 0 is the worker axis, the tp entry moved right
+    assert len(spec) == 3
+    assert "model" not in (spec[0],)

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, RobustConfig
 from repro.core import attacks
 from repro.data import lm_batches
-from repro.dist import make_train_step, split_workers
+from repro.dist import init_train_state, make_train_step, split_workers
 from repro.dist.sharding import param_specs, sanitize_spec
 from repro import models as MD
 from repro.optim import sgd, constant
@@ -26,7 +26,7 @@ def _train(gar, attack, steps=16, n=11, f=2):
     rcfg = RobustConfig(n_workers=n, f=f, gar=gar)
     params = MD.init_model(KEY, CFG)
     opt = sgd(momentum=0.9)
-    state = opt.init(params)
+    state = init_train_state(opt, params)
     step = jax.jit(make_train_step(CFG, rcfg, opt, constant(0.05),
                                    chunk_q=16, attack=attack))
     it = lm_batches(CFG.vocab_size, n * 2, 16, seed=11)

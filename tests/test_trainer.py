@@ -6,7 +6,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MoEConfig, RobustConfig, SSMConfig, HybridConfig
 from repro.data import lm_batches
-from repro.dist import inject_byzantine, make_train_step, split_workers
+from repro.dist import (init_train_state, inject_byzantine,
+                        make_train_step, split_workers)
 from repro.dist.streaming import make_streaming_train_step
 from repro import models as MD
 from repro.optim import sgd, constant
@@ -28,7 +29,7 @@ def _run(cfg, gar, attack, steps=14, lr=0.05, trainer="stacked", scope="block"):
     rcfg = RobustConfig(n_workers=N, f=F, gar=gar)
     params = MD.init_model(KEY, cfg)
     opt = sgd(momentum=0.9)
-    state = opt.init(params)
+    state = init_train_state(opt, params)
     if trainer == "stacked":
         fn = make_train_step(cfg, rcfg, opt, constant(lr), chunk_q=16,
                              attack=attack)
@@ -69,7 +70,7 @@ def test_streaming_global_exact_vs_stacked():
     rcfg = RobustConfig(n_workers=N, f=F, gar="multi_bulyan")
     params = MD.init_model(KEY, HYB)
     opt = sgd(momentum=0.9)
-    state = opt.init(params)
+    state = init_train_state(opt, params)
     b = split_workers(next(lm_batches(HYB.vocab_size, N * 2, 16)), N)
     p1, _, _ = jax.jit(make_train_step(
         HYB, rcfg, opt, constant(0.05), chunk_q=16))(params, state, b, KEY)
@@ -123,7 +124,7 @@ def test_stacked_trainer_validates_out_of_band_n():
         rcfg = RobustConfig(n_workers=N, f=F, gar="_test_no_self_check")
         params = MD.init_model(KEY, DENSE)
         opt = sgd(momentum=0.0)
-        state = opt.init(params)
+        state = init_train_state(opt, params)
         step = jax.jit(make_train_step(DENSE, rcfg, opt, constant(0.01),
                                        chunk_q=16))
         n_oob = 2 * F + 2                      # < min_n, bypasses RobustConfig
@@ -172,7 +173,7 @@ def test_per_worker_losses_reported():
     rcfg = RobustConfig(n_workers=N, f=F, gar="median")
     params = MD.init_model(KEY, DENSE)
     opt = sgd(momentum=0.0)
-    state = opt.init(params)
+    state = init_train_state(opt, params)
     step = jax.jit(make_train_step(DENSE, rcfg, opt, constant(0.01), chunk_q=16))
     b = split_workers(next(lm_batches(DENSE.vocab_size, N * 2, 16)), N)
     _, _, m = step(params, state, b, KEY)

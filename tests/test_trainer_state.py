@@ -1,0 +1,133 @@
+"""The unified TrainerState pytree: round-trips, checkpoint migration,
+slot-presence contracts (PR-5 satellite)."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore, save
+from repro.dist import TrainerState, as_trainer_state, init_train_state
+from repro.optim import sgd
+from repro.sim.engine import LEGACY_STATE_ALIASES
+
+KEY = jax.random.key(0)
+PARAMS = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+          "b": jnp.ones((3,), jnp.bfloat16)}
+
+
+def _state(**kw):
+    return init_train_state(sgd(momentum=0.9), PARAMS, **kw)
+
+
+# ------------------------------------------------------------ round trip
+def test_flatten_unflatten_round_trip():
+    st = _state()
+    leaves, treedef = jax.tree.flatten(st)
+    back = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(back, TrainerState)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_empty_slots_flatten_to_zero_leaves():
+    plain = _state()
+    assert plain.tstates == () and plain.astate is None \
+        and plain.cres is None
+    # exactly the OptState leaves — the container itself costs nothing
+    assert len(jax.tree.leaves(plain)) == len(jax.tree.leaves(plain.opt))
+
+
+def test_coercion_accepts_bare_opt_state():
+    opt = sgd(momentum=0.9)
+    st = as_trainer_state(opt.init(PARAMS))
+    assert isinstance(st, TrainerState)
+    assert as_trainer_state(st) is st
+    with pytest.raises(TypeError, match="TrainerState"):
+        as_trainer_state({"opt": 1})
+
+
+# --------------------------------------------------------- slot contracts
+def test_ef_residual_slot_present_iff_codec_has_ef():
+    assert _state().cres is None
+    assert _state(n_workers=11, codec="bf16").cres is None
+    assert _state(n_workers=11, codec="qsgd:bits=8").cres is None
+    st = _state(n_workers=11, codec="topk:frac=0.1,ef=1")
+    assert st.cres is not None
+    for leaf, p in zip(jax.tree.leaves(st.cres), jax.tree.leaves(PARAMS)):
+        assert leaf.shape == (11,) + p.shape
+
+
+def test_adaptive_attack_fills_astate():
+    st = _state(n_workers=11, attack="adaptive_lie", attack_f=2)
+    assert st.astate is not None
+    assert _state().astate is None
+
+
+def test_stateful_transform_fills_tstates():
+    from repro.core.api import WorkerMomentum
+    st = _state(transforms=(WorkerMomentum(),), n_workers=11)
+    assert len(st.tstates) == 1 and st.tstates[0] is not None
+
+
+# ------------------------------------------------------------ checkpoints
+def test_checkpoint_round_trip_current_layout(tmp_path):
+    st = _state(n_workers=7, codec="topk:frac=0.1,ef=1")
+    save(str(tmp_path), 5, {"params": PARAMS, "state": st})
+    loaded = restore(str(tmp_path), 5, {"params": PARAMS, "state": st})
+    assert isinstance(loaded["state"], TrainerState)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(loaded["state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_migration_from_pr3_era_layout(tmp_path):
+    """A PR-3/PR-4-era checkpoint stored the state components as top-level
+    keys (opt / tstates / cres); the legacy aliases restore it into the
+    TrainerState layout bit-for-bit."""
+    st = _state(n_workers=7, codec="topk:frac=0.1,ef=1")
+    # write the old layout exactly as the old engine did
+    save(str(tmp_path), 9, {"params": PARAMS, "opt": st.opt,
+                            "tstates": st.tstates, "cres": st.cres})
+    like = {"params": PARAMS, "state": st}
+    with pytest.raises(KeyError, match="missing key"):
+        restore(str(tmp_path), 9, like)
+    loaded = restore(str(tmp_path), 9, like,
+                     key_aliases=LEGACY_STATE_ALIASES)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(loaded["state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(loaded["params"]["w"]),
+                                  np.asarray(PARAMS["w"]))
+
+
+def test_alias_never_shadows_canonical_key(tmp_path):
+    """When both layouts exist, the canonical key wins."""
+    st = _state()
+    stale = jax.tree.map(lambda x: x * 0 - 1.0, st)
+    save(str(tmp_path), 3, {"state": st, "opt": stale.opt})
+    loaded = restore(str(tmp_path), 3, {"state": st},
+                     key_aliases=LEGACY_STATE_ALIASES)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(loaded["state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- engine integration
+def test_engine_resume_reads_pr5_checkpoint(tmp_path):
+    """Phase-boundary checkpoint/resume through the engine keeps working
+    on the TrainerState layout (bit-exact tail replay is asserted by
+    tests/test_sim.py; here: the layout round-trips through run_campaign)."""
+    from repro.sim import run_campaign
+    from repro.sim.scenario import AttackPhase, AttackSchedule, Scenario
+    from repro.configs.base import ArchConfig
+
+    cfg = ArchConfig(name="ts-t", family="dense", n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64)
+    sched = AttackSchedule(phases=(AttackPhase(steps=2, attack="none"),
+                                   AttackPhase(steps=2, attack="sign_flip")))
+    sc = Scenario(name="ts", arch=cfg, n_workers=7, f=1, gar="multi_bulyan",
+                  schedule=sched, per_worker_batch=1, seq=8)
+    ckpt = os.path.join(str(tmp_path), "ck")
+    full = run_campaign(sc, ckpt_dir=ckpt)
+    resumed = run_campaign(sc, ckpt_dir=ckpt, resume=True)
+    assert resumed.start_step == sched.total_steps
+    assert full.trace["loss"].shape[0] == sched.total_steps
