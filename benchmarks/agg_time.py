@@ -47,7 +47,9 @@ RULES = ("median", "multi_krum", "multi_bulyan")
 PATHS = (
     ("multi_bulyan[xla]", dict(use_pallas=False, fused=False)),
     ("multi_bulyan[pallas]", dict(use_pallas=True, fused=False)),
-    ("multi_bulyan[fused]", dict(use_pallas=True, fused=True)),
+    # "force" pins the fused kernel past the measured crossover — these
+    # rows ARE the crossover measurement kernels.dispatch reads
+    ("multi_bulyan[fused]", dict(use_pallas=True, fused="force")),
     ("multi_bulyan[sharded]", dict(sharded=True)),
 )
 PATH_NS = (15,)

@@ -13,6 +13,9 @@ per section).  Sections:
                 mass); persists BENCH_resilience.json
 * bandwidth   — wire bytes/step + round time per codec × (n, d) through
                 repro.comm; persists BENCH_comm.json
+* hier        — hierarchical vs flat aggregation at large n (repro.hier):
+                O(n·g) grouped selection where the flat O(n²) path is
+                infeasible; persists BENCH_hier.json
 * roofline    — §Roofline terms from the dry-run artifacts (if present)
 
 Env: BENCH_SECTIONS=agg_time,accuracy,... to select a subset (unknown
@@ -32,7 +35,7 @@ import time
 from typing import List
 
 KNOWN_SECTIONS = ("agg_time", "accuracy", "resilience", "bandwidth",
-                  "roofline")
+                  "hier", "roofline")
 
 
 def main() -> None:
@@ -51,10 +54,13 @@ def main() -> None:
                     help="bandwidth sweep JSON output path")
     ap.add_argument("--accuracy-json", default="BENCH_accuracy.json",
                     help="accuracy JSON output path")
+    ap.add_argument("--hier-json", default="BENCH_hier.json",
+                    help="hierarchical scaling JSON output path")
     args = ap.parse_args()
 
-    default_sections = "agg_time,accuracy,resilience,bandwidth" \
-        if args.smoke else "agg_time,accuracy,resilience,bandwidth,roofline"
+    default_sections = "agg_time,accuracy,resilience,bandwidth,hier" \
+        if args.smoke else \
+        "agg_time,accuracy,resilience,bandwidth,hier,roofline"
     sections = os.environ.get("BENCH_SECTIONS", default_sections).split(",")
     unknown = [s for s in sections if s not in KNOWN_SECTIONS]
     if unknown:
@@ -82,6 +88,10 @@ def main() -> None:
         from benchmarks import bandwidth
         bandwidth.run(rows, smoke=args.smoke, json_path=args.comm_json)
         print(f"# bandwidth done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if "hier" in sections:
+        from benchmarks import hier_scale
+        hier_scale.run(rows, smoke=args.smoke, json_path=args.hier_json)
+        print(f"# hier done ({time.time()-t0:.0f}s)", file=sys.stderr)
     if "roofline" in sections:
         from benchmarks import roofline
         derived = roofline.run(rows)

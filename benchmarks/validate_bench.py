@@ -16,7 +16,12 @@ the payload's ``schema`` field:
   the acceptance ordering wire_bytes fp32 > bf16 > qsgd int8 *strict* on
   every (n, d) point the three rows share;
 * accuracy (``accuracy.v1``) — rule × per-worker-batch cells from
-  ``benchmarks/accuracy.py``, accuracies in [0, 1].
+  ``benchmarks/accuracy.py``, accuracies in [0, 1];
+* hier (``hier.v1``) — hierarchical vs flat scaling cells from
+  ``benchmarks/hier_scale.py``: wherever n ≥ 1024 the flat path must be
+  skipped-as-infeasible or ≥ 5× slower than the grouped path, and the
+  grouped column must grow subquadratically in n (the O(n·g) vs O(n²)
+  ordering gate).
 
 Fails (exit 1) when a file is missing, is not JSON, or deviates from its
 schema.
@@ -43,6 +48,13 @@ COMM_FIELDS = ("wire_bytes", "bytes_per_worker", "us_per_call",
 COMM_ORDER = ("fp32", "bf16", "qsgd:bits=8")   # strictly decreasing bytes
 ACCURACY_SCHEMA = "accuracy.v1"
 ACCURACY_FIELDS = ("acc_mean", "acc_std")
+HIER_SCHEMA = "hier.v1"
+HIER_FIELDS = ("us_per_call", "n_groups", "f_inner", "f_outer",
+               "bytes_per_level")
+HIER_ROWS = ("multi_bulyan[hier]", "multi_bulyan[flat]")
+HIER_FLAT_FACTOR = 5.0          # flat must be >= this × hier at n >= 1024
+HIER_BIG_N = 1024
+_HIER_KEY_RE = re.compile(r"^n=(\d+),g=(\d+),d=(\d+)$")
 
 
 def _fail(msg: str) -> "list[str]":
@@ -174,6 +186,84 @@ def _check_accuracy(path: str, results: dict) -> "list[str]":
     return problems
 
 
+def _check_hier(path: str, results: dict) -> "list[str]":
+    problems = []
+    for row in HIER_ROWS:
+        if row not in results:
+            problems.append(f"missing required hier row {row!r}")
+    cells: dict = {}            # (row, n, g, d) -> cell
+    for row, grid in results.items():
+        if not isinstance(grid, dict) or not grid:
+            problems.append(f"row {row!r}: empty or non-object grid")
+            continue
+        for key, cell in grid.items():
+            m = _HIER_KEY_RE.match(key)
+            if not m:
+                problems.append(f"row {row!r}: bad grid key {key!r} "
+                                "(want 'n=<n>,g=<g>,d=<d>')")
+                continue
+            if not isinstance(cell, dict):
+                problems.append(f"{row}/{key}: cell must be an object")
+                continue
+            cells[(row,) + tuple(int(x) for x in m.groups())] = cell
+            if "skipped" in cell:
+                if not isinstance(cell["skipped"], str) or not cell["skipped"]:
+                    problems.append(f"{row}/{key}: 'skipped' must carry a "
+                                    "non-empty reason string")
+                continue
+            missing = [f for f in HIER_FIELDS if f not in cell]
+            if missing:
+                problems.append(f"{row}/{key}: missing {missing}")
+            us = cell.get("us_per_call")
+            if not isinstance(us, (int, float)) or not math.isfinite(us) \
+                    or us <= 0:
+                problems.append(f"{row}/{key}: us_per_call must be a "
+                                f"positive finite number, got {us!r}")
+            bpl = cell.get("bytes_per_level")
+            if not (isinstance(bpl, list) and bpl
+                    and all(isinstance(b, int) and b > 0 for b in bpl)):
+                problems.append(f"{row}/{key}: bytes_per_level must be a "
+                                f"non-empty list of positive ints, got {bpl!r}")
+    hier = {(n, g, d): c for (row, n, g, d), c in cells.items()
+            if row == "multi_bulyan[hier]" and "us_per_call" in c}
+    flat = {(n, d): c for (row, n, g, d), c in cells.items()
+            if row == "multi_bulyan[flat]"}
+    if not hier:
+        problems.append("no completed multi_bulyan[hier] cells")
+        return problems
+    # the scaling claim: at n >= 1024 the grouped path completes while the
+    # flat path is skipped-as-infeasible or >= 5x slower
+    for (n, g, d), hc in sorted(hier.items()):
+        if n < HIER_BIG_N:
+            continue
+        fc = flat.get((n, d))
+        if fc is None or "skipped" in fc:
+            continue
+        ratio = fc["us_per_call"] / max(hc["us_per_call"], 1e-9)
+        if ratio < HIER_FLAT_FACTOR:
+            problems.append(
+                f"n={n},d={d}: flat path only {ratio:.1f}x the grouped "
+                f"path (< {HIER_FLAT_FACTOR}x) and not skipped — the "
+                "O(n·g) vs O(n²) claim does not hold")
+    # O(n·g) ordering: with g and d fixed, grouped time must grow
+    # subquadratically in n wherever the grid reaches n >= 1024
+    by_gd: dict = {}
+    for (n, g, d), hc in hier.items():
+        by_gd.setdefault((g, d), []).append((n, hc["us_per_call"]))
+    for (g, d), pts in sorted(by_gd.items()):
+        pts.sort()
+        for (n1, t1), (n2, t2) in zip(pts, pts[1:]):
+            if n2 < HIER_BIG_N:
+                continue
+            quad = (n2 / n1) ** 2
+            if t2 / max(t1, 1e-9) >= quad:
+                problems.append(
+                    f"g={g},d={d}: grouped time grows >= quadratically "
+                    f"from n={n1} to n={n2} "
+                    f"({t1:.0f} -> {t2:.0f} us, quadratic x{quad:.1f})")
+    return problems
+
+
 def check(path: str) -> "list[str]":
     """Return a list of problems (empty = valid)."""
     try:
@@ -198,6 +288,8 @@ def check(path: str) -> "list[str]":
         problems += _check_comm(path, results)
     elif schema == ACCURACY_SCHEMA:
         problems += _check_accuracy(path, results)
+    elif schema == HIER_SCHEMA:
+        problems += _check_hier(path, results)
     elif schema == AGG_TIME_SCHEMA or schema is None:
         # None: legacy agg_time files predate the schema tag — still
         # validate the grid, with the missing-field problem noted above
@@ -205,7 +297,7 @@ def check(path: str) -> "list[str]":
     else:
         problems.append(
             f"{path}: unrecognised schema {schema!r}; known: "
-            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA]}")
+            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA, HIER_SCHEMA]}")
     return problems
 
 

@@ -22,9 +22,11 @@ from repro.comm.codecs import (  # noqa: F401
     encoded_pairwise_stats,
     get_codec,
     is_encoded,
+    slice_workers,
 )
 from repro.comm.transport import (  # noqa: F401
     WireStats,
     gather_stats,
+    hier_wire_stats,
     wire_stats,
 )

@@ -85,6 +85,31 @@ def is_encoded(x: Any) -> bool:
     return isinstance(x, EncodedGrads)
 
 
+def slice_workers(enc: EncodedGrads, start: int, stop: int) -> EncodedGrads:
+    """Worker rows [start, stop) of a container, as a smaller container.
+
+    The hierarchical aggregation's per-group view (``repro.hier``): each
+    group leader sees only its members' wire messages, so group statistics
+    run straight on the sliced quantized payloads — the full-n fp32 stack
+    never materialises at the leader.  Rows are sliced on the worker axis
+    of every payload/sidecar leaf and the byte count re-derived for the
+    sub-range (codecs whose ``leaf_wire_bytes`` is row-linear — all of the
+    built-ins — make this the exact per-group wire cost).
+    """
+    if not (0 <= start < stop <= enc.n):
+        raise ValueError(
+            f"bad worker slice [{start}, {stop}) for n={enc.n}")
+    codec = get_codec(enc.spec)
+    m = stop - start
+    shapes = tuple((m,) + s[1:] for s in enc.shapes)
+    payload = jax.tree.map(lambda x: x[start:stop], enc.payload)
+    sidecar = None if enc.sidecar is None else \
+        jax.tree.map(lambda x: x[start:stop], enc.sidecar)
+    total = sum(codec.leaf_wire_bytes(s) for s in shapes)
+    return EncodedGrads(payload=payload, sidecar=sidecar, spec=enc.spec,
+                        n=m, shapes=shapes, wire_bytes=total)
+
+
 def _leaf2d(x: Array) -> Array:
     return x.reshape((x.shape[0], -1))
 

@@ -43,6 +43,9 @@ class WireStats:
     bytes_per_worker: int
     fp32_bytes_per_worker: int
     chunk_bytes: int
+    #: hierarchy level this gather belongs to (``"workers_to_leaders"`` /
+    #: ``"leaders_to_server"`` for repro.hier; None for the flat gather)
+    level: Optional[str] = None
 
     @property
     def total_bytes(self) -> int:
@@ -57,7 +60,7 @@ class WireStats:
         return -(-self.bytes_per_worker // self.chunk_bytes)
 
     def to_json(self) -> Dict[str, Any]:
-        return {
+        out = {
             "codec": self.codec,
             "n_workers": self.n,
             "bytes_per_worker": self.bytes_per_worker,
@@ -67,6 +70,9 @@ class WireStats:
             "chunk_bytes": self.chunk_bytes,
             "chunks_per_worker": self.chunks_per_worker,
         }
+        if self.level is not None:
+            out["level"] = self.level
+        return out
 
 
 def _shapes_of(grads_like: PyTree, n: Optional[int]
@@ -111,6 +117,32 @@ def gather_stats(enc: EncodedGrads, *,
                      bytes_per_worker=enc.bytes_per_worker,
                      fp32_bytes_per_worker=fp32 // enc.n,
                      chunk_bytes=chunk_bytes)
+
+
+def hier_wire_stats(codec: "str | Codec", grads_like: PyTree, *,
+                    n: int, g: int,
+                    chunk_bytes: int = DEFAULT_CHUNK_BYTES
+                    ) -> Tuple[WireStats, WireStats]:
+    """Per-level byte accounting for a two-level grouped gather.
+
+    Level 0 (``workers_to_leaders``): all ``n`` workers wire their encoded
+    gradient to their group leader.  Level 1 (``leaders_to_server``): the
+    ``ceil(n/g)`` leaders wire their group aggregate — same shapes, re
+    encoded with the same codec — to the server.  ``grads_like`` is the
+    *parameter* pytree (shape-only, as in :func:`wire_stats` with ``n``).
+    The hierarchy's wire win is visible directly: the server-side fan-in
+    drops from n rows to n/g rows.
+    """
+    import dataclasses as _dc
+    from repro.core.theory import group_sizes
+    n_groups = len(group_sizes(n, g))
+    inner = _dc.replace(wire_stats(codec, grads_like, n=n,
+                                   chunk_bytes=chunk_bytes),
+                        level="workers_to_leaders")
+    outer = _dc.replace(wire_stats(codec, grads_like, n=n_groups,
+                                   chunk_bytes=chunk_bytes),
+                        level="leaders_to_server")
+    return inner, outer
 
 
 def _numel(shape: Tuple[int, ...]) -> int:

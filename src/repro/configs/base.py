@@ -280,6 +280,10 @@ class RobustConfig:
     f: int = 3
     gar: str = "multi_bulyan"  # any name registered in repro.core.api
     use_pallas: bool = False   # route pairwise distances / coord select via kernels
+    grouped: bool = False      # hierarchical aggregation (repro.hier): the
+    #                            per-level budget check (theory.split_f_budget)
+    #                            owns feasibility, not the flat rule's min_n —
+    #                            a grouped (n, f) may be flat-infeasible
 
     def __post_init__(self):
         self.validate()
@@ -308,5 +312,6 @@ class RobustConfig:
             rule = get_aggregator(self.gar)
         except KeyError as e:
             raise ValueError(e.args[0]) from None
-        rule.validate(self.n_workers, self.f)
+        if not self.grouped:
+            rule.validate(self.n_workers, self.f)
         return self

@@ -550,24 +550,38 @@ def _weighted_mean_leaf(w: Array, leaf: Array) -> Array:
 
 def _bulyan_leaf(w_ext: Array, w_agr: Array, beta: int,
                  leaf: Array, coord_chunk: int = 0,
-                 use_pallas: bool = False, fused: bool = True) -> Array:
+                 use_pallas: bool = False,
+                 fused: "bool | str" = True) -> Array:
     """Apply an extraction plan + coordinate phase to one gradient leaf.
 
     Default path is sharding-preserving: (theta, n) @ (n, ...) tensordots
     keep the parameter-dim sharding, and the coordinate phase is purely
     elementwise/axis-0 over (theta, ...).
 
-    With ``use_pallas`` and ``fused`` (the production fast path) the whole
-    apply phase runs in the ``fused_select`` kernel: extraction einsums +
-    coordinate phase per d-tile in VMEM, no (θ, numel) HBM intermediates.
-    ``fused=False`` keeps the two-step Pallas path (materialised einsums +
-    ``coord_select``) for benchmarking the fusion win.
+    With ``use_pallas`` and ``fused=True`` the apply phase runs in the
+    ``fused_select`` kernel (extraction einsums + coordinate phase per
+    d-tile in VMEM, no (θ, numel) HBM intermediates) — *unless* the leaf
+    sits past the measured large-d crossover where the fused kernel loses
+    to plain XLA (``kernels.dispatch.fused_wins``, read off
+    BENCH_agg_time.json), in which case the XLA substrate is taken.
+    ``fused="force"`` pins the kernel regardless (the substrate
+    benchmarks); ``fused=False`` keeps the two-step Pallas path
+    (materialised einsums + ``coord_select``) for benchmarking the fusion
+    win.
     """
     if use_pallas and fused:
-        from repro.kernels import ops as kops
-        x = _leaf2d(leaf).astype(jnp.float32)      # (n, numel)
-        out = kops.fused_select(x, w_ext, w_agr, beta)
-        return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+        numel = 1
+        for s in leaf.shape[1:]:
+            numel *= int(s)
+        from repro.kernels import dispatch as kdispatch
+        if fused == "force" or kdispatch.fused_wins(w_ext.shape[1], numel):
+            from repro.kernels import ops as kops
+            x = _leaf2d(leaf).astype(jnp.float32)  # (n, numel)
+            out = kops.fused_select(x, w_ext, w_agr, beta)
+            return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+        # measured-crossover fallback: past the cliff the whole Pallas
+        # stack loses (two-step loses too) — take the XLA substrate
+        use_pallas = False
 
     if use_pallas or coord_chunk:
         x = _leaf2d(leaf).astype(jnp.float32)      # (n, numel)
@@ -604,7 +618,7 @@ def _bulyan_leaf(w_ext: Array, w_agr: Array, beta: int,
 
 def _sharded_apply_leaf(plan: "AggPlan", leaf: Array, ctx: MeshContext,
                         coordinate_fn=None, *, use_pallas: bool = False,
-                        fused: bool = True,
+                        fused: "bool | str" = True,
                         row_mult: Optional[Array] = None) -> Array:
     """Mesh-native apply of one plan to one leaf (DESIGN.md §10).
 
@@ -663,6 +677,17 @@ def _sharded_apply_leaf(plan: "AggPlan", leaf: Array, ctx: MeshContext,
         w_ext = jnp.pad(plan.w_ext, ((0, 0), (0, n_pad - n)))
         w_agr = jnp.pad(plan.w_agr, ((0, 0), (0, n_pad - n)))
 
+    # per-shard fused-vs-XLA dispatch on the static per-device leaf size
+    # (the kernel a device actually runs is (n, d_pad/M)); past the
+    # measured crossover the whole Pallas stack falls back to XLA, as in
+    # _bulyan_leaf
+    take_fused = bool(use_pallas and fused)
+    take_pallas = use_pallas
+    if take_fused and fused != "force":
+        from repro.kernels import dispatch as kdispatch
+        take_fused = kdispatch.fused_wins(n_pad, d_pad // M)
+        take_pallas = take_fused
+
     def local(xl):                                     # (n_loc, d_loc)
         xfull = jax.lax.all_gather(xl, ctx.worker_axes, axis=0, tiled=True)
         xfull = dequant(xfull, mult_pad)
@@ -670,14 +695,14 @@ def _sharded_apply_leaf(plan: "AggPlan", leaf: Array, ctx: MeshContext,
             return jnp.sum(xfull, axis=0) / n
         if kind == "weighted":
             return jnp.tensordot(w, xfull, axes=(0, 0))
-        if use_pallas and fused:
+        if take_fused:
             from repro.kernels import ops as kops
             return kops.fused_select(xfull, w_ext, w_agr, plan.beta)
         g_ext = jnp.matmul(w_ext, xfull,
                            precision=jax.lax.Precision.HIGHEST)
         g_agr = jnp.matmul(w_agr, xfull,
                            precision=jax.lax.Precision.HIGHEST)
-        if use_pallas:
+        if take_pallas:
             from repro.kernels import ops as kops
             return kops.coord_select(g_ext, g_agr, plan.beta)
         return G.bulyan_coordinate_phase(g_ext, g_agr, plan.beta)
@@ -689,7 +714,7 @@ def _sharded_apply_leaf(plan: "AggPlan", leaf: Array, ctx: MeshContext,
 
 def _sharded_apply_encoded(plan: "AggPlan", enc, ctx: MeshContext,
                            coordinate_fn=None, *, use_pallas: bool = False,
-                           fused: bool = True) -> PyTree:
+                           fused: "bool | str" = True) -> PyTree:
     """Sharded apply straight off an ``EncodedGrads`` container.
 
     Leaves whose codec admits the dequant form (int8/bf16 payload × one
@@ -744,21 +769,24 @@ class Aggregator:
 
     # ------------------------------------------------------------- phases
     def validate(self, n: int, f: int) -> None:
-        if n < self.min_n(f):
-            raise ValueError(
-                f"{self.name} requires n >= {self.min_n_formula} "
-                f"(n={n}, f={f}, need n >= {self.min_n(f)})")
+        # the one n-vs-f gate, shared with the hierarchical per-level
+        # budget checks (theory.split_f_budget / repro.hier)
+        from repro.core import theory
+        theory.check_level(n, f, rule=self.name, need=self.min_n(f),
+                           formula=self.min_n_formula)
 
     def plan(self, stats: AggStats) -> AggPlan:
         raise NotImplementedError
 
     def apply(self, plan: AggPlan, grads: PyTree, *, coord_chunk: int = 0,
-              use_pallas: bool = False, fused: bool = True,
+              use_pallas: bool = False, fused: "bool | str" = True,
               mesh_ctx: Optional[MeshContext] = None) -> PyTree:
         """Plan application — shared across rules, dispatched on plan.kind.
 
         With ``use_pallas`` the bulyan kind takes the fully fused kernel
-        path (one HBM read per leaf, no (θ, d) intermediates); pass
+        path (one HBM read per leaf, no (θ, d) intermediates) below the
+        measured large-d crossover and the XLA substrate above it
+        (``kernels.dispatch``); pass ``fused="force"`` to pin the kernel,
         ``fused=False`` to benchmark the two-step Pallas path instead.
 
         An :class:`EncodedGrads` wire container is decoded first — the
@@ -974,7 +1002,7 @@ class MultiBulyan(_BulyanFamily):
 # ==========================================================================
 def aggregate_tree(grads: PyTree, f: int, name: str = "multi_bulyan", *,
                    coord_chunk: int = 0, use_pallas: bool = False,
-                   fused: bool = True, dists: Optional[Array] = None,
+                   fused: "bool | str" = True, dists: Optional[Array] = None,
                    mesh_ctx: Optional[MeshContext] = None) -> PyTree:
     """Aggregate a stacked gradient pytree with the named registered rule."""
     agg = get_aggregator(name)

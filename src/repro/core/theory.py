@@ -3,10 +3,23 @@
 Used by benchmarks/resilience.py to check the empirical behaviour against the
 proved bounds, and by the trainer to surface the variance condition
 ``η(n,f)·√d·σ < ||g||`` as a runtime diagnostic.
+
+This module also owns the resilience *precondition arithmetic* shared by
+every layer that admits workers: :func:`check_level` is the single n-vs-f
+gate (``core.api.Aggregator.validate`` — and through it
+``RobustConfig.validate()`` — delegates here), and :func:`split_f_budget`
+derives the per-level byzantine budgets of the hierarchical (grouped)
+aggregation in ``repro.hier`` (DESIGN.md §11): with groups of at least
+``g_min`` workers each defending ``f_inner`` traitors, an adversary holding
+``f`` workers can fully capture at most ``floor(f / (f_inner+1))`` groups —
+the round-based resilience argument of Chen et al. (arXiv 1705.05491) — so
+the outer rule must tolerate that many byzantine *group aggregates*.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -71,3 +84,158 @@ def min_workers(gar: str, f: int) -> int:
     if gar == "trimmed_mean":
         return 2 * f + 1
     return 1
+
+
+MIN_N_FORMULA = {
+    "bulyan": "4f+3", "multi_bulyan": "4f+3",
+    "krum": "2f+3", "multi_krum": "2f+3",
+    "trimmed_mean": "2f+1",
+}
+
+
+def max_f(gar: str, n: int) -> int:
+    """The largest byzantine budget ``n`` workers admit under ``gar``
+    (inverse of :func:`min_workers`; may be negative when even f=0 is
+    infeasible)."""
+    if gar in ("bulyan", "multi_bulyan"):
+        return (n - 3) // 4
+    if gar in ("krum", "multi_krum"):
+        return (n - 3) // 2
+    if gar == "trimmed_mean":
+        return (n - 1) // 2
+    return n
+
+
+def check_level(n: int, f: int, *, rule: str, need: Optional[int] = None,
+                formula: Optional[str] = None,
+                level: Optional[str] = None) -> None:
+    """The one n-vs-f resilience gate, applied at every aggregation level.
+
+    Raises ``ValueError`` when ``n`` workers cannot defend ``f`` traitors
+    under ``rule`` (n ≥ 2f+3 for the Krum family, 4f+3 for Bulyan, 2f+1
+    for the trimmed mean).  ``need``/``formula`` let callers with their
+    own ``min_n`` (custom registered GARs) reuse the shared message
+    format; ``level`` names the hierarchy level in the error
+    (``"inner"``/``"outer"`` for ``repro.hier``).
+    """
+    if f < 0:
+        raise ValueError(f"f must be >= 0, got {f}")
+    if need is None:
+        need = min_workers(rule, f)
+    if formula is None:
+        formula = MIN_N_FORMULA.get(rule, str(need))
+    if n < need:
+        where = f" at hierarchy level {level!r}" if level else ""
+        raise ValueError(
+            f"{rule}{where} requires n >= {formula} "
+            f"(n={n}, f={f}, need n >= {need})")
+
+
+# ==========================================================================
+# hierarchical (grouped) f-budget arithmetic — DESIGN.md §11
+# ==========================================================================
+def group_sizes(n: int, g: int) -> Tuple[int, ...]:
+    """Deterministic balanced split of ``n`` workers into groups of at
+    most ``g``: ``ceil(n/g)`` contiguous groups whose sizes differ by at
+    most one (larger groups first)."""
+    if g < 1:
+        raise ValueError(f"group size must be >= 1, got g={g}")
+    if n < 1:
+        raise ValueError(f"need at least one worker, got n={n}")
+    n_groups = -(-n // g)
+    base, rem = divmod(n, n_groups)
+    return tuple(base + 1 if i < rem else base for i in range(n_groups))
+
+
+@dataclasses.dataclass(frozen=True)
+class FBudget:
+    """Per-level byzantine budgets of a two-level grouped aggregation.
+
+    ``f_inner`` is what every group defends; ``f_outer`` what the outer
+    rule over the ``n_groups`` group aggregates defends.  The budget
+    *covers* the flat contract ``f`` when no placement of ``f`` traitors
+    can capture more than ``f_outer`` groups: a group is captured only
+    when it holds more than ``f_inner`` traitors, so at most
+    ``floor(f / (f_inner+1))`` groups can fall.
+    """
+
+    n: int
+    f: int
+    g: int
+    group_sizes: Tuple[int, ...]
+    f_inner: int
+    f_outer: int
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.group_sizes)
+
+    def capturable_groups(self, f: Optional[int] = None) -> int:
+        f = self.f if f is None else f
+        if self.n_groups == 1:
+            return 0 if f <= self.f_inner else 1
+        return f // (self.f_inner + 1)
+
+    def covers(self, f: Optional[int] = None) -> bool:
+        """Whether any placement of ``f`` traitors stays defended."""
+        return self.capturable_groups(f) <= self.f_outer
+
+    def bounds(self) -> Tuple[Tuple[int, int], ...]:
+        """Contiguous (start, stop) worker-row ranges per group."""
+        out, start = [], 0
+        for s in self.group_sizes:
+            out.append((start, start + s))
+            start += s
+        return tuple(out)
+
+
+def split_f_budget(n: int, f: int, g: int, *, rule: str = "multi_bulyan",
+                   outer_rule: Optional[str] = None,
+                   f_inner: Optional[int] = None,
+                   f_outer: Optional[int] = None,
+                   enforce: bool = True) -> FBudget:
+    """Derive (and check) the per-level f budgets for groups of size ``g``.
+
+    Default policy: ``f_inner`` is the largest budget the smallest group
+    admits under ``rule`` (capped at ``f``); ``f_outer`` is the number of
+    groups an ``f``-strong adversary can then capture,
+    ``floor(f / (f_inner+1))``.  Every level is gated through
+    :func:`check_level` (n ≥ 2f+3 / 4f+3 at level granularity) and —
+    unless ``enforce=False`` — the derived budget must cover the contract
+    ``f``.  ``enforce=False`` exists for the simulator's poisoned-subtree
+    campaigns, which deliberately run under-provisioned trees to *show*
+    the capture; explicit ``f_inner``/``f_outer`` overrides model them.
+
+    A single group (g >= n) degenerates to the flat rule: ``f_inner = f``,
+    no outer level (``f_outer = 0``).
+    """
+    if f < 0:
+        raise ValueError(f"f must be >= 0, got {f}")
+    sizes = group_sizes(n, g)
+    n_groups, g_min = len(sizes), min(sizes)
+    if n_groups == 1:
+        fi = f if f_inner is None else f_inner
+        check_level(g_min, fi, rule=rule, level="inner")
+        budget = FBudget(n=n, f=f, g=g, group_sizes=sizes,
+                         f_inner=fi, f_outer=0)
+    else:
+        fi = min(f, max(0, max_f(rule, g_min))) if f_inner is None \
+            else f_inner
+        check_level(g_min, fi, rule=rule, level="inner")
+        fo = f // (fi + 1) if f_outer is None else f_outer
+        if fo > 0 or outer_rule is not None:
+            # a robust outer level must itself satisfy its precondition
+            # over the n_groups aggregates (f_outer = 0 with an explicit
+            # robust outer rule still needs e.g. n_groups >= 3 for bulyan)
+            check_level(n_groups, fo, rule=outer_rule or rule,
+                        level="outer")
+        budget = FBudget(n=n, f=f, g=g, group_sizes=sizes,
+                         f_inner=fi, f_outer=fo)
+    if enforce and not budget.covers():
+        raise ValueError(
+            f"hierarchical f budget (f_inner={budget.f_inner}, "
+            f"f_outer={budget.f_outer}, groups={budget.n_groups}) does not "
+            f"cover contract f={f}: {budget.capturable_groups()} groups "
+            f"capturable > f_outer; increase g, decrease f, or pass "
+            f"enforce=False to deliberately run past the budget")
+    return budget

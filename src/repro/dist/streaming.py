@@ -70,7 +70,8 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                               transforms: Sequence[api.Transform] = (),
                               boundary_spec=None, dx_spec=None,
                               shard_map_mesh=None, shard_map_axes=None,
-                              spmd: Optional[bool] = None):
+                              spmd: Optional[bool] = None,
+                              hier=None):
     """Build the streaming-trainer step function (same signature as stacked).
 
     ``attack`` accepts the same spec strings as the stacked trainer
@@ -98,7 +99,15 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
     ``shard_map_mesh``/``shard_map_axes``/``spmd`` mirror the stacked
     trainer (DESIGN.md §10): pass-1 statistics accumulate each block's
     row-block contributions inside a shard_map over the worker axes, and
-    the apply phase shards d over the model axis.  The step takes and
+    the apply phase shards d over the model axis.
+
+    ``hier`` (a ``repro.hier.GroupConfig``) runs the two-level grouped
+    aggregation (DESIGN.md §11).  Under ``scope="global"`` pass 1
+    accumulates ceil(n/g) per-group distance matrices block by block —
+    never an (n, n) one — pass 2 applies the inner plans per group and
+    stores only the ``(n_groups, ...)`` intermediates, and the outer
+    phase runs once over those; ``scope="block"`` runs the full two-level
+    pipeline per block.  Not composable with the mesh-native path.  The step takes and
     returns a :class:`~repro.dist.trainer.TrainerState` (only the ``opt``
     slot is live — a state carrying transform/attack/residual extras is
     rejected at trace time, since this trainer would silently never
@@ -132,6 +141,17 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             "error-feedback codecs carry a per-worker residual; use the "
             "stacked trainer (dist.make_train_step) with codec")
     mesh_ctx = _derive_mesh_ctx(shard_map_mesh, shard_map_axes, spmd)
+    hier_budget = inner_agg = outer_agg = None
+    if hier is not None:
+        if mesh_ctx is not None:
+            raise NotImplementedError(
+                "hier= is not composable with the mesh-native (spmd) "
+                "aggregation path yet; drop shard_map_mesh/spmd")
+        # budget checked once at build time — rcfg.n_workers is the worker
+        # count every block's stack will carry
+        hier_budget = hier.budget(rcfg.n_workers, rcfg.f)
+        inner_agg = api.get_aggregator(hier.rule)
+        outer_agg = api.get_aggregator(hier.resolve_outer_rule(hier_budget))
 
     def worker_loss(p, wb):
         return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
@@ -192,7 +212,52 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
 
         plan = None
         global_diag = None
-        if scope == "global" and (aggregator.needs_dists or telemetry):
+        hier_inner_plans = hier_inner_stats = None
+        if hier is not None and scope == "global":
+            bounds = hier_budget.bounds()
+            if inner_agg.needs_dists or telemetry:
+                # pass 1, grouped: accumulate ceil(n/g) per-group distance
+                # matrices block by block — the (n, n) matrix never exists.
+                # Per-group accumulation is leaf-by-leaf in global leaf
+                # order, and each entry is a full-d reduction over one row
+                # pair, so slicing rows before contracting reproduces the
+                # stacked hier path's float sums exactly.
+                totals = [jnp.zeros((e - s, e - s), jnp.float32)
+                          for s, e in bounds]
+                for k in blocks:
+                    enc, g = wire_block(block_grads(params, k), offsets[k])
+                    if enc is not None:
+                        from repro.comm import codecs as CC
+                        for gi, (s, e) in enumerate(bounds):
+                            totals[gi] = totals[gi] + api.raw_pairwise_stats(
+                                CC.slice_workers(enc, s, e),
+                                use_pallas=rcfg.use_pallas)[0]
+                    else:
+                        for leaf in jax.tree.leaves(g):
+                            for gi, (s, e) in enumerate(bounds):
+                                totals[gi] = totals[gi] + \
+                                    api.raw_pairwise_stats(
+                                        leaf[s:e],
+                                        use_pallas=rcfg.use_pallas)[0]
+                hier_inner_stats = tuple(
+                    api.AggStats(n=e - s, f=hier_budget.f_inner,
+                                 dists=api.finalize_dists(t))
+                    for (s, e), t in zip(bounds, totals))
+            else:
+                hier_inner_stats = tuple(
+                    api.AggStats(n=e - s, f=hier_budget.f_inner)
+                    for s, e in bounds)
+            plans = []
+            for st in hier_inner_stats:
+                inner_agg.validate(st.n, st.f)
+                plans.append(inner_agg.plan(st))
+            hier_inner_plans = tuple(plans)
+            if inner_agg.needs_dists or telemetry:
+                # same CSE barrier as the flat global scope: pass 2 must
+                # not keep pass 1's block gradients live
+                params, hier_inner_plans = jax.lax.optimization_barrier(
+                    (params, hier_inner_plans))
+        elif scope == "global" and (aggregator.needs_dists or telemetry):
             # pass 1: accumulate the global (n, n) matrix block by block;
             # raw per-leaf contributions in global leaf order, finalised
             # once — the identical float summation the stacked path does.
@@ -228,7 +293,7 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             # structure exists to avoid.  Tying params through the barrier
             # with the plan makes pass 2 depend on pass 1's completion.
             params, plan = jax.lax.optimization_barrier((params, plan))
-        elif not aggregator.needs_dists:
+        elif hier is None and not aggregator.needs_dists:
             # distance-free rules: the plan is block-independent
             stats = api.AggStats(n=rcfg.n_workers, f=rcfg.f)
             aggregator.validate(stats.n, stats.f)
@@ -237,9 +302,12 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
         # pass 2 (or the only pass): aggregate block by block; the first
         # block's value_and_grad also yields the per-worker loss metrics
         agg_blocks = {}
+        inter_blocks = {}
+        hm_blocks = {}
         losses = None
         block_diags = []
         wire_total = 0
+        leader_total = 0
         dev_sq = jnp.zeros((), jnp.float32)
         ref_sq = jnp.zeros((), jnp.float32)
         for k in blocks:
@@ -250,6 +318,43 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             enc, g = wire_block(g, offsets[k])
             if enc is not None:
                 wire_total += enc.wire_bytes
+            if hier is not None and scope == "block":
+                # the full two-level pipeline per block (selection is per
+                # block AND per group — the documented scope degradation)
+                from repro.hier import hier_aggregate_tree
+                agg_k, hplan_k, hinfo_k = hier_aggregate_tree(
+                    enc if enc is not None else g, rcfg.f, hier,
+                    codec=codec_obj, key=key, coord_chunk=coord_chunk,
+                    use_pallas=rcfg.use_pallas,
+                    needs_dists=True if telemetry else None)
+                agg_blocks[k] = agg_k
+                leader_total += hinfo_k["leader_wire_bytes"]
+                if telemetry:
+                    block_diags.append(
+                        hplan_k.diagnostics(hinfo_k["inner_stats"]))
+                    dev_sq, ref_sq = honest_dev_accumulate(
+                        dev_sq, ref_sq, agg_k, g, f_eff)
+                continue
+            if hier is not None:
+                # scope == "global": apply the global inner plans per
+                # group; only the (n_groups, ...) intermediate survives
+                # the block — the worker-axis stack is dropped with g
+                parts = [
+                    inner_agg.apply(
+                        pg, jax.tree.map(lambda x: x[s:e], g),
+                        coord_chunk=coord_chunk,
+                        use_pallas=rcfg.use_pallas)
+                    for pg, (s, e) in zip(hier_inner_plans,
+                                          hier_budget.bounds())]
+                inter_blocks[k] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs, axis=0), *parts)
+                if telemetry:
+                    # honest means are d-sized — keep them for the
+                    # deviation once the outer aggregate exists
+                    hm_blocks[k] = jax.tree.map(
+                        lambda x: jnp.mean(x[f_eff:].astype(jnp.float32),
+                                           axis=0), g)
+                continue
             block_plan = plan
             if block_plan is None or (telemetry and scope == "block"):
                 stats_k = api.compute_stats(
@@ -268,7 +373,46 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                 dev_sq, ref_sq = honest_dev_accumulate(
                     dev_sq, ref_sq, agg_blocks[k], g, f_eff)
 
-        if block_keys is None:
+        if hier is not None and scope == "global":
+            # outer phase, once, over the stored (n_groups, ...) stack
+            inter = inter_blocks[None] if block_keys is None else \
+                {k: inter_blocks[k] for k in block_keys}
+            outer_plan = None
+            if hier_budget.n_groups == 1:
+                agg = jax.tree.map(lambda x: x[0], inter)
+            else:
+                if codec_obj is not None:
+                    from repro.hier import LEADER_ENCODE_FOLD
+                    k2 = jax.random.fold_in(key, LEADER_ENCODE_FOLD)
+                    enc2, _ = codec_obj.encode(inter, key=k2)
+                    leader_total += enc2.wire_bytes
+                    inter = codec_obj.decode(enc2)
+                ost = api.compute_stats(
+                    inter, hier_budget.f_outer,
+                    needs_dists=outer_agg.needs_dists or telemetry,
+                    use_pallas=rcfg.use_pallas)
+                outer_agg.validate(ost.n, ost.f)
+                outer_plan = outer_agg.plan(ost)
+                agg = outer_agg.apply(outer_plan, inter,
+                                      coord_chunk=coord_chunk,
+                                      use_pallas=rcfg.use_pallas)
+            if telemetry:
+                from repro.hier import HierPlan
+                hplan = HierPlan(
+                    inner=hier_inner_plans, outer=outer_plan,
+                    n=rcfg.n_workers, f=rcfg.f, g=hier.g,
+                    bounds=hier_budget.bounds(),
+                    f_inner=hier_budget.f_inner,
+                    f_outer=hier_budget.f_outer, rule=hier.rule,
+                    outer_rule=hier.resolve_outer_rule(hier_budget))
+                global_diag = hplan.diagnostics(hier_inner_stats)
+                hm = hm_blocks[None] if block_keys is None else \
+                    {k: hm_blocks[k] for k in block_keys}
+                for a, m in zip(jax.tree.leaves(agg), jax.tree.leaves(hm)):
+                    dev_sq = dev_sq + jnp.sum(
+                        (a.astype(jnp.float32) - m) ** 2)
+                    ref_sq = ref_sq + jnp.sum(m ** 2)
+        elif block_keys is None:
             agg = agg_blocks[None]
         else:
             agg = {k: agg_blocks[k] for k in block_keys}
@@ -298,6 +442,9 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             if codec_obj is not None:
                 diag["wire_bytes_per_worker"] = jnp.asarray(
                     wire_total / rcfg.n_workers, jnp.float32)
+            if hier is not None and codec_obj is not None:
+                diag["leader_wire_bytes"] = jnp.asarray(
+                    leader_total, jnp.float32)
             metrics["telemetry"] = diag
         return new_params, dataclasses.replace(state, opt=new_opt), metrics
 

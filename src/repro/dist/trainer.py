@@ -274,7 +274,8 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                     grad_specs: Optional[PyTree] = None,
                     boundary_spec=None,
                     shard_map_mesh=None, shard_map_axes=None,
-                    spmd: Optional[bool] = None):
+                    spmd: Optional[bool] = None,
+                    hier=None):
     """Build the stacked-trainer step function (jit it yourself).
 
     ``attack`` is a spec string (``"little_is_enough:z=2.0"`` — see
@@ -314,6 +315,17 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     d over the model axis.  ``shard_map_axes`` names the worker axes of
     that path explicitly (default: derived from the mesh's axis names —
     ``("pod", "data")`` multi-pod, ``("data",)`` otherwise).
+
+    ``hier`` — a ``repro.hier.GroupConfig`` — replaces the flat
+    stats→plan→apply with the two-level grouped pipeline (DESIGN.md §11):
+    robust-aggregate within groups of ``hier.g`` workers, then over the
+    group aggregates, with per-level f budgets derived and checked by
+    ``core.theory.split_f_budget``.  Under a codec the group aggregates
+    are re-encoded for the leaders→server hop (telemetry surfaces its
+    byte count as ``leader_wire_bytes``); telemetry gains
+    ``group_selection``, the outer level's per-group mass.  Not yet
+    composable with the mesh-native (``spmd``) path or error-feedback
+    codecs.
     """
     rcfg.validate()
     aggregator = api.get_aggregator(rcfg.gar)
@@ -334,6 +346,15 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     # (average / median campaigns report why they would have been rejected)
     needs_dists = aggregator.needs_dists or telemetry
     mesh_ctx = _derive_mesh_ctx(shard_map_mesh, shard_map_axes, spmd)
+    if hier is not None:
+        if mesh_ctx is not None:
+            raise NotImplementedError(
+                "hier= is not composable with the mesh-native (spmd) "
+                "aggregation path yet; drop shard_map_mesh/spmd")
+        if codec_obj is not None and codec_obj.stateful:
+            raise ValueError(
+                "hier= does not support error-feedback codecs (the "
+                "leaders→server hop has no residual slot); drop ef=1")
 
     def worker_loss(p, wb):
         return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
@@ -380,18 +401,27 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
         # statistics straight off the wire container (fused dequant→stats
         # under use_pallas) unless a transform rewrote the decoded stack
         stats_src = enc if (enc is not None and not transforms) else grads
-        stats = api.compute_stats(stats_src, rcfg.f, needs_dists=needs_dists,
-                                  use_pallas=rcfg.use_pallas,
-                                  mesh_ctx=mesh_ctx)
-        # guard against an out-of-band worker count: stats.n comes from the
-        # actual batch split, which RobustConfig's construction-time check
-        # never saw.  plan() implementations are not required to
-        # self-validate (streaming.py already guards every plan call).
-        aggregator.validate(stats.n, stats.f)
-        plan = aggregator.plan(stats)
-        agg = aggregator.apply(plan, grads, coord_chunk=coord_chunk,
-                               use_pallas=rcfg.use_pallas,
-                               mesh_ctx=mesh_ctx)
+        if hier is not None:
+            from repro.hier import hier_aggregate_tree
+            agg, plan, hinfo = hier_aggregate_tree(
+                stats_src, rcfg.f, hier, codec=codec_obj, key=key,
+                coord_chunk=coord_chunk, use_pallas=rcfg.use_pallas,
+                needs_dists=needs_dists)
+            stats = None
+        else:
+            stats = api.compute_stats(stats_src, rcfg.f,
+                                      needs_dists=needs_dists,
+                                      use_pallas=rcfg.use_pallas,
+                                      mesh_ctx=mesh_ctx)
+            # guard against an out-of-band worker count: stats.n comes from
+            # the actual batch split, which RobustConfig's construction-time
+            # check never saw.  plan() implementations are not required to
+            # self-validate (streaming.py already guards every plan call).
+            aggregator.validate(stats.n, stats.f)
+            plan = aggregator.plan(stats)
+            agg = aggregator.apply(plan, grads, coord_chunk=coord_chunk,
+                                   use_pallas=rcfg.use_pallas,
+                                   mesh_ctx=mesh_ctx)
         if adaptive is not None:
             astate = adaptive.update(astate, plan.selection_weights())
         lr = lr_fn(opt_state.step)
@@ -405,7 +435,8 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
             "agg_grad_norm": gnorm,
         }
         if telemetry:
-            diag = plan.diagnostics(stats)
+            diag = plan.diagnostics(hinfo["inner_stats"]) \
+                if hier is not None else plan.diagnostics(stats)
             # count captured mass over the rows the attack actually holds
             # this phase (f_eff), not the rule's contract f
             diag["byz_mass"] = jnp.sum(diag["selection"][:f_eff])
@@ -413,6 +444,9 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
             if enc is not None:
                 diag["wire_bytes_per_worker"] = jnp.asarray(
                     enc.bytes_per_worker, jnp.float32)
+            if hier is not None and codec_obj is not None:
+                diag["leader_wire_bytes"] = jnp.asarray(
+                    hinfo["leader_wire_bytes"], jnp.float32)
             metrics["telemetry"] = diag
         return (new_params,
                 TrainerState(opt=new_opt, tstates=tstates, astate=astate,

@@ -1,0 +1,14 @@
+"""repro.hier — hierarchical (grouped) robust aggregation for large n.
+
+Robust-aggregate within ceil(n/g) groups of ≤ g workers, then robustly
+aggregate the group outputs: O(n·g) selection instead of the flat path's
+O(n²), with per-level byzantine budgets derived and checked by
+``core.theory.split_f_budget`` (DESIGN.md §11).  ``g = n`` degenerates to
+the flat rule bitwise.  Turn on per trainer with
+``hier=GroupConfig(g=64)`` or ``launch/train.py --hier g=64``.
+"""
+from repro.hier.plan import GroupConfig, HierPlan  # noqa: F401
+from repro.hier.aggregate import (  # noqa: F401
+    LEADER_ENCODE_FOLD,
+    hier_aggregate_tree,
+)

@@ -1,0 +1,195 @@
+"""Hierarchical aggregation plans — group assignment + per-level AggPlans.
+
+The flat plan phase is O(n²·θ·log n) in the worker count: at n in the
+thousands (the north-star's federated fan-in) the (n, n) distance matrix
+alone is the bottleneck.  The grouped scheme here robust-aggregates within
+``ceil(n/g)`` groups of at most ``g`` workers, then robust-aggregates the
+group outputs — O(n·g) selection work — while the per-level byzantine
+budgets stay grounded in the paper's preconditions through
+``core.theory.split_f_budget`` (DESIGN.md §11).
+
+Two pieces:
+
+* :class:`GroupConfig` — the static (hashable, jit-static) user-facing
+  knob: group size ``g``, the inner rule, optionally an explicit outer
+  rule and per-level f overrides.  ``hier=GroupConfig(g=64)`` on either
+  trainer turns the feature on.
+* :class:`HierPlan`  — the computed plan: worker→group bounds, the
+  per-level budgets and one :class:`~repro.core.api.AggPlan` per group
+  plus the outer plan.  A registered pytree, so it jits/vmaps like the
+  flat ``AggPlan`` and composes the same telemetry surface
+  (``selection_weights`` / ``diagnostics``) with per-group extras.
+
+Group assignment is deterministic: contiguous balanced slices of the
+worker axis (``core.theory.group_sizes``), larger groups first.  Workers
+are addressed by row index everywhere in this repo (the byzantine-rows
+-first convention of ``inject_byzantine``), so contiguity keeps every
+existing attack/telemetry convention intact and makes the poisoned
+-subtree scenario (all traitors in group 0) the default adversarial
+placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import AggPlan, AggStats
+from repro.core import theory
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupConfig:
+    """Static configuration of the two-level grouped aggregation.
+
+    ``g`` is the max group size; ``rule`` the inner (within-group) GAR
+    from the registry.  ``outer_rule`` defaults to ``rule`` when the
+    derived outer budget ``f_outer`` is positive and to plain ``average``
+    when no whole group is capturable (robustness is already paid for at
+    the inner level — averaging the group aggregates preserves the m/n
+    slowdown claim instead of paying a second selection haircut).
+
+    ``f_inner``/``f_outer`` override the derived per-level budgets (the
+    simulator's under-provisioned poisoned-subtree campaigns);
+    ``enforce_budget=False`` permits budgets that do not cover the
+    contract f — every level is still individually gated through
+    ``core.theory.check_level``.
+    """
+
+    g: int
+    rule: str = "multi_bulyan"
+    outer_rule: Optional[str] = None
+    f_inner: Optional[int] = None
+    f_outer: Optional[int] = None
+    enforce_budget: bool = True
+
+    @classmethod
+    def from_spec(cls, spec: str, *, rule: str = "multi_bulyan"
+                  ) -> "GroupConfig":
+        """Parse the CLI grammar ``"g=64[,rule=...,f_inner=...,...]"``.
+
+        Same comma-separated ``k=v`` shape as the attack/codec/transform
+        spec strings.  ``rule`` is the default inner rule (the launchers
+        pass their ``--gar``); ``enforce=0`` maps to
+        ``enforce_budget=False``.  A bare integer is shorthand for ``g=``.
+        """
+        kw: Dict[str, object] = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                k, v = "g", part
+            else:
+                k, v = (s.strip() for s in part.split("=", 1))
+            if k == "enforce":
+                kw["enforce_budget"] = v not in ("0", "false", "False")
+            elif k in ("g", "f_inner", "f_outer"):
+                kw[k] = int(v)
+            elif k in ("rule", "outer_rule"):
+                kw[k] = v
+            else:
+                raise ValueError(
+                    f"unknown --hier key {k!r} in {spec!r}; expected "
+                    "g/rule/outer_rule/f_inner/f_outer/enforce")
+        if "g" not in kw:
+            raise ValueError(f"--hier spec {spec!r} needs g=<group size>")
+        kw.setdefault("rule", rule)
+        return cls(**kw)  # type: ignore[arg-type]
+
+    def budget(self, n: int, f: int) -> theory.FBudget:
+        """The checked per-level f budget for an (n, f) contract."""
+        return theory.split_f_budget(
+            n, f, self.g, rule=self.rule, outer_rule=self.outer_rule,
+            f_inner=self.f_inner, f_outer=self.f_outer,
+            enforce=self.enforce_budget)
+
+    def resolve_outer_rule(self, budget: theory.FBudget) -> str:
+        if self.outer_rule is not None:
+            return self.outer_rule
+        return self.rule if budget.f_outer > 0 else "average"
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("inner", "outer"),
+    meta_fields=("n", "f", "g", "bounds", "f_inner", "f_outer",
+                 "rule", "outer_rule"))
+@dataclasses.dataclass(frozen=True)
+class HierPlan:
+    """Static-shape output of the hierarchical plan phase.
+
+    ``inner`` holds one flat :class:`AggPlan` per group (in worker-row
+    order over the contiguous ``bounds``); ``outer`` the plan over the
+    group aggregates, or ``None`` for the single-group degenerate case
+    (g >= n), whose apply is the bitwise-identical flat path.  All array
+    fields live inside the nested AggPlans, so a HierPlan jits and
+    replicates exactly like its flat counterpart.
+    """
+
+    inner: Tuple[AggPlan, ...]
+    outer: Optional[AggPlan]
+    n: int
+    f: int
+    g: int
+    bounds: Tuple[Tuple[int, int], ...]
+    f_inner: int
+    f_outer: int
+    rule: str
+    outer_rule: str
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.inner)
+
+    # ------------------------------------------------------------ telemetry
+    def group_selection(self) -> Array:
+        """Convex (n_groups,) selection mass over group aggregates."""
+        if self.outer is None:
+            return jnp.ones((1,), jnp.float32)
+        return self.outer.selection_weights()
+
+    def selection_weights(self) -> Array:
+        """Per-worker selection mass through both levels, convex (n,).
+
+        Worker i's mass is (its group's outer mass) × (its inner mass
+        within the group) — the share of the final aggregate its value
+        flows into.  Adaptive attacks and the suspicion EMA consume this
+        exactly like the flat plan's vector.
+        """
+        gsel = self.group_selection()
+        parts = [gsel[k] * p.selection_weights()
+                 for k, p in enumerate(self.inner)]
+        return jnp.concatenate(parts).astype(jnp.float32)
+
+    def diagnostics(self, inner_stats: Optional[Tuple[AggStats, ...]] = None
+                    ) -> Dict[str, Array]:
+        """Flat-plan diagnostics plus the per-group layer.
+
+        Shares keys with ``AggPlan.diagnostics`` (``selection`` (n,),
+        ``byz_mass``, and — when every group's stats carry distances —
+        ``score_spectrum`` (n,) / ``score_gap`` / ``mean_dist`` built
+        from the per-group Krum scores) and adds ``group_selection``
+        (n_groups,), the outer level's per-group mass, which the
+        simulator turns into per-group suspicion.
+        """
+        sel = self.selection_weights()
+        byz = jnp.sum(sel[: self.f]) if self.f else jnp.zeros((), jnp.float32)
+        out: Dict[str, Array] = {"selection": sel, "byz_mass": byz,
+                                 "group_selection": self.group_selection()}
+        if inner_stats is not None and \
+                all(st.dists is not None for st in inner_stats):
+            per = [p.diagnostics(st)
+                   for p, st in zip(self.inner, inner_stats)]
+            out["score_spectrum"] = jnp.sort(
+                jnp.concatenate([d["score_spectrum"] for d in per]))
+            out["score_gap"] = jnp.min(
+                jnp.stack([d["score_gap"] for d in per]))
+            out["mean_dist"] = jnp.mean(
+                jnp.stack([d["mean_dist"] for d in per]))
+        return out

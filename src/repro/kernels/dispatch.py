@@ -1,0 +1,98 @@
+"""Measured-crossover dispatch between apply substrates (ROADMAP stopgap).
+
+``BENCH_agg_time.json`` (committed full grid) shows the fused Pallas select
+kernel winning the bulyan apply below ~1e5 coordinates per leaf but losing
+~4x to the plain XLA substrate at d = 1e6 — the fused-select large-d cliff
+(the kernel re-reads its extraction tiles once per output tile; the real
+fix is a ROADMAP item).  Until then, ``use_pallas=True`` must not blindly
+take the fused path: :func:`fused_wins` consults a dispatch table of the
+*measured* crossover points and the apply phase falls back to the XLA
+substrate above them (``core.api._bulyan_leaf``; pass ``fused="force"`` to
+pin the kernel regardless, which the substrate benchmarks do).
+
+The baked-in table is read off the committed BENCH_agg_time.json grid:
+
+===  ==========================  ==========================
+ n    largest d fused won (us)    smallest d fused lost (us)
+===  ==========================  ==========================
+ 11   4096   (2326 vs 6226)       —
+ 15   100000 (145490 vs 250656)   1000000 (8555151 vs 2193519)
+===  ==========================  ==========================
+
+Per-n thresholds are the geometric midpoint of the bracketing measured
+points; n values without a measured loss point inherit the most
+conservative (smallest) threshold observed.  :func:`load_measured`
+recomputes the table from a fresh benchmark JSON.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, Optional, Tuple
+
+# (largest numel where fused won, smallest where it lost or None) per n,
+# from the committed BENCH_agg_time.json multi_bulyan[fused|xla] rows
+MEASURED_POINTS: Dict[int, Tuple[int, Optional[int]]] = {
+    11: (4096, None),
+    15: (100_000, 1_000_000),
+}
+
+
+def _threshold(win: int, lose: Optional[int], fallback: int) -> int:
+    if lose is None:
+        # no measured loss for this n: fused is safe at least up to the
+        # global fallback (never below the largest measured win)
+        return max(win, fallback)
+    return int(math.sqrt(float(win) * float(lose)))
+
+
+def _build_table(points: Dict[int, Tuple[int, Optional[int]]]
+                 ) -> Tuple[Dict[int, int], int]:
+    bracketed = [_threshold(w, l, 0) for w, l in points.values()
+                 if l is not None]
+    default = min(bracketed) if bracketed else 1 << 18
+    table = {n: _threshold(w, l, default) for n, (w, l) in points.items()}
+    return table, default
+
+
+#: per-n max numel for which the fused kernel is dispatched, + the default
+#: for unmeasured n (the most conservative bracketed crossover: ~316k)
+FUSED_MAX_NUMEL, DEFAULT_FUSED_MAX_NUMEL = _build_table(MEASURED_POINTS)
+
+
+def fused_wins(n: int, numel: int) -> bool:
+    """Should a (n, numel) bulyan apply take the fused kernel?
+
+    Static python decision (both arguments are shape-derived), so the
+    dispatch costs nothing under jit and cannot retrace.
+    """
+    return numel <= FUSED_MAX_NUMEL.get(n, DEFAULT_FUSED_MAX_NUMEL)
+
+
+def load_measured(path: str, rule: str = "multi_bulyan") -> None:
+    """Refresh the dispatch table from a BENCH_agg_time.json payload.
+
+    Reads the ``rule[fused]`` vs ``rule[xla]`` rows, rebuilds the per-n
+    bracketing points and swaps the module tables in place.  Raises on a
+    payload without both substrate rows.
+    """
+    global FUSED_MAX_NUMEL, DEFAULT_FUSED_MAX_NUMEL, MEASURED_POINTS
+    with open(path) as fh:
+        results = json.load(fh)["results"]
+    fused, xla = results[f"{rule}[fused]"], results[f"{rule}[xla]"]
+    points: Dict[int, Tuple[int, Optional[int]]] = {}
+    for key, t_fused in fused.items():
+        if key not in xla:
+            continue
+        kv = dict(p.split("=") for p in key.split(","))
+        n, d = int(kv["n"]), int(kv["d"])
+        win, lose = points.get(n, (0, None))
+        if t_fused <= xla[key]:
+            win = max(win, d)
+        else:
+            lose = d if lose is None else min(lose, d)
+        points[n] = (win, lose)
+    if not points:
+        raise ValueError(f"no common {rule}[fused]/[xla] cells in {path}")
+    MEASURED_POINTS = points
+    FUSED_MAX_NUMEL, DEFAULT_FUSED_MAX_NUMEL = _build_table(points)

@@ -181,6 +181,114 @@ def _smoke_codec_sweep(args) -> List[str]:
     return problems
 
 
+def _hier_fields(args) -> dict:
+    """``--hier SPEC`` -> the Scenario hier_* field dict (empty when unset)."""
+    if not args.hier:
+        return {}
+    from repro.hier import GroupConfig
+    gc = GroupConfig.from_spec(args.hier, rule=args.gar)
+    return dict(hier_g=gc.g, hier_rule=gc.rule, hier_outer_rule=gc.outer_rule,
+                hier_f_inner=gc.f_inner, hier_f_outer=gc.f_outer,
+                hier_enforce=gc.enforce_budget)
+
+
+# --smoke --hier poisoned-subtree acceptance: the adversary owns a whole
+# contiguous group (rows 0..f-1 = group 0 under the contiguous balanced
+# assignment).  Three campaigns tell the story end to end:
+#   defended  — within-budget hierarchy, byzantine rows deselected inside
+#               their groups exactly like the flat rule;
+#   captured  — deliberately under-provisioned inner budget (f_inner=1
+#               against a fully colluding group, enforce=0) with a plain
+#               averaging outer level: group 0's aggregate is byzantine and
+#               its full 1/n_groups mass flows into the update;
+#   rejected  — same under-provisioned inner budget, but a robust outer
+#               rule (krum over 5 group aggregates, f_outer=1) throws the
+#               captured group's aggregate away: byzantine mass back to ≈ 0,
+#               group 0 gets zero outer selection mass under attack, and its
+#               suspicion EMA rises every attacked step.  (Krum's one-hot
+#               selection leaves most *honest* groups unselected each step
+#               too, so an argmax-suspicion check would be flaky — the
+#               deterministic signature is zero mass + monotone suspicion.)
+HIER_SMOKE_STEPS = 6
+HIER_CAPTURE_MIN = 0.2          # captured byz mass ≥ this (its share is 1/3)
+
+
+def _smoke_hier(args) -> int:
+    import numpy as np
+
+    def run(name, **kw):
+        sched = AttackSchedule((
+            AttackPhase(steps=HIER_SMOKE_STEPS, attack="none"),
+            AttackPhase(steps=HIER_SMOKE_STEPS,
+                        attack="little_is_enough:z=4.0")))
+        sc = Scenario(name=name, schedule=sched, gar=args.gar,
+                      trainer=args.trainer, use_pallas=args.use_pallas,
+                      seed=args.seed, **kw)
+        r = run_campaign(sc, verbose=True)
+        if args.report:
+            stem, dot, ext = args.report.rpartition(".")
+            path = f"{stem}.{name}.{ext}" if dot else f"{args.report}.{name}"
+            print(f"[sim] report -> {report.write_json(path, r)}")
+        return r
+
+    post = slice(HIER_SMOKE_STEPS, 2 * HIER_SMOKE_STEPS)
+    problems: List[str] = []
+
+    defended = run("hier-defended", n_workers=21, f=1, hier_g=7)
+    byz = float(np.mean(defended.trace["byz_mass"][post]))
+    dev = float(np.max(defended.trace["honest_dev"][post]))
+    print(f"[sim] hier defended: honest_dev max={dev:.3f} "
+          f"byz_mass={byz:.4f}")
+    if byz > ROBUST_BYZ_MASS:
+        problems.append(f"hier-defended byz_mass {byz:.4f} > "
+                        f"{ROBUST_BYZ_MASS}")
+    if dev > ROBUST_DEV_MAX:
+        problems.append(f"hier-defended honest_dev max {dev:.3f} > "
+                        f"{ROBUST_DEV_MAX}")
+    if "group_selection" not in defended.trace:
+        problems.append("hier-defended trace missing group_selection")
+
+    captured = run("hier-captured", n_workers=21, f=7, hier_g=7,
+                   hier_f_inner=1, hier_f_outer=0, hier_enforce=False)
+    byz = float(np.mean(captured.trace["byz_mass"][post]))
+    print(f"[sim] hier captured (under-provisioned inner): "
+          f"byz_mass={byz:.4f} (group share 1/3)")
+    if byz < HIER_CAPTURE_MIN:
+        problems.append(f"hier-captured byz_mass {byz:.4f} < "
+                        f"{HIER_CAPTURE_MIN} — the poisoned subtree "
+                        "should have flowed through the averaging outer")
+
+    rejected = run("hier-rejected", n_workers=35, f=7, hier_g=7,
+                   hier_f_inner=1, hier_f_outer=1, hier_outer_rule="krum",
+                   hier_enforce=False)
+    byz = float(np.mean(rejected.trace["byz_mass"][post]))
+    gsel0 = float(np.mean(rejected.trace["group_selection"][post, 0]))
+    gsusp0 = rejected.trace["group_suspicion"][post, 0]
+    print(f"[sim] hier rejected (robust outer): byz_mass={byz:.4f} "
+          f"group0_selection={gsel0:.4f} "
+          f"group0_suspicion={np.round(gsusp0, 3).tolist()}")
+    if byz > ROBUST_BYZ_MASS:
+        problems.append(f"hier-rejected byz_mass {byz:.4f} > "
+                        f"{ROBUST_BYZ_MASS} — krum outer should drop the "
+                        "captured group aggregate")
+    if gsel0 > ROBUST_BYZ_MASS:
+        problems.append(f"hier-rejected group 0 outer selection mass "
+                        f"{gsel0:.4f} > {ROBUST_BYZ_MASS} — the poisoned "
+                        "subtree's aggregate should never be picked")
+    if not np.all(np.diff(gsusp0) > 0):
+        problems.append(f"hier-rejected group 0 suspicion not strictly "
+                        f"rising under attack: {gsusp0.tolist()}")
+
+    for p in problems:
+        print(f"[sim] SMOKE FAILED: {p}", file=sys.stderr)
+    if not problems:
+        print("[sim] --smoke --hier OK: within-budget hierarchy bounded, "
+              "under-provisioned subtree captured through an averaging "
+              "outer, robust outer rejects it with group 0 at zero "
+              "selection mass and rising suspicion")
+    return 1 if problems else 0
+
+
 def main(argv: Optional[Tuple[str, ...]] = None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
@@ -195,6 +303,11 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
     ap.add_argument("--f", type=int, default=2)
     ap.add_argument("--trainer", default="stacked",
                     choices=("stacked", "stream_block", "stream_global"))
+    ap.add_argument("--hier", default=None, metavar="SPEC",
+                    help="two-level grouped aggregation (repro.hier), e.g. "
+                         "'g=7' or 'g=7,f_inner=1,f_outer=0,enforce=0'; "
+                         "with --smoke runs the poisoned-subtree "
+                         "acceptance campaigns instead of the flat switch")
     ap.add_argument("--transform", action="append", default=[],
                     help="pre-aggregation transform spec (repeatable), "
                          "e.g. worker_momentum:beta=0.9")
@@ -220,7 +333,7 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
     args = ap.parse_args(argv)
 
     if args.smoke:
-        return _smoke(args)
+        return _smoke_hier(args) if args.hier else _smoke(args)
 
     if not args.phase:
         ap.error("need at least one --phase (or --smoke)")
@@ -234,7 +347,7 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
         data=DataConfig(noniid_alpha=args.noniid_alpha,
                         n_domains=args.n_domains),
         per_worker_batch=args.per_worker_batch, seq=args.seq, lr=args.lr,
-        seed=args.seed)
+        seed=args.seed, **_hier_fields(args))
     print(f"[sim] {sc.name}: {sc.schedule.describe()} gar={sc.gar} "
           f"n={sc.n_workers} f={sc.f} trainer={sc.trainer}")
     result = run_campaign(sc, ckpt_dir=args.ckpt_dir, resume=args.resume,

@@ -48,6 +48,14 @@ def main(argv=None) -> int:
                          "payload_flip are wire-level attacks)")
     ap.add_argument("--trainer", default="stacked",
                     choices=("stacked", "stream_block", "stream_global"))
+    ap.add_argument("--hier", default=None, metavar="SPEC",
+                    help="two-level grouped aggregation (repro.hier): "
+                         "'g=64' groups workers into ceil(n/64) groups, "
+                         "robust-aggregates within each, then across the "
+                         "group outputs — O(n*g) instead of O(n^2) "
+                         "selection. Optional keys: rule=, outer_rule=, "
+                         "f_inner=, f_outer=, enforce=0 "
+                         "(DESIGN.md §11)")
     ap.add_argument("--mesh", default="none",
                     choices=("none", "host", "production"),
                     help="run aggregation mesh-native (DESIGN.md §10): "
@@ -82,8 +90,18 @@ def main(argv=None) -> int:
         mesh = make_host_mesh() if args.mesh == "host" \
             else make_production_mesh()
 
+    hier = None
+    if args.hier:
+        from repro.hier import GroupConfig
+        hier = GroupConfig.from_spec(args.hier, rule=args.gar)
+        budget = hier.budget(args.workers, args.f)
+        print(f"[train] hier: {budget.n_groups} groups "
+              f"{list(budget.group_sizes)} f_inner={budget.f_inner} "
+              f"f_outer={budget.f_outer} inner={hier.rule} "
+              f"outer={hier.resolve_outer_rule(budget)}")
     rcfg = RobustConfig(n_workers=args.workers, f=args.f, gar=args.gar,
-                        use_pallas=args.use_pallas)
+                        use_pallas=args.use_pallas,
+                        grouped=hier is not None)
     key = jax.random.key(args.seed)
     params = MD.init_model(key, cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
@@ -97,11 +115,19 @@ def main(argv=None) -> int:
               f"{'pod×data' if 'pod' in mesh.axis_names else 'data'}, "
               f"d over model)")
     if args.codec:
-        from repro.comm import wire_stats
-        ws = wire_stats(args.codec, params, n=args.workers)
-        print(f"[train] wire: {ws.bytes_per_worker:,} B/worker/step "
-              f"({ws.compression:.1f}x vs fp32, "
-              f"{ws.chunks_per_worker} chunk(s) of {ws.chunk_bytes:,} B)")
+        if hier is not None:
+            from repro.comm import hier_wire_stats
+            for ws in hier_wire_stats(args.codec, params, n=args.workers,
+                                      g=hier.g):
+                print(f"[train] wire[{ws.level}]: {ws.n} x "
+                      f"{ws.bytes_per_worker:,} B/step "
+                      f"({ws.compression:.1f}x vs fp32)")
+        else:
+            from repro.comm import wire_stats
+            ws = wire_stats(args.codec, params, n=args.workers)
+            print(f"[train] wire: {ws.bytes_per_worker:,} B/worker/step "
+                  f"({ws.compression:.1f}x vs fp32, "
+                  f"{ws.chunks_per_worker} chunk(s) of {ws.chunk_bytes:,} B)")
 
     opt = make_optimizer(args.optimizer,
                          **({"momentum": 0.9} if args.optimizer == "sgd" else {}))
@@ -117,14 +143,14 @@ def main(argv=None) -> int:
     if args.trainer == "stacked":
         step_fn = make_train_step(cfg, rcfg, opt, lr_fn, chunk_q=chunk_q,
                                   attack=args.attack, codec=args.codec,
-                                  shard_map_mesh=mesh)
+                                  shard_map_mesh=mesh, hier=hier)
     else:
         scope = "global" if args.trainer.endswith("global") else "block"
         step_fn = make_streaming_train_step(cfg, rcfg, opt, lr_fn,
                                             scope=scope, chunk_q=chunk_q,
                                             attack=args.attack,
                                             codec=args.codec,
-                                            shard_map_mesh=mesh)
+                                            shard_map_mesh=mesh, hier=hier)
     step_fn = jax.jit(step_fn)
 
     global_batch = args.workers * args.per_worker_batch

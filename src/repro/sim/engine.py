@@ -112,18 +112,28 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
     t0 = time.time()
     cfg = scenario.arch
     rcfg = RobustConfig(n_workers=scenario.n_workers, f=scenario.f,
-                        gar=scenario.gar, use_pallas=scenario.use_pallas)
+                        gar=scenario.gar, use_pallas=scenario.use_pallas,
+                        grouped=scenario.hier_g > 0)
     transforms = scenario.build_transforms()
     total_steps = scenario.schedule.total_steps
 
     key = jax.random.key(scenario.seed)
     params = MD.init_model(key, cfg)
     opt = sgd(momentum=scenario.momentum)
+    hier = scenario.hier_config()
     wire = None
     if scenario.codec is not None:
-        from repro.comm import wire_stats
-        wire = wire_stats(scenario.codec, params,
-                          n=scenario.n_workers).to_json()
+        if hier is not None:
+            # two-hop accounting: workers→leaders + leaders→server
+            from repro.comm import hier_wire_stats
+            lv0, lv1 = hier_wire_stats(scenario.codec, params,
+                                       n=scenario.n_workers,
+                                       g=scenario.hier_g)
+            wire = {"levels": [lv0.to_json(), lv1.to_json()]}
+        else:
+            from repro.comm import wire_stats
+            wire = wire_stats(scenario.codec, params,
+                              n=scenario.n_workers).to_json()
     # attack state is per-phase (seeded at each phase entry below), so the
     # cross-phase TrainerState carries astate=None between phases; the
     # error-feedback residual (like transform states) is cross-phase
@@ -131,6 +141,10 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
         opt, params, transforms, n_workers=scenario.n_workers,
         codec=scenario.codec)
     susp = TEL.init_suspicion(scenario.n_workers)
+    gsusp = None
+    if hier is not None:
+        n_groups = hier.budget(scenario.n_workers, scenario.f).n_groups
+        gsusp = TEL.init_suspicion(n_groups)
     lr_fn = warmup_cosine(scenario.lr, warmup=max(total_steps // 20, 1),
                           total_steps=total_steps)
 
@@ -150,10 +164,13 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
                 f"schedule {scenario.schedule.describe()!r}")
         if latest is not None:
             like = {"params": params, "state": tstate, "susp": susp}
+            if gsusp is not None:
+                like["gsusp"] = gsusp
             loaded = restore(ckpt_dir, latest, like,
                              key_aliases=LEGACY_STATE_ALIASES)
             params, tstate = loaded["params"], loaded["state"]
             susp = loaded["susp"]
+            gsusp = loaded.get("gsusp", gsusp)
             start_step = latest
             if verbose:
                 print(f"[sim] resumed {scenario.name} at step {latest}")
@@ -170,14 +187,14 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
             step_fn = make_train_step(
                 cfg, rcfg, opt, lr_fn, chunk_q=chunk_q, attack=phase.attack,
                 attack_f=f_eff, transforms=transforms,
-                codec=scenario.codec, telemetry=True)
+                codec=scenario.codec, telemetry=True, hier=hier)
         else:
             scope = "global" if scenario.trainer.endswith("global") else \
                 "block"
             step_fn = make_streaming_train_step(
                 cfg, rcfg, opt, lr_fn, scope=scope, chunk_q=chunk_q,
                 attack=phase.attack, attack_f=f_eff,
-                codec=scenario.codec, telemetry=True)
+                codec=scenario.codec, telemetry=True, hier=hier)
 
         astate = None
         if adaptive:
@@ -188,19 +205,23 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
         state = dataclasses.replace(tstate, astate=astate)
 
         def body(carry, xs, _step=step_fn, _pi=phase_idx):
-            p, st, sp = carry
+            p, st, sp, gsp = carry
             batch, k = xs
             p, st, m = _step(p, st, batch, k)
             sp = TEL.update_suspicion(sp, m["telemetry"]["selection"],
                                       scenario.suspicion_ema)
-            return (p, st, sp), TEL.step_record(m, sp, _pi)
+            if gsp is not None:
+                gsp = TEL.update_suspicion(
+                    gsp, m["telemetry"]["group_selection"],
+                    scenario.suspicion_ema)
+            return (p, st, sp, gsp), TEL.step_record(m, sp, _pi, gsusp=gsp)
 
         batches = _phase_batches(scenario, phase, start, mixture)
         keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
             jnp.arange(start, stop))
-        (params, state, susp), rec = jax.jit(
+        (params, state, susp, gsusp), rec = jax.jit(
             lambda c, xs: jax.lax.scan(body, c, xs))(
-                (params, state, susp), (batches, keys))
+                (params, state, susp, gsusp), (batches, keys))
         tstate = dataclasses.replace(state, astate=None)
         phase_traces.append(jax.device_get(rec))
         if verbose:
@@ -211,8 +232,10 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
                   f"honest_dev {np.mean(tr['honest_dev']):.3f} "
                   f"byz_mass {np.mean(tr['byz_mass']):.3f}", flush=True)
         if ckpt_dir:
-            save(ckpt_dir, stop,
-                 {"params": params, "state": tstate, "susp": susp})
+            ck = {"params": params, "state": tstate, "susp": susp}
+            if gsusp is not None:
+                ck["gsusp"] = gsusp
+            save(ckpt_dir, stop, ck)
 
     trace = TEL.concat_traces(phase_traces)
     summary = TEL.summarize(trace, scenario, start_step, wire=wire) \

@@ -118,6 +118,19 @@ class Scenario:
     momentum: float = 0.9
     seed: int = 0
     suspicion_ema: float = 0.9                # telemetry EMA decay
+    # hierarchical (grouped) aggregation — repro.hier, DESIGN.md §11.
+    # hier_g=0 keeps the flat path; > 0 groups workers by contiguous rows
+    # (so a phase with f >= hier_g's inner budget concentrated in rows
+    # 0..f-1 is the poisoned-subtree campaign).  hier_f_inner/hier_f_outer
+    # override the derived per-level budgets and hier_enforce=False admits
+    # budgets that do not cover the contract f — the deliberately
+    # under-provisioned capture demonstrations.
+    hier_g: int = 0
+    hier_rule: Optional[str] = None           # default: the scenario gar
+    hier_outer_rule: Optional[str] = None
+    hier_f_inner: Optional[int] = None
+    hier_f_outer: Optional[int] = None
+    hier_enforce: bool = True
 
     def __post_init__(self):
         if self.trainer not in ("stacked", "stream_block", "stream_global"):
@@ -158,9 +171,31 @@ class Scenario:
             if c.stateful and self.trainer != "stacked":
                 raise ValueError(
                     "error-feedback codecs (ef=1) need trainer='stacked'")
+            if c.stateful and self.hier_g > 0:
+                raise ValueError(
+                    "hier_g > 0 does not support error-feedback codecs "
+                    "(no residual slot at the leaders→server hop)")
+        if self.hier_g < 0:
+            raise ValueError(f"hier_g must be >= 0, got {self.hier_g}")
+        if self.hier_g > 0:
+            # fail on an infeasible per-level budget at scenario build
+            # time; split_f_budget raises with the offending level named
+            self.hier_config().budget(self.n_workers, self.f)
 
     def phase_f(self, phase: AttackPhase) -> int:
         return self.f if phase.f is None else phase.f
+
+    def hier_config(self):
+        """The ``repro.hier.GroupConfig`` this scenario asks for (or None)."""
+        if self.hier_g <= 0:
+            return None
+        from repro.hier import GroupConfig
+        return GroupConfig(g=self.hier_g,
+                           rule=self.hier_rule or self.gar,
+                           outer_rule=self.hier_outer_rule,
+                           f_inner=self.hier_f_inner,
+                           f_outer=self.hier_f_outer,
+                           enforce_budget=self.hier_enforce)
 
     def build_transforms(self):
         """Resolve transform spec strings into Transform instances."""
@@ -201,6 +236,13 @@ class Scenario:
                  "f": self.phase_f(p), "stale_workers": list(p.stale_workers)}
                 for p in self.schedule.phases
             ],
+            **({"hier": {"g": self.hier_g,
+                         "rule": self.hier_rule or self.gar,
+                         "outer_rule": self.hier_outer_rule,
+                         "f_inner": self.hier_f_inner,
+                         "f_outer": self.hier_f_outer,
+                         "enforce": self.hier_enforce}}
+               if self.hier_g > 0 else {}),
         }
 
 

@@ -35,11 +35,15 @@ def update_suspicion(susp: Array, selection: Array, ema: float) -> Array:
 
 
 def step_record(metrics: Dict[str, Any], susp: Array,
-                phase_idx: int) -> Dict[str, Array]:
+                phase_idx: int, gsusp: "Array | None" = None
+                ) -> Dict[str, Array]:
     """Assemble one scan output slot from the trainer metrics.
 
     Everything is a fixed-shape fp32/int32 array so ``lax.scan`` stacks the
-    records into the ``(steps, ...)`` campaign trace.
+    records into the ``(steps, ...)`` campaign trace.  ``gsusp`` — the
+    per-*group* suspicion EMA carried by hierarchical campaigns — rides
+    along as ``group_suspicion`` when present (the per-group selection
+    itself arrives through the diagnostics dict as ``group_selection``).
     """
     diag = metrics["telemetry"]
     rec = {
@@ -50,6 +54,8 @@ def step_record(metrics: Dict[str, Any], susp: Array,
         "suspicion": susp,
         "phase": jnp.asarray(phase_idx, jnp.int32),
     }
+    if gsusp is not None:
+        rec["group_suspicion"] = gsusp
     for k, v in diag.items():
         rec[k] = jnp.asarray(v, jnp.float32)
     return rec
@@ -110,6 +116,12 @@ def summarize(trace: Dict[str, np.ndarray], scenario,
                 trace["selection"][sl], axis=0).tolist()
         if "suspicion" in trace:
             ph["suspicion_last"] = trace["suspicion"][stop - 1].tolist()
+        if "group_selection" in trace:
+            ph["group_selection_mean"] = np.mean(
+                trace["group_selection"][sl], axis=0).tolist()
+        if "group_suspicion" in trace:
+            ph["group_suspicion_last"] = \
+                trace["group_suspicion"][stop - 1].tolist()
         if wire is not None:
             ph["wire"] = wire
         phases.append(ph)
