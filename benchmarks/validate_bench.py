@@ -21,7 +21,12 @@ the payload's ``schema`` field:
   ``benchmarks/hier_scale.py``: wherever n ≥ 1024 the flat path must be
   skipped-as-infeasible or ≥ 5× slower than the grouped path, and the
   grouped column must grow subquadratically in n (the O(n·g) vs O(n²)
-  ordering gate).
+  ordering gate);
+* analysis (``analysis.v1``) — the static-contract report from
+  ``repro.launch.analyze``: zero committed lint violations, every
+  sharding contract proven, kernel estimates present at the committed
+  grid points, the d=1e6 fused_select cliff flagged grid-bound, and the
+  predicted fused-vs-XLA crossover within 2× of the dispatch table.
 
 Fails (exit 1) when a file is missing, is not JSON, or deviates from its
 schema.
@@ -48,6 +53,9 @@ COMM_FIELDS = ("wire_bytes", "bytes_per_worker", "us_per_call",
 COMM_ORDER = ("fp32", "bf16", "qsgd:bits=8")   # strictly decreasing bytes
 ACCURACY_SCHEMA = "accuracy.v1"
 ACCURACY_FIELDS = ("acc_mean", "acc_std")
+ANALYSIS_SCHEMA = "analysis.v1"
+ANALYSIS_SECTIONS = ("lint", "contracts", "analysis")
+ANALYSIS_KERNELS = ("fused_select", "pairwise_stats", "dequant_stats")
 HIER_SCHEMA = "hier.v1"
 HIER_FIELDS = ("us_per_call", "n_groups", "f_inner", "f_outer",
                "bytes_per_level")
@@ -264,6 +272,55 @@ def _check_hier(path: str, results: dict) -> "list[str]":
     return problems
 
 
+def _check_analysis(path: str, results: dict) -> "list[str]":
+    """The static-contract report: ships only when everything is proven."""
+    problems = []
+    missing = [s for s in ANALYSIS_SECTIONS if s not in results]
+    if missing:
+        return _fail(f"{path}: missing section(s) {missing}")
+    for v in results["lint"].get("violations", [{"rule": "?"}]):
+        problems.append(f"lint violation committed: {v.get('rule')} "
+                        f"{v.get('path')}:{v.get('line')}: {v.get('msg')}")
+    contracts = results["contracts"]
+    if not contracts:
+        problems.append("no contracts audited")
+    for name, cell in contracts.items():
+        if cell.get("status") != "proven":
+            problems.append(f"contract {name}: status "
+                            f"{cell.get('status')!r}, want 'proven' "
+                            f"({'; '.join(cell.get('violations', []))})")
+    analysis = results["analysis"]
+    for kernel in ANALYSIS_KERNELS:
+        grid = analysis.get("kernels", {}).get(kernel)
+        if not grid:
+            problems.append(f"missing kernel estimates for {kernel!r}")
+            continue
+        for key, est in grid.items():
+            if not _KEY_RE.match(key):
+                problems.append(f"{kernel}: bad grid key {key!r}")
+            for f in ("d_tile", "grid_steps", "vmem_bytes",
+                      "hbm_read_bytes"):
+                v = est.get(f)
+                if not isinstance(v, int) or v <= 0:
+                    problems.append(f"{kernel}/{key}: {f} must be a "
+                                    f"positive int, got {v!r}")
+    cliff = analysis.get("cliff", {})
+    if not cliff.get("holds"):
+        problems.append("vmem cliff diagnosis does not hold: "
+                        f"{cliff.get('detail')!r}")
+    d1e6 = analysis.get("kernels", {}).get("fused_select", {}) \
+        .get("n=15,d=1000000")
+    if not (d1e6 and d1e6.get("grid_bound") and d1e6.get("over_budget")):
+        problems.append("fused_select n=15,d=1e6 not flagged grid-bound "
+                        "+ over-budget — the measured cliff is unexplained")
+    for key, x in analysis.get("crossover", {}).items():
+        r = x.get("ratio")
+        if not (isinstance(r, (int, float)) and 0.5 <= r <= 2.0):
+            problems.append(f"crossover {key}: predicted/measured ratio "
+                            f"{r!r} outside [0.5, 2]")
+    return problems
+
+
 def check(path: str) -> "list[str]":
     """Return a list of problems (empty = valid)."""
     try:
@@ -290,6 +347,8 @@ def check(path: str) -> "list[str]":
         problems += _check_accuracy(path, results)
     elif schema == HIER_SCHEMA:
         problems += _check_hier(path, results)
+    elif schema == ANALYSIS_SCHEMA:
+        problems += _check_analysis(path, results)
     elif schema == AGG_TIME_SCHEMA or schema is None:
         # None: legacy agg_time files predate the schema tag — still
         # validate the grid, with the missing-field problem noted above
@@ -297,7 +356,7 @@ def check(path: str) -> "list[str]":
     else:
         problems.append(
             f"{path}: unrecognised schema {schema!r}; known: "
-            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA, HIER_SCHEMA]}")
+            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA, HIER_SCHEMA, ANALYSIS_SCHEMA]}")
     return problems
 
 

@@ -1,0 +1,385 @@
+"""AST lint enforcing the repo's static coding contracts (DESIGN.md §12).
+
+Five rule families, each a shipped-bug class or a contract the rest of the
+stack silently depends on:
+
+* **R001 import-time-device-work** — no ``jnp.*`` / ``jax.random.*`` /
+  device calls at module import.  Import must be side-effect free: the
+  test harness, ``launch/dryrun.py`` and ``launch/analyze.py`` all set
+  platform/device flags *before* importing repro modules, which only
+  works if importing a module never touches the backend.  (Attribute
+  access like ``jax.Array`` or ``jnp.inf`` is fine — only *calls* run
+  device work.)
+* **R002 tracer-python-branch** — no Python ``if``/``while`` whose test
+  calls into ``jnp``/``jax.lax``/``jax.nn``: under jit the result is a
+  tracer and the branch either crashes or silently bakes one side into
+  the trace.  Use ``jnp.where`` / ``lax.cond``.  Static dtype predicates
+  (``jnp.issubdtype`` etc.) are exempt — they run on dtypes, not values.
+* **R003 bad-registry-spec** — spec-string literals handed to the
+  attack/codec/hier registries (``get_attack("sign_flip:scale=3.0")``,
+  ``attack=...``/``codec=...``/``hier=...`` keyword literals) are parsed
+  and bound against the *real* registry signatures at lint time, so a
+  typo'd kwarg fails in CI instead of at step time.
+* **R004 state-integer-index** — ``TrainerState`` is a registered
+  dataclass accessed by field name; positional indexing (``state[0]``)
+  silently breaks every time a field is added (the PR-5 unification
+  exists precisely so slots can move).
+* **R005 jit-static-config** — functions jitted at definition site must
+  declare their bool/str config parameters in ``static_argnames``, and
+  must not resolve the backend (``jax.default_backend()`` /
+  ``jax.devices()``) inside the traced body — the PR-2 ``interpret``
+  bug: a backend choice baked into a trace goes silently stale when the
+  default backend changes.
+
+``lint_source`` lints one source string; ``lint_paths`` walks files and
+directories.  Both are pure AST passes — linted code is never imported.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+RULE_IDS = ("R001", "R002", "R003", "R004", "R005")
+
+#: calls that touch devices / the backend when *executed* (R001 at module
+#: scope, R005 inside jitted bodies for the backend-resolving subset)
+_DEVICE_CALL_PREFIXES = ("jnp.", "jax.numpy.", "jax.random.")
+_DEVICE_CALLS = frozenset({
+    "jax.devices", "jax.local_devices", "jax.device_count",
+    "jax.local_device_count", "jax.device_put", "jax.make_mesh",
+    "jax.default_backend", "jax.eval_shape",
+})
+_BACKEND_CALLS = frozenset({
+    "jax.default_backend", "jax.devices", "jax.local_devices",
+    "jax.device_count", "jax.local_device_count",
+})
+#: value-free dtype predicates: safe to branch on in Python (R002 exempt)
+_STATIC_PREDICATES = frozenset({
+    "jnp.issubdtype", "jax.numpy.issubdtype", "jnp.result_type",
+    "jnp.promote_types", "jnp.dtype", "jnp.finfo", "jnp.iinfo",
+})
+_TRACER_CALL_PREFIXES = ("jnp.", "jax.numpy.", "jax.lax.", "jax.nn.")
+#: registry getters whose first positional string literal is a spec
+_SPEC_GETTERS = {"get_attack": "attack", "get_wire_attack": "attack",
+                 "get_adaptive": "attack", "get_codec": "codec"}
+#: keyword names carrying spec literals anywhere in the tree
+_SPEC_KWARGS = {"attack": "attack", "codec": "codec", "hier": "hier"}
+_STATE_NAMES = frozenset({"state", "tstate", "trainer_state"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.key' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _walk_pruned(node: ast.AST, prune: Tuple[type, ...]) -> Iterable[ast.AST]:
+    """ast.walk that does not descend into ``prune`` node types."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if not isinstance(child, prune):
+            stack.extend(ast.iter_child_nodes(child))
+
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+# ------------------------------------------------------------------ R001
+def _rule_import_time(tree: ast.Module, path: str) -> List[Violation]:
+    out = []
+
+    def scan_body(body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue                   # bodies run at call time
+            if isinstance(stmt, ast.ClassDef):
+                scan_body(stmt.body)       # class bodies run at import
+                continue
+            for node in _walk_pruned(stmt, _FUNC_NODES):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _dotted(node.func)
+                if name is None:
+                    continue
+                if name.startswith(_DEVICE_CALL_PREFIXES) \
+                        or name in _DEVICE_CALLS:
+                    out.append(Violation(
+                        "R001", path, node.lineno,
+                        f"device/array work at module import: {name}() — "
+                        "hoist into a function (imports must be "
+                        "side-effect free)"))
+
+    scan_body(tree.body)
+    return out
+
+
+# ------------------------------------------------------------------ R002
+def _rule_tracer_branch(tree: ast.Module, path: str) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            continue
+        for sub in ast.walk(node.test):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = _dotted(sub.func)
+            if name is None or name in _STATIC_PREDICATES:
+                continue
+            if name.startswith(_TRACER_CALL_PREFIXES):
+                kw = "while" if isinstance(node, ast.While) else "if"
+                out.append(Violation(
+                    "R002", path, node.lineno,
+                    f"Python `{kw}` branches on {name}(...) — a tracer "
+                    "under jit; use jnp.where / lax.cond"))
+    return out
+
+
+# ------------------------------------------------------------------ R003
+def _check_spec(kind: str, spec: str) -> Optional[str]:
+    """Bind one spec literal against the real registries.
+
+    Returns an error message, or None when the spec is valid (or when the
+    registries cannot be imported — the lint must not require jax)."""
+    try:
+        if kind == "attack":
+            if spec in ("", "none"):
+                return None
+            from repro.core import attacks as ATK
+            errors = []
+            for getter in (ATK.get_attack, ATK.get_wire_attack,
+                           ATK.get_adaptive):
+                try:
+                    getter(spec)
+                    return None
+                except Exception as e:          # noqa: BLE001 — collect
+                    errors.append(str(e))
+            return errors[0]
+        if kind == "codec":
+            if spec in ("", "none"):
+                return None
+            from repro.comm import codecs as CC
+            try:
+                CC.get_codec(spec)
+                return None
+            except Exception as e:              # noqa: BLE001
+                return str(e)
+        if kind == "hier":
+            from repro.hier import GroupConfig
+            try:
+                GroupConfig.from_spec(spec)
+                return None
+            except Exception as e:              # noqa: BLE001
+                return str(e)
+    except ImportError:
+        return None
+    return None
+
+
+def _rule_registry_specs(tree: ast.Module, path: str) -> List[Violation]:
+    out = []
+
+    def check(kind: str, spec: str, lineno: int) -> None:
+        err = _check_spec(kind, spec)
+        if err is not None:
+            out.append(Violation(
+                "R003", path, lineno,
+                f"{kind} spec {spec!r} does not bind against the "
+                f"registry: {err}"))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func) or ""
+        tail = name.rsplit(".", 1)[-1]
+        if tail in _SPEC_GETTERS and node.args \
+                and isinstance(node.args[0], ast.Constant) \
+                and isinstance(node.args[0].value, str):
+            check(_SPEC_GETTERS[tail], node.args[0].value, node.lineno)
+        if tail == "from_spec" and node.args \
+                and isinstance(node.args[0], ast.Constant) \
+                and isinstance(node.args[0].value, str) \
+                and "g=" in node.args[0].value:
+            check("hier", node.args[0].value, node.lineno)
+        for kw in node.keywords:
+            if kw.arg in _SPEC_KWARGS \
+                    and isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, str):
+                check(_SPEC_KWARGS[kw.arg], kw.value.value, kw.value.lineno)
+    return out
+
+
+# ------------------------------------------------------------------ R004
+def _rule_state_index(tree: ast.Module, path: str) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Subscript):
+            continue
+        base = node.value
+        name = base.id if isinstance(base, ast.Name) else (
+            base.attr if isinstance(base, ast.Attribute) else None)
+        if name not in _STATE_NAMES:
+            continue
+        idx = node.slice
+        if isinstance(idx, ast.UnaryOp) and isinstance(idx.op, ast.USub):
+            idx = idx.operand
+        if isinstance(idx, ast.Constant) and isinstance(idx.value, int) \
+                and not isinstance(idx.value, bool):
+            out.append(Violation(
+                "R004", path, node.lineno,
+                f"TrainerState indexed positionally ({name}[...]) — "
+                "access fields by name; slots move when the dataclass "
+                "grows"))
+    return out
+
+
+# ------------------------------------------------------------------ R005
+def _static_names_from(value: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    if isinstance(value, ast.Constant) and isinstance(value.value, str):
+        names.add(value.value)
+    elif isinstance(value, (ast.Tuple, ast.List)):
+        for el in value.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                names.add(el.value)
+    return names
+
+
+def _jit_decorator(dec: ast.AST) -> Optional[Set[str]]:
+    """static_argnames of a jit decorator, or None if not a jit."""
+    if _dotted(dec) == "jax.jit":
+        return set()
+    if not isinstance(dec, ast.Call):
+        return None
+    fname = _dotted(dec.func)
+    if fname == "jax.jit":
+        target = dec
+    elif fname in ("functools.partial", "partial") and dec.args \
+            and _dotted(dec.args[0]) == "jax.jit":
+        target = dec
+    else:
+        return None
+    names: Set[str] = set()
+    for kw in target.keywords:
+        if kw.arg == "static_argnames":
+            names |= _static_names_from(kw.value)
+    return names
+
+
+def _config_typed(arg: ast.arg, default: Optional[ast.AST]) -> bool:
+    """bool/str-annotated or bool/str-defaulted: a config, not an array."""
+    ann = arg.annotation
+    if ann is not None:
+        ann_name = _dotted(ann) or (
+            ann.value if isinstance(ann, ast.Constant) else None)
+        if ann_name in ("bool", "str"):
+            return True
+    if isinstance(default, ast.Constant) \
+            and isinstance(default.value, (bool, str)):
+        return True
+    return False
+
+
+def _rule_jit_static(tree: ast.Module, path: str) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        static: Optional[Set[str]] = None
+        for dec in node.decorator_list:
+            s = _jit_decorator(dec)
+            if s is not None:
+                static = s if static is None else static | s
+        if static is None:
+            continue
+        a = node.args
+        pos_defaults = [None] * (len(a.args) - len(a.defaults)) \
+            + list(a.defaults)
+        for arg, default in list(zip(a.args, pos_defaults)) \
+                + list(zip(a.kwonlyargs, a.kw_defaults)):
+            if arg.arg in static:
+                continue
+            if _config_typed(arg, default):
+                out.append(Violation(
+                    "R005", path, arg.lineno,
+                    f"jit'd {node.name}(): config parameter "
+                    f"{arg.arg!r} (bool/str) is traced — declare it in "
+                    "static_argnames or it bakes stale into the trace"))
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) \
+                    and (_dotted(sub.func) or "") in _BACKEND_CALLS:
+                out.append(Violation(
+                    "R005", path, sub.lineno,
+                    f"jit'd {node.name}() resolves the backend inside "
+                    f"the trace ({_dotted(sub.func)}()) — resolve "
+                    "outside jit and pass it as a static argument "
+                    "(the PR-2 interpret bug class)"))
+    return out
+
+
+#: rule id -> one-line description (R000 is the parse-failure sentinel)
+RULES = {
+    "R000": "file must parse",
+    "R001": "no jnp/device work at module import time",
+    "R002": "no Python branching on tracer-valued predicates",
+    "R003": "registry spec strings must resolve against the registry",
+    "R004": "TrainerState is accessed by field name, never by index",
+    "R005": "jit'd config/flag params must be declared static",
+}
+
+
+# ------------------------------------------------------------------ driver
+def lint_source(src: str, path: str = "<string>") -> List[Violation]:
+    """Lint one source string; returns violations sorted by position."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Violation("R000", path, e.lineno or 0,
+                          f"syntax error: {e.msg}")]
+    out: List[Violation] = []
+    out += _rule_import_time(tree, path)
+    out += _rule_tracer_branch(tree, path)
+    out += _rule_registry_specs(tree, path)
+    out += _rule_state_index(tree, path)
+    out += _rule_jit_static(tree, path)
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_paths(paths: Iterable[str]) -> List[Violation]:
+    """Lint files and (recursively) directories of ``*.py`` files."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files += [os.path.join(root, n) for n in sorted(names)
+                          if n.endswith(".py")]
+        else:
+            files.append(p)
+    out: List[Violation] = []
+    for fp in files:
+        with open(fp, encoding="utf-8") as fh:
+            out += lint_source(fh.read(), fp)
+    return out

@@ -1,0 +1,236 @@
+"""Static per-tile VMEM / HBM-traffic estimator for the Pallas kernels.
+
+Mirrors the exact BlockSpec/grid arithmetic of ``kernels/ops.py`` — the
+padding, the ``autotune_d_tile`` budget model and ``_select_scratch_rows``
+are *called*, not re-derived, so the estimate and the autotuner can never
+drift apart silently (that agreement is the §12 cross-check).
+
+For each kernel × (n, d) point the estimator emits the chosen ``d_tile``,
+grid depth, the per-grid-step VMEM working set (double-buffered operand
+tiles + scratch + fixed residents, the same model the autotuner budgets
+against) and the HBM read/write traffic, plus two diagnoses:
+
+* ``over_budget`` — the *full-d* working set exceeds the VMEM budget, so
+  the kernel must tile (always true for the benchmark-scale stacks);
+* ``grid_bound`` — the grid is deeper than :data:`GRID_STEPS_THRESHOLD`,
+  the regime where per-step dispatch overhead and the fused kernel's
+  re-read of its replicated extraction operands dominate the byte
+  savings.  This is the measured BENCH_agg_time.json d=1e6 cliff: at
+  n=15 the fused kernel wins at d=1e5 (13 grid steps) and loses 3.9× at
+  d=1e6 (123 steps) while moving only 10× the bytes.
+
+:func:`predicted_crossover` turns the threshold into a per-n numel
+crossover (``threshold × d_tile``) and reports the ratio against the
+*measured* dispatch table (``kernels/dispatch.py``) — the two must agree
+within 2× for the static model to be considered calibrated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.kernels import dispatch as kdispatch
+from repro.kernels import ops
+
+#: grid depth past which the fused select kernel is dispatch/re-read bound
+#: rather than bandwidth bound: the geometric midpoint of the measured
+#: bracketing grid depths at n=15 — 13 steps (d=1e5, fused wins) and
+#: 123 steps (d=1e6, fused loses 3.9×): sqrt(13·123) ≈ 40.
+GRID_STEPS_THRESHOLD = 40
+
+_PAYLOAD_ITEMSIZE = {"int8": 1, "bfloat16": 2}
+
+
+def f_for_bench(n: int) -> int:
+    """The benchmark grid's f convention (benchmarks/agg_time.py)."""
+    return max(1, (n - 3) // 4)
+
+
+def _pad(x: int, m: int) -> int:
+    return x + (-x) % m
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    """Static footprint of one kernel launch at one (n, d) point."""
+
+    kernel: str
+    n: int
+    d: int
+    d_tile: int
+    grid_steps: int
+    vmem_bytes: int          # per-grid-step working set
+    vmem_budget: int
+    hbm_read_bytes: int
+    hbm_write_bytes: int
+    over_budget: bool        # full-d working set > budget (must tile)
+    tile_over_budget: bool   # even a single tile busts the budget
+    grid_bound: bool         # grid deeper than GRID_STEPS_THRESHOLD
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _finish(kernel: str, n: int, d: int, d_tile: int, per_lane_rows: int,
+            fixed_bytes: int, read_fn, write_bytes: int) -> KernelEstimate:
+    """Assemble the estimate from the autotuner's own cost model.
+
+    ``per_lane_rows`` is the 4-byte-row count per lane of d_tile exactly
+    as ``autotune_d_tile`` sees it (2×rows double-buffered operands +
+    scratch rows); ``read_fn(d_pad, grid)`` gives the HBM read bytes.
+    """
+    grid = -(-d // d_tile)
+    d_pad = grid * d_tile
+    vmem = per_lane_rows * 4 * d_tile + fixed_bytes
+    vmem_full = per_lane_rows * 4 * d_pad + fixed_bytes
+    return KernelEstimate(
+        kernel=kernel, n=n, d=d, d_tile=d_tile, grid_steps=grid,
+        vmem_bytes=vmem, vmem_budget=ops.VMEM_BUDGET_BYTES,
+        hbm_read_bytes=read_fn(d_pad, grid), hbm_write_bytes=write_bytes,
+        over_budget=vmem_full > ops.VMEM_BUDGET_BYTES,
+        tile_over_budget=vmem > ops.VMEM_BUDGET_BYTES,
+        grid_bound=grid > GRID_STEPS_THRESHOLD)
+
+
+def estimate_fused_select(n: int, d: int, *, f: Optional[int] = None,
+                          d_tile: Optional[int] = None) -> KernelEstimate:
+    """Fused Bulyan apply: (n, d) stack + two (θ, n) plans -> (d,)."""
+    f = f_for_bench(n) if f is None else f
+    theta = n - 2 * f - 2
+    if theta < 1:
+        raise ValueError(f"n={n}, f={f}: theta={theta} < 1")
+    n_pad = _pad(n, 8)
+    scratch = ops._select_scratch_rows(theta)
+    fixed = 2 * theta * n_pad * 4
+    if d_tile is None:
+        d_tile = ops.autotune_d_tile(n_pad, d, scratch_rows=scratch,
+                                     fixed_bytes=fixed)
+    # x tile streamed per step (read once); the replicated (θ, n) weight
+    # pair is re-fetched every grid step (constant index_map) — the
+    # re-read term that, with dispatch overhead, produces the deep-grid
+    # cliff; the (1, d_tile) output writes back once per step.
+    return _finish(
+        "fused_select", n, d, d_tile,
+        per_lane_rows=2 * n_pad + scratch, fixed_bytes=fixed,
+        read_fn=lambda d_pad, grid: n_pad * d_pad * 4 + grid * fixed,
+        write_bytes=_pad(d, d_tile) * 4)
+
+
+def estimate_pairwise_stats(n: int, d: int, *,
+                            d_tile: Optional[int] = None) -> KernelEstimate:
+    """Single-pass stats: (n, d) -> ((n, n) raw sq-dists, (n,) norms)."""
+    n_pad = _pad(n, 8)
+    fixed = n_pad * (n_pad + 8) * 4       # resident (n, n) acc + norms row
+    if d_tile is None:
+        d_tile = ops.autotune_d_tile(n_pad, d, fixed_bytes=fixed)
+    return _finish(
+        "pairwise_stats", n, d, d_tile,
+        per_lane_rows=2 * n_pad, fixed_bytes=fixed,
+        read_fn=lambda d_pad, grid: n_pad * d_pad * 4,
+        write_bytes=(n_pad * n_pad + n_pad) * 4)
+
+
+def estimate_dequant_stats(n: int, d: int, *, dtype: str = "int8",
+                           d_tile: Optional[int] = None) -> KernelEstimate:
+    """Fused dequantize→stats on an (n, d) int8/bf16 payload."""
+    if dtype not in _PAYLOAD_ITEMSIZE:
+        raise ValueError(f"payload dtype must be one of "
+                         f"{sorted(_PAYLOAD_ITEMSIZE)}, got {dtype!r}")
+    item = _PAYLOAD_ITEMSIZE[dtype]
+    n_pad = _pad(n, 8)
+    fixed = n_pad * (n_pad + 8) * 4
+    if d_tile is None:
+        # same autotune call the wrapper makes: the tile is budgeted for
+        # the *decoded* fp32 rows so the accumulation order (and bitwise
+        # parity with decode-then-pairwise_stats) is preserved (§9)
+        d_tile = ops.autotune_d_tile(n_pad, d, fixed_bytes=fixed)
+    # payload tiles stream at the narrow itemsize; the widened fp32 rows
+    # live only in VMEM (that is the point of the kernel), modelled by
+    # the same 2×n_pad fp32 rows the autotuner budgets
+    return _finish(
+        "dequant_stats", n, d, d_tile,
+        per_lane_rows=2 * n_pad, fixed_bytes=fixed,
+        read_fn=lambda d_pad, grid: n_pad * d_pad * item + n_pad * 4,
+        write_bytes=(n_pad * n_pad + n_pad) * 4)
+
+
+_ESTIMATORS = {
+    "fused_select": estimate_fused_select,
+    "pairwise_stats": estimate_pairwise_stats,
+    "dequant_stats": estimate_dequant_stats,
+}
+
+
+def estimate(kernel: str, n: int, d: int, **kw) -> KernelEstimate:
+    if kernel not in _ESTIMATORS:
+        raise ValueError(f"unknown kernel {kernel!r}; "
+                         f"known: {sorted(_ESTIMATORS)}")
+    return _ESTIMATORS[kernel](n, d, **kw)
+
+
+def predicted_crossover(n: int, *, f: Optional[int] = None) -> Dict:
+    """Static fused-vs-XLA crossover numel for one n, vs the measured one.
+
+    The asymptotic tile (d → ∞) times the grid-bound threshold gives the
+    numel past which the fused kernel is predicted to lose; the measured
+    counterpart is ``kernels/dispatch.py``'s table.  ``ratio`` is
+    predicted/measured — within [0.5, 2] the static model matches the
+    benchmark.
+    """
+    est = estimate_fused_select(n, 10 ** 9, f=f)     # asymptotic tile
+    predicted = GRID_STEPS_THRESHOLD * est.d_tile
+    measured = kdispatch.FUSED_MAX_NUMEL.get(
+        n, kdispatch.DEFAULT_FUSED_MAX_NUMEL)
+    return {"n": n, "d_tile": est.d_tile,
+            "grid_threshold": GRID_STEPS_THRESHOLD,
+            "predicted_numel": predicted, "measured_numel": measured,
+            "ratio": predicted / measured if measured else math.inf}
+
+
+def bench_points(bench_results: dict, row: str = "multi_bulyan[fused]"
+                 ) -> List[Dict]:
+    """The committed (n, d) grid points of one BENCH_agg_time.json row."""
+    pts = []
+    for key, us in sorted(bench_results.get(row, {}).items()):
+        kv = dict(p.split("=") for p in key.split(","))
+        pts.append({"key": key, "n": int(kv["n"]), "d": int(kv["d"]),
+                    "us_per_call": us})
+    return pts
+
+
+def diagnose_cliff(bench_results: dict) -> Dict:
+    """Re-derive the measured d=1e6 cliff as a grid-overhead diagnosis.
+
+    Estimates every committed ``multi_bulyan[fused]`` point, calibrates
+    an implied bytes-per-µs over the *non-grid-bound* points (geometric
+    mean), and reports each point's measured-vs-traffic-implied slowdown.
+    The cliff claim holds when every grid-bound point runs ≥ 2× slower
+    than its traffic implies and every in-budget point is within 2×.
+    """
+    pts = bench_points(bench_results)
+    if not pts:
+        return {"points": [], "holds": False,
+                "detail": "no multi_bulyan[fused] row in benchmark"}
+    for p in pts:
+        est = estimate_fused_select(p["n"], p["d"])
+        p["estimate"] = est.to_json()
+        p["bytes"] = est.hbm_read_bytes + est.hbm_write_bytes
+    calib = [p for p in pts if not p["estimate"]["grid_bound"]]
+    if not calib:
+        return {"points": pts, "holds": False,
+                "detail": "no non-grid-bound calibration points"}
+    log_bw = sum(math.log(p["bytes"] / p["us_per_call"]) for p in calib) \
+        / len(calib)
+    bytes_per_us = math.exp(log_bw)
+    holds = True
+    for p in pts:
+        implied = p["us_per_call"] * bytes_per_us
+        p["traffic_slowdown"] = implied / p["bytes"]
+        ok = (p["traffic_slowdown"] >= 2.0) if p["estimate"]["grid_bound"] \
+            else (0.5 <= p["traffic_slowdown"] <= 2.0)
+        p["consistent"] = ok
+        holds = holds and ok
+    return {"points": pts, "bytes_per_us": bytes_per_us, "holds": holds,
+            "detail": "grid-bound points run >=2x slower than their "
+                      "HBM traffic implies; in-budget points within 2x"}

@@ -1,0 +1,3 @@
+"""R000 fixture: the file must not even parse."""
+def broken(:
+    pass

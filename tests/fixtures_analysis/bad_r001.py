@@ -1,0 +1,12 @@
+"""R001 fixture: device/jnp work at module import time."""
+import jax
+import jax.numpy as jnp
+
+SCALE = jnp.sqrt(jnp.asarray(2.0))       # R001: jnp call at import
+N_DEV = jax.device_count()               # R001: backend query at import
+NOISE = jax.random.normal(jax.random.key(0), (4,))   # R001
+
+
+def fine():
+    # inside a function is fine — only import-time work is flagged
+    return jnp.zeros((2,))

@@ -1,0 +1,24 @@
+"""R002 fixture: Python branching on tracer-valued predicates."""
+import jax.numpy as jnp
+
+
+def clip_bad(x, lim):
+    if jnp.linalg.norm(x) > lim:         # R002: tracer in `if`
+        return x * 0.5
+    return x
+
+
+def loop_bad(x):
+    while jnp.any(x > 0):                # R002: tracer in `while`
+        x = x - 1
+    return x
+
+
+def ternary_bad(x):
+    return 0.0 if jnp.sum(x) > 1 else x  # R002: tracer in IfExp
+
+
+def fine(x):
+    if jnp.issubdtype(x.dtype, jnp.floating):   # static predicate: allowed
+        return x
+    return x.astype(jnp.float32)

@@ -1,0 +1,11 @@
+"""R003 fixture: registry spec strings that do not resolve."""
+from repro.core import attacks as ATK
+from repro.comm import codecs as CC
+
+
+def bad_attack():
+    return ATK.get_attack("definitely_not_an_attack")   # R003
+
+
+def bad_codec_kwarg(make_step):
+    return make_step(codec="qsgd:bits=nope")            # R003: bad param

@@ -1,0 +1,12 @@
+"""R005 fixture: jit'd config/flag params not declared static."""
+import jax
+
+
+@jax.jit
+def step_bad(x, use_pallas=False):       # R005: bool flag traced
+    return x
+
+
+@jax.jit
+def mode_bad(x, mode: str = "fast"):     # R005: str config traced
+    return x

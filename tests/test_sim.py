@@ -316,3 +316,26 @@ def test_campaign_checkpoint_resume_replays_tail(tmp_path):
                                    rtol=0, atol=1e-6, err_msg=k)
     ph = resumed.summary["phases"]
     assert len(ph) == 1 and ph[0]["attack"] == "little_is_enough:z=2.0"
+
+
+def test_identical_phase_configs_hit_trace_cache():
+    """C204 regression for the engine: phases sharing one (attack, f)
+    config reuse a single jitted scan runner, so a 3-phase campaign
+    compiles no more than the 1-phase one (pre-fix it compiled the whole
+    step once per phase)."""
+    from repro.analysis.jaxpr_audit import CompileCounter
+
+    def make(n_phases):
+        return Scenario(
+            name=f"cache{n_phases}",
+            schedule=AttackSchedule(tuple(
+                AttackPhase(steps=2, attack="sign_flip")
+                for _ in range(n_phases))),
+            n_workers=7, f=1, gar="multi_bulyan", arch=SMALL, seq=16)
+
+    with CompileCounter() as one:
+        run_campaign(make(1))
+    with CompileCounter() as three:
+        run_campaign(make(3))
+    assert three.count > 0
+    assert three.count <= one.count, (three.count, one.count)
