@@ -16,6 +16,10 @@ per section).  Sections:
 * hier        — hierarchical vs flat aggregation at large n (repro.hier):
                 O(n·g) grouped selection where the flat O(n²) path is
                 infeasible; persists BENCH_hier.json
+* serving     — closed-loop async vs sync robust serving throughput
+                (repro.serve): QPS × staleness bound × f with the stale
+                accounting replayed through the real gradient buffer;
+                persists BENCH_serving.json
 * roofline    — §Roofline terms from the dry-run artifacts (if present)
 
 Env: BENCH_SECTIONS=agg_time,accuracy,... to select a subset (unknown
@@ -35,7 +39,7 @@ import time
 from typing import List
 
 KNOWN_SECTIONS = ("agg_time", "accuracy", "resilience", "bandwidth",
-                  "hier", "roofline")
+                  "hier", "serving", "roofline")
 
 
 def main() -> None:
@@ -56,11 +60,13 @@ def main() -> None:
                     help="accuracy JSON output path")
     ap.add_argument("--hier-json", default="BENCH_hier.json",
                     help="hierarchical scaling JSON output path")
+    ap.add_argument("--serving-json", default="BENCH_serving.json",
+                    help="closed-loop serving JSON output path")
     args = ap.parse_args()
 
-    default_sections = "agg_time,accuracy,resilience,bandwidth,hier" \
+    default_sections = "agg_time,accuracy,resilience,bandwidth,hier,serving" \
         if args.smoke else \
-        "agg_time,accuracy,resilience,bandwidth,hier,roofline"
+        "agg_time,accuracy,resilience,bandwidth,hier,serving,roofline"
     sections = os.environ.get("BENCH_SECTIONS", default_sections).split(",")
     unknown = [s for s in sections if s not in KNOWN_SECTIONS]
     if unknown:
@@ -92,6 +98,10 @@ def main() -> None:
         from benchmarks import hier_scale
         hier_scale.run(rows, smoke=args.smoke, json_path=args.hier_json)
         print(f"# hier done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if "serving" in sections:
+        from benchmarks import serving
+        serving.run(rows, smoke=args.smoke, json_path=args.serving_json)
+        print(f"# serving done ({time.time()-t0:.0f}s)", file=sys.stderr)
     if "roofline" in sections:
         from benchmarks import roofline
         derived = roofline.run(rows)

@@ -1,0 +1,90 @@
+"""Closed-loop robust serving throughput: async buffer vs lockstep rounds.
+
+The claim under test (DESIGN.md §13): with stragglers in the worker pool,
+the bounded-staleness buffer sustains strictly higher closed-loop QPS than
+the synchronous round — the sync round pays the slowest worker's latency
+every round, the async round pays a fixed admission deadline and charges
+late workers against the byzantine budget instead of the clock.
+
+Grid: staleness bound τ × byzantine contract f, both modes per cell.
+Worker latencies come from a seeded lognormal straggler model
+(``repro.serve.loadgen`` — this benchmark never sleeps); the aggregation
+compute per round is *measured* on the real jitted service round, and all
+staleness accounting (overstale slots, plan reuse, the f haircut) is
+replayed through the real ``repro.serve.buffer``.
+
+Persists ``BENCH_serving.json``
+(schema ``serving.v1``: mode row -> "tau=<t>,f=<f>" -> cell) for
+``benchmarks/validate_bench.py``'s async-beats-sync ordering gate.
+
+CSV: name,us_per_call,derived (value column = closed-loop QPS).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List
+
+from repro.serve.loadgen import LoadConfig, run_closed_loop
+
+SERVING_JSON = "BENCH_serving.json"
+SCHEMA = "serving.v1"
+
+TAUS = (1, 2, 4)
+FS = (0, 2)
+BASE = LoadConfig(n=11, d=65536, rounds=40, microbatch=8, seed=0)
+
+SMOKE_TAUS = (1,)
+SMOKE_FS = (2,)
+SMOKE_BASE = LoadConfig(n=11, d=4096, rounds=10, microbatch=8, seed=0)
+
+
+def write_json(results: Dict[str, Dict[str, Dict[str, float]]],
+               meta: Dict[str, float], path: str = SERVING_JSON) -> None:
+    payload = {"schema": SCHEMA, "meta": meta, "results": results}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+
+
+def run(csv_rows: List[str], *, smoke: bool = False,
+        json_path: str = SERVING_JSON
+        ) -> Dict[str, Dict[str, Dict[str, float]]]:
+    base, taus, fs = (SMOKE_BASE, SMOKE_TAUS, SMOKE_FS) if smoke \
+        else (BASE, TAUS, FS)
+    rows = (f"{base.gar}[sync]", f"{base.gar}[async]")
+    results: Dict[str, Dict[str, Dict[str, float]]] = {r: {} for r in rows}
+    for f in fs:
+        for tau in taus:
+            cfg = dataclasses.replace(base, tau=tau, f=f)
+            for mode, row in zip(("sync", "async"), rows):
+                cell = run_closed_loop(cfg, mode)
+                results[row][f"tau={tau},f={f}"] = cell
+                csv_rows.append(
+                    f"serving/{row}/tau={tau}/f={f},{cell['qps']:.1f},"
+                    f"qps_round_us={cell['round_us']:.0f}_"
+                    f"stale={cell['stale_rounds']}")
+            ratio = (results[rows[1]][f"tau={tau},f={f}"]["qps"]
+                     / max(results[rows[0]][f"tau={tau},f={f}"]["qps"],
+                           1e-9))
+            csv_rows.append(
+                f"serving/async_over_sync_qps/tau={tau}/f={f},"
+                f"{ratio:.2f},closed_loop_speedup")
+    meta = {"n": base.n, "d": base.d, "rounds": base.rounds,
+            "microbatch": base.microbatch, "mean_ms": base.mean_ms,
+            "stragglers": base.stragglers,
+            "straggler_mult": base.straggler_mult,
+            "deadline_quantile": base.deadline_quantile}
+    write_json(results, meta, json_path)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=SERVING_JSON)
+    args = ap.parse_args()
+    rows: List[str] = []
+    run(rows, smoke=args.smoke, json_path=args.json)
+    print("name,us_per_call,derived")
+    print("\n".join(rows))

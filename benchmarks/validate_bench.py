@@ -22,6 +22,11 @@ the payload's ``schema`` field:
   skipped-as-infeasible or ≥ 5× slower than the grouped path, and the
   grouped column must grow subquadratically in n (the O(n·g) vs O(n²)
   ordering gate);
+* serving (``serving.v1``) — closed-loop async vs sync robust serving
+  cells from ``benchmarks/serving.py``: both mode rows present with
+  positive finite qps/round_us, and async QPS *strictly above* sync on
+  every shared (τ ≥ 1, f > 0) cell — the bounded-staleness buffer must
+  actually buy throughput where the byzantine contract is live;
 * analysis (``analysis.v1``) — the static-contract report from
   ``repro.launch.analyze``: zero committed lint violations, every
   sharding contract proven, kernel estimates present at the committed
@@ -63,6 +68,11 @@ HIER_ROWS = ("multi_bulyan[hier]", "multi_bulyan[flat]")
 HIER_FLAT_FACTOR = 5.0          # flat must be >= this × hier at n >= 1024
 HIER_BIG_N = 1024
 _HIER_KEY_RE = re.compile(r"^n=(\d+),g=(\d+),d=(\d+)$")
+SERVING_SCHEMA = "serving.v1"
+SERVING_FIELDS = ("qps", "round_us", "agg_us", "stale_rounds",
+                  "reused_rounds", "f_defended_mean", "admitted_frac")
+SERVING_ROWS = ("multi_bulyan[sync]", "multi_bulyan[async]")
+_SERVING_KEY_RE = re.compile(r"^tau=(\d+),f=(\d+)$")
 
 
 def _fail(msg: str) -> "list[str]":
@@ -272,6 +282,62 @@ def _check_hier(path: str, results: dict) -> "list[str]":
     return problems
 
 
+def _check_serving(path: str, results: dict) -> "list[str]":
+    problems = []
+    for row in SERVING_ROWS:
+        if row not in results:
+            problems.append(f"missing required serving row {row!r}")
+    cells: dict = {}            # (row, tau, f) -> cell
+    for row, grid in results.items():
+        if not isinstance(grid, dict) or not grid:
+            problems.append(f"row {row!r}: empty or non-object grid")
+            continue
+        for key, cell in grid.items():
+            m = _SERVING_KEY_RE.match(key)
+            if not m:
+                problems.append(f"row {row!r}: bad grid key {key!r} "
+                                "(want 'tau=<t>,f=<f>')")
+                continue
+            if not isinstance(cell, dict):
+                problems.append(f"{row}/{key}: cell must be an object")
+                continue
+            cells[(row,) + tuple(int(x) for x in m.groups())] = cell
+            missing = [f for f in SERVING_FIELDS if f not in cell]
+            if missing:
+                problems.append(f"{row}/{key}: missing {missing}")
+            for f in ("qps", "round_us"):
+                v = cell.get(f)
+                if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                        or v <= 0:
+                    problems.append(f"{row}/{key}: {f} must be a positive "
+                                    f"finite number, got {v!r}")
+            af = cell.get("admitted_frac")
+            if isinstance(af, (int, float)) and not 0.0 <= af <= 1.0:
+                problems.append(f"{row}/{key}: admitted_frac {af} "
+                                "outside [0, 1]")
+    # the throughput claim: async strictly beats sync wherever the
+    # byzantine contract is live and staleness is actually tolerated
+    sync = {(t, f): c for (row, t, f), c in cells.items()
+            if row == SERVING_ROWS[0]}
+    asyn = {(t, f): c for (row, t, f), c in cells.items()
+            if row == SERVING_ROWS[1]}
+    live = [(t, f) for (t, f) in sorted(set(sync) & set(asyn))
+            if t >= 1 and f > 0]
+    if not live:
+        problems.append("no shared (tau >= 1, f > 0) cell — the "
+                        "async-beats-sync ordering gate has nothing to "
+                        "check")
+    for (t, f) in live:
+        sq, aq = sync[(t, f)].get("qps"), asyn[(t, f)].get("qps")
+        if not (isinstance(sq, (int, float)) and isinstance(aq, (int, float))
+                and aq > sq):
+            problems.append(
+                f"tau={t},f={f}: async qps ({aq!r}) not strictly above "
+                f"sync qps ({sq!r}) — the bounded-staleness buffer bought "
+                "no throughput")
+    return problems
+
+
 def _check_analysis(path: str, results: dict) -> "list[str]":
     """The static-contract report: ships only when everything is proven."""
     problems = []
@@ -347,6 +413,8 @@ def check(path: str) -> "list[str]":
         problems += _check_accuracy(path, results)
     elif schema == HIER_SCHEMA:
         problems += _check_hier(path, results)
+    elif schema == SERVING_SCHEMA:
+        problems += _check_serving(path, results)
     elif schema == ANALYSIS_SCHEMA:
         problems += _check_analysis(path, results)
     elif schema == AGG_TIME_SCHEMA or schema is None:
@@ -356,7 +424,7 @@ def check(path: str) -> "list[str]":
     else:
         problems.append(
             f"{path}: unrecognised schema {schema!r}; known: "
-            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA, HIER_SCHEMA, ANALYSIS_SCHEMA]}")
+            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA, HIER_SCHEMA, SERVING_SCHEMA, ANALYSIS_SCHEMA]}")
     return problems
 
 

@@ -30,6 +30,14 @@ stack silently depends on:
   ``jax.devices()``) inside the traced body — the PR-2 ``interpret``
   bug: a backend choice baked into a trace goes silently stale when the
   default backend changes.
+* **R006 async-blocking-collective** — no blocking collectives
+  (``jax.lax.psum`` / ``pmean`` / ``all_gather`` / ``all_to_all`` /
+  ``ppermute``) inside the async service loop: any function whose name
+  mentions ``async``, or anything under ``repro/serve``.  The bounded
+  staleness contract (DESIGN.md §13) is that the plan/apply services
+  never *wait* on workers — cross-worker data moves through the buffer's
+  masked admission, and a collective in that loop silently reintroduces
+  the lockstep barrier the subsystem exists to remove.
 
 ``lint_source`` lints one source string; ``lint_paths`` walks files and
 directories.  Both are pure AST passes — linted code is never imported.
@@ -41,7 +49,7 @@ import dataclasses
 import os
 from typing import Iterable, List, Optional, Sequence, Set, Tuple
 
-RULE_IDS = ("R001", "R002", "R003", "R004", "R005")
+RULE_IDS = ("R001", "R002", "R003", "R004", "R005", "R006")
 
 #: calls that touch devices / the backend when *executed* (R001 at module
 #: scope, R005 inside jitted bodies for the backend-resolving subset)
@@ -340,6 +348,46 @@ def _rule_jit_static(tree: ast.Module, path: str) -> List[Violation]:
     return out
 
 
+# ------------------------------------------------------------------ R006
+#: blocking cross-worker collectives — each one is a synchronisation
+#: barrier over the worker axis, which the async service loop must never
+#: contain (late workers are handled by buffer admission, not by waiting)
+_BLOCKING_COLLECTIVES = frozenset({
+    "jax.lax.psum", "jax.lax.pmean", "jax.lax.pmax", "jax.lax.pmin",
+    "jax.lax.all_gather", "jax.lax.all_to_all", "jax.lax.ppermute",
+    "lax.psum", "lax.pmean", "lax.pmax", "lax.pmin",
+    "lax.all_gather", "lax.all_to_all", "lax.ppermute",
+})
+_SERVE_PATH_MARKERS = (os.path.join("repro", "serve"),)
+
+
+def _rule_async_collective(tree: ast.Module, path: str) -> List[Violation]:
+    out = []
+    norm = path.replace("\\", "/")
+    serve_file = any(m.replace("\\", "/") in norm
+                     for m in _SERVE_PATH_MARKERS)
+
+    def scan(node: ast.AST, where: str) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) \
+                    and (_dotted(sub.func) or "") in _BLOCKING_COLLECTIVES:
+                out.append(Violation(
+                    "R006", path, sub.lineno,
+                    f"blocking collective {_dotted(sub.func)}() inside "
+                    f"{where} — the async service must never barrier on "
+                    "the worker axis; route cross-worker data through "
+                    "the staleness buffer's masked admission"))
+
+    if serve_file:
+        scan(tree, "repro/serve (the async service package)")
+        return out
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and "async" in node.name.lower():
+            scan(node, f"async service function {node.name}()")
+    return out
+
+
 #: rule id -> one-line description (R000 is the parse-failure sentinel)
 RULES = {
     "R000": "file must parse",
@@ -348,6 +396,7 @@ RULES = {
     "R003": "registry spec strings must resolve against the registry",
     "R004": "TrainerState is accessed by field name, never by index",
     "R005": "jit'd config/flag params must be declared static",
+    "R006": "no blocking collectives inside the async service loop",
 }
 
 
@@ -365,6 +414,7 @@ def lint_source(src: str, path: str = "<string>") -> List[Violation]:
     out += _rule_registry_specs(tree, path)
     out += _rule_state_index(tree, path)
     out += _rule_jit_static(tree, path)
+    out += _rule_async_collective(tree, path)
     return sorted(out, key=lambda v: (v.path, v.line, v.rule))
 
 

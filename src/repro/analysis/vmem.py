@@ -36,8 +36,11 @@ from repro.kernels import ops
 #: grid depth past which the fused select kernel is dispatch/re-read bound
 #: rather than bandwidth bound: the geometric midpoint of the measured
 #: bracketing grid depths at n=15 — 13 steps (d=1e5, fused wins) and
-#: 123 steps (d=1e6, fused loses 3.9×): sqrt(13·123) ≈ 40.
-GRID_STEPS_THRESHOLD = 40
+#: 123 steps (d=1e6, fused loses 3.9×): sqrt(13·123) ≈ 40.  Owned by the
+#: autotuner (``kernels/ops.DEEP_GRID_STEPS`` — past it the tile cap lifts
+#: to amortise the per-step overhead) and aliased here so estimator and
+#: autotuner share one regime boundary.
+GRID_STEPS_THRESHOLD = ops.DEEP_GRID_STEPS
 
 _PAYLOAD_ITEMSIZE = {"int8": 1, "bfloat16": 2}
 
@@ -104,8 +107,9 @@ def estimate_fused_select(n: int, d: int, *, f: Optional[int] = None,
     scratch = ops._select_scratch_rows(theta)
     fixed = 2 * theta * n_pad * 4
     if d_tile is None:
-        d_tile = ops.autotune_d_tile(n_pad, d, scratch_rows=scratch,
-                                     fixed_bytes=fixed)
+        # the wrapper's own tile policy (base cap + deep-grid lift) — the
+        # estimate must live on the exact tile the kernel launches with
+        d_tile = ops.fused_select_d_tile(n_pad, d, theta)
     # x tile streamed per step (read once); the replicated (θ, n) weight
     # pair is re-fetched every grid step (constant index_map) — the
     # re-read term that, with dispatch overhead, produces the deep-grid

@@ -39,6 +39,10 @@ PyTree = Any
 # ==========================================================================
 # statistics (the plan's only input)
 # ==========================================================================
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("dists", "sq_norms"),
+    meta_fields=("n", "f"))
 @dataclasses.dataclass(frozen=True)
 class AggStats:
     """Replicated per-round statistics the selection plan is computed from.
@@ -843,6 +847,88 @@ class Aggregator:
         self.validate(stats.n, stats.f)
         return self.apply(self.plan(stats), grads, coord_chunk=coord_chunk,
                           use_pallas=use_pallas, mesh_ctx=mesh_ctx)
+
+
+# ==========================================================================
+# the shared aggregation backend (plan service + apply service)
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class AggregatorBackend:
+    """One bound stats→validate→plan→apply pipeline, shared by every
+    consumer (DESIGN.md §13).
+
+    The trainers (``dist.trainer``), the robust serving ensemble
+    (``dist.serving.make_robust_serve_step``) and the async bounded-
+    staleness service (``repro.serve``) all aggregate through the same
+    instance shape: ``plan_stats`` is the *plan service* (O(n²) on the
+    replicated statistics, d-free), ``apply`` the *apply service*
+    (sharding-preserving einsums + coordinate phase over d).  Splitting
+    the two is what lets the async service reuse a previous round's plan
+    while still applying it to the freshest buffered gradients.
+
+    Frozen and hashable (``mesh_ctx`` is pure metadata), so step builders
+    close over a backend and jit caches key on its configuration.
+    """
+
+    gar: str
+    f: int
+    use_pallas: bool = False
+    coord_chunk: int = 0
+    fused: "bool | str" = True
+    needs_dists: bool = False          # force stats for distance-free rules
+    mesh_ctx: Optional[MeshContext] = None
+
+    @classmethod
+    def for_config(cls, rcfg, **overrides) -> "AggregatorBackend":
+        """Build from a ``RobustConfig`` (gar / f / use_pallas)."""
+        kw = dict(gar=rcfg.gar, f=rcfg.f, use_pallas=rcfg.use_pallas)
+        kw.update(overrides)
+        return cls(**kw)
+
+    @property
+    def aggregator(self) -> "Aggregator":
+        return get_aggregator(self.gar)
+
+    def stats(self, grads: PyTree, *,
+              dists: Optional[Array] = None) -> AggStats:
+        agg = self.aggregator
+        return compute_stats(grads, self.f,
+                             needs_dists=agg.needs_dists or self.needs_dists,
+                             use_pallas=self.use_pallas, dists=dists,
+                             mesh_ctx=self.mesh_ctx)
+
+    def plan(self, stats: AggStats) -> AggPlan:
+        """The plan service: validate + selection on the statistics only."""
+        agg = self.aggregator
+        agg.validate(stats.n, stats.f)
+        return agg.plan(stats)
+
+    def plan_stats(self, grads: PyTree, *, dists: Optional[Array] = None
+                   ) -> Tuple[AggPlan, AggStats]:
+        stats = self.stats(grads, dists=dists)
+        return self.plan(stats), stats
+
+    def apply(self, plan: AggPlan, grads: PyTree) -> PyTree:
+        """The apply service: one plan over the d axis of a stack."""
+        return self.aggregator.apply(plan, grads,
+                                     coord_chunk=self.coord_chunk,
+                                     use_pallas=self.use_pallas,
+                                     fused=self.fused,
+                                     mesh_ctx=self.mesh_ctx)
+
+    def __call__(self, grads: PyTree) -> PyTree:
+        plan, _ = self.plan_stats(grads)
+        return self.apply(plan, grads)
+
+
+def select_plan(pred: Array, on_true: AggPlan, on_false: AggPlan) -> AggPlan:
+    """Jit-safe plan choice: ``pred ? on_true : on_false`` over the data
+    arrays of two same-kind plans (meta fields — kind/n/f/beta — must
+    match; they do whenever both came from the same backend).  This is how
+    the async service degrades an inadmissible round to the previous
+    round's plan without changing any traced shape."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b),
+                        on_true, on_false)
 
 
 REGISTRY: Dict[str, Aggregator] = {}

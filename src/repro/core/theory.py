@@ -189,6 +189,61 @@ class FBudget:
         return tuple(out)
 
 
+# ==========================================================================
+# bounded-staleness f-budget arithmetic — DESIGN.md §13
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class StalenessBudget:
+    """How an async round's stale workers spend the byzantine budget.
+
+    The bounded-asynchrony argument of Chen et al. (arXiv 1705.05491):
+    a worker whose buffered gradient is older than the staleness bound
+    ``tau`` is indistinguishable from an adversarial one — its update may
+    point anywhere relative to the current iterate — so every *overstale*
+    worker is charged against the same contract ``f`` the GAR defends.
+
+    * ``f_defended(k)`` — byzantine defense remaining after ``k`` workers
+      went overstale: ``max(f - k, 0)``.
+    * ``admissible(k)`` — whether a round with ``k`` overstale workers is
+      still covered by the contract (``k <= f``); past that the plan
+      service must fall back to the previous round's plan rather than
+      trust a majority-stale selection.
+
+    Mirrors :class:`FBudget`: static python arithmetic for config-time
+    checks; ``repro.serve.buffer`` computes the identical quantities in
+    jnp inside the jitted round (parity tested in tests/test_serve.py).
+    """
+
+    n: int
+    f: int
+    tau: int
+
+    def f_defended(self, n_overstale: int) -> int:
+        return max(self.f - min(n_overstale, self.f), 0)
+
+    def admissible(self, n_overstale: int) -> bool:
+        return n_overstale <= self.f
+
+    def covers(self, n_byz: int, n_overstale: int) -> bool:
+        """Whether ``n_byz`` true traitors plus ``n_overstale`` stale rows
+        stay within the contract — the staleness↔f budget law."""
+        return n_byz + n_overstale <= self.f
+
+
+def staleness_budget(n: int, f: int, tau: int, *,
+                     rule: str = "multi_bulyan") -> StalenessBudget:
+    """Derive (and check) the staleness budget for an async service.
+
+    Gates through :func:`check_level` exactly like the hierarchical
+    budgets: ``n`` must defend the contract ``f`` under ``rule`` before
+    any of it can be spent on staleness.
+    """
+    if tau < 0:
+        raise ValueError(f"staleness bound tau must be >= 0, got {tau}")
+    check_level(n, f, rule=rule)
+    return StalenessBudget(n=n, f=f, tau=tau)
+
+
 def split_f_budget(n: int, f: int, g: int, *, rule: str = "multi_bulyan",
                    outer_rule: Optional[str] = None,
                    f_inner: Optional[int] = None,

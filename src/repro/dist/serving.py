@@ -37,39 +37,46 @@ def make_serve_step(cfg: ArchConfig, *, window: int = 0,
     return step
 
 
-def aggregate_replica_logits(logits: jax.Array, rcfg: RobustConfig) -> jax.Array:
+def aggregate_replica_logits(logits: jax.Array, rcfg: RobustConfig,
+                             backend: "api.AggregatorBackend | None" = None
+                             ) -> jax.Array:
     """(n, B, V) replica logits -> (B, V) robust consensus via rcfg.gar.
 
-    The replica axis plays the worker role: stats/plan on the (n, n)
-    logit-distance matrix, apply per the plan kind (fused Pallas kernel for
-    bulyan-family rules when ``rcfg.use_pallas``).  Up to f compromised or
-    corrupted replicas cannot steer the served distribution outside the
+    The replica axis plays the worker role: the shared
+    :class:`~repro.core.api.AggregatorBackend` plans on the (n, n)
+    logit-distance matrix and applies per the plan kind (fused Pallas
+    kernel for bulyan-family rules when ``rcfg.use_pallas``) — the exact
+    pipeline the trainers and the async service run.  Up to f compromised
+    or corrupted replicas cannot steer the served distribution outside the
     honest replicas' spread.
     """
-    agg = api.get_aggregator(rcfg.gar)
-    stats = api.compute_stats(logits, rcfg.f, needs_dists=agg.needs_dists,
-                              use_pallas=rcfg.use_pallas)
-    agg.validate(stats.n, stats.f)
-    return agg.apply(agg.plan(stats), logits, use_pallas=rcfg.use_pallas)
+    if backend is None:
+        backend = api.AggregatorBackend.for_config(rcfg)
+    return backend(logits)
 
 
 def make_robust_serve_step(cfg: ArchConfig, rcfg: RobustConfig, *,
-                           window: int = 0, seq_chunks: int = 1):
+                           window: int = 0, seq_chunks: int = 1,
+                           backend: "api.AggregatorBackend | None" = None):
     """Ensemble decode step over ``rcfg.n_workers`` stacked model replicas.
 
     ``(stacked_params, stacked_caches, token, pos) -> (logits, caches)``
     where every leaf of ``stacked_params``/``stacked_caches`` carries a
     leading replica axis of size n.  The fused (B, V) logits are the GAR
-    consensus of the replicas' outputs.
+    consensus of the replicas' outputs, computed by the same
+    :class:`~repro.core.api.AggregatorBackend` the trainers use (pass
+    ``backend`` to share one instance across training and serving).
     """
     rcfg.validate()
+    if backend is None:
+        backend = api.AggregatorBackend.for_config(rcfg)
 
     def step(stacked_params, stacked_caches, token, pos):
         logits, caches = jax.vmap(
             lambda p, c: MD.decode_fn(p, cfg, token, c, pos, window=window,
                                       seq_chunks=seq_chunks),
         )(stacked_params, stacked_caches)
-        return aggregate_replica_logits(logits, rcfg), caches
+        return aggregate_replica_logits(logits, rcfg, backend), caches
 
     return step
 

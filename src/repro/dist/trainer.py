@@ -126,7 +126,7 @@ def inject_wire(enc, f: int, attack, key, *, leaf_offset: int = 0):
 # -------------------------------------------------------------- state
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("opt", "tstates", "astate", "cres"),
+    data_fields=("opt", "tstates", "astate", "cres", "bstate"),
     meta_fields=())
 @dataclasses.dataclass(frozen=True)
 class TrainerState:
@@ -138,7 +138,10 @@ class TrainerState:
     * ``astate``  — adaptive-attack plan-feedback state (``None`` unless
       the attack spec is adaptive);
     * ``cres``    — error-feedback compression residual (``None`` unless
-      the codec spec has ``ef=1``).
+      the codec spec has ``ef=1``);
+    * ``bstate``  — the async bounded-staleness buffer
+      (``repro.serve.buffer.BufferState``; ``None`` on the synchronous
+      trainers — seed it with ``repro.serve.service.with_buffer``).
 
     Unused slots are ``None``/``()`` and flatten to zero leaves, so the
     container costs nothing under jit and checkpoints by field *name*
@@ -152,6 +155,7 @@ class TrainerState:
     tstates: Tuple = ()
     astate: Any = None
     cres: Any = None
+    bstate: Any = None
 
 
 def as_trainer_state(state) -> TrainerState:
@@ -328,7 +332,6 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     codecs.
     """
     rcfg.validate()
-    aggregator = api.get_aggregator(rcfg.gar)
     transforms = tuple(transforms)
     f_eff = rcfg.f if attack_f is None else attack_f
     if not 0 <= f_eff <= rcfg.f:
@@ -342,10 +345,15 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
             f"(available codecs: see repro.comm.available_codecs())")
     adaptive = ATK.get_adaptive(attack) \
         if not wire and ATK.is_adaptive(attack) else None
-    # telemetry wants the score spectrum even for distance-free rules
-    # (average / median campaigns report why they would have been rejected)
-    needs_dists = aggregator.needs_dists or telemetry
     mesh_ctx = _derive_mesh_ctx(shard_map_mesh, shard_map_axes, spmd)
+    # telemetry wants the score spectrum even for distance-free rules
+    # (average / median campaigns report why they would have been rejected);
+    # the backend is the same plan/apply pipeline robust serving and the
+    # async service consume (DESIGN.md §13)
+    backend = api.AggregatorBackend.for_config(
+        rcfg, coord_chunk=coord_chunk, needs_dists=telemetry,
+        mesh_ctx=mesh_ctx)
+    needs_dists = backend.aggregator.needs_dists or telemetry
     if hier is not None:
         if mesh_ctx is not None:
             raise NotImplementedError(
@@ -409,19 +417,12 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                 needs_dists=needs_dists)
             stats = None
         else:
-            stats = api.compute_stats(stats_src, rcfg.f,
-                                      needs_dists=needs_dists,
-                                      use_pallas=rcfg.use_pallas,
-                                      mesh_ctx=mesh_ctx)
-            # guard against an out-of-band worker count: stats.n comes from
-            # the actual batch split, which RobustConfig's construction-time
-            # check never saw.  plan() implementations are not required to
-            # self-validate (streaming.py already guards every plan call).
-            aggregator.validate(stats.n, stats.f)
-            plan = aggregator.plan(stats)
-            agg = aggregator.apply(plan, grads, coord_chunk=coord_chunk,
-                                   use_pallas=rcfg.use_pallas,
-                                   mesh_ctx=mesh_ctx)
+            # backend.plan validates stats.n against the actual batch
+            # split (which RobustConfig's construction-time check never
+            # saw) before any selection runs
+            stats = backend.stats(stats_src)
+            plan = backend.plan(stats)
+            agg = backend.apply(plan, grads)
         if adaptive is not None:
             astate = adaptive.update(astate, plan.selection_weights())
         lr = lr_fn(opt_state.step)
@@ -450,7 +451,7 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
             metrics["telemetry"] = diag
         return (new_params,
                 TrainerState(opt=new_opt, tstates=tstates, astate=astate,
-                             cres=cres),
+                             cres=cres, bstate=state.bstate),
                 metrics)
 
     return step

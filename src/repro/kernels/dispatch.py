@@ -2,21 +2,24 @@
 
 ``BENCH_agg_time.json`` (committed full grid) shows the fused Pallas select
 kernel winning the bulyan apply below ~1e5 coordinates per leaf but losing
-~4x to the plain XLA substrate at d = 1e6 — the fused-select large-d cliff
-(the kernel re-reads its extraction tiles once per output tile; the real
-fix is a ROADMAP item).  Until then, ``use_pallas=True`` must not blindly
-take the fused path: :func:`fused_wins` consults a dispatch table of the
-*measured* crossover points and the apply phase falls back to the XLA
-substrate above them (``core.api._bulyan_leaf``; pass ``fused="force"`` to
-pin the kernel regardless, which the substrate benchmarks do).
+~2x to the plain XLA substrate at d = 1e6 — the fused-select large-d cliff
+(the kernel re-reads its extraction tiles once per output tile).  The
+deep-grid tile lift (``ops.fused_select_d_tile``) cut the d = 1e6 point
+from ~8.6 s to ~3.0 s by re-autotuning with a larger tile cap when the
+grid exceeds ``ops.DEEP_GRID_STEPS`` steps, but the re-read term still
+dominates there, so ``use_pallas=True`` must not blindly take the fused
+path: :func:`fused_wins` consults a dispatch table of the *measured*
+crossover points and the apply phase falls back to the XLA substrate
+above them (``core.api._bulyan_leaf``; pass ``fused="force"`` to pin the
+kernel regardless, which the substrate benchmarks do).
 
 The baked-in table is read off the committed BENCH_agg_time.json grid:
 
 ===  ==========================  ==========================
  n    largest d fused won (us)    smallest d fused lost (us)
 ===  ==========================  ==========================
- 11   4096   (2326 vs 6226)       —
- 15   100000 (145490 vs 250656)   1000000 (8555151 vs 2193519)
+ 11   4096   (1434 vs 4341)       —
+ 15   100000 (79286 vs 143981)    1000000 (3042569 vs 1425535)
 ===  ==========================  ==========================
 
 Per-n thresholds are the geometric midpoint of the bracketing measured

@@ -42,6 +42,20 @@ Array = jax.Array
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 _MAX_D_TILE = 8192
 
+#: grid depth past which fused_select's per-step dispatch overhead and its
+#: re-read of the replicated (θ, n) extraction operands dominate the byte
+#: savings — the measured BENCH_agg_time.json d=1e6 cliff (the geometric
+#: midpoint of the bracketing measured grid depths at n=15).
+#: ``analysis/vmem.py`` aliases this as its GRID_STEPS_THRESHOLD so the
+#: autotuner and the static estimator can never disagree on the regime.
+DEEP_GRID_STEPS = 40
+#: lifted tile cap for deep-grid fused_select launches: 1.5× the base cap,
+#: still lane-aligned and inside the VMEM budget for every benchmarked θ.
+#: Going wider would push the predicted crossover (DEEP_GRID_STEPS ×
+#: d_tile) past 2× the measured dispatch table at small n — the
+#: calibration gate in ``analysis.v1``.
+_DEEP_MAX_D_TILE = 12288
+
 
 def autotune_d_tile(rows: int, d: int, *, scratch_rows: int = 0,
                     fixed_bytes: int = 0,
@@ -75,6 +89,28 @@ def _select_scratch_rows(theta: int) -> int:
     (θ, θ) int32 rank-counting broadcasts (lt/eq/rank) plus a few fp32
     (θ,)-row temporaries (ext/agr/srt/dist)."""
     return 3 * theta * theta + 4 * theta
+
+
+def fused_select_d_tile(n_rows: int, d: int, theta: int) -> int:
+    """The fused_select tile policy: base autotune, deep-grid lift.
+
+    The base cap (``_MAX_D_TILE``) keeps shallow grids on the committed
+    tile boundaries; when even the base tile needs more than
+    :data:`DEEP_GRID_STEPS` grid steps the launch is dispatch/re-read
+    bound, not bandwidth bound, so the cap lifts to
+    :data:`_DEEP_MAX_D_TILE` — fewer, fatter steps amortise the per-step
+    overhead and the re-fetch of the replicated (θ, n) weight pair.
+    Shared by the :func:`fused_select` wrapper and
+    ``analysis/vmem.estimate_fused_select`` — one policy, one cost model.
+    """
+    scratch = _select_scratch_rows(theta)
+    fixed = 2 * theta * n_rows * 4
+    base = autotune_d_tile(n_rows, d, scratch_rows=scratch,
+                           fixed_bytes=fixed)
+    if -(-d // base) <= DEEP_GRID_STEPS:
+        return base
+    return autotune_d_tile(n_rows, d, scratch_rows=scratch,
+                           fixed_bytes=fixed, max_tile=_DEEP_MAX_D_TILE)
 
 
 def _interpret() -> bool:
@@ -185,9 +221,6 @@ def fused_select(x: Array, w_ext: Array, w_agr: Array, beta: int, *,
     """
     if d_tile is None:
         n_rows = x.shape[0] + (-x.shape[0]) % 8
-        theta = w_ext.shape[0]
-        d_tile = autotune_d_tile(n_rows, x.shape[1],
-                                 scratch_rows=_select_scratch_rows(theta),
-                                 fixed_bytes=2 * theta * n_rows * 4)
+        d_tile = fused_select_d_tile(n_rows, x.shape[1], w_ext.shape[0])
     return _fused_select(x, w_ext, w_agr, beta=beta, d_tile=d_tile,
                          interpret=_resolve(interpret))

@@ -1,0 +1,84 @@
+"""Closed-loop robust serving benchmark driver (repro.serve.loadgen).
+
+One (mode × τ × f) sweep of the async bounded-staleness service against
+the synchronous lockstep baseline, with the staleness accounting replayed
+through the real gradient buffer:
+
+  PYTHONPATH=src python -m repro.launch.serve_bench \\
+      --workers 11 --f 2 --d 65536 --tau 1 2 4 --rounds 40 \\
+      --json BENCH_serving.json
+
+``--smoke`` shrinks to the CI grid (d=4096, 10 rounds, τ=1).  The JSON
+(schema ``serving.v1``) is gated by ``benchmarks/validate_bench.py``:
+async QPS must be strictly above sync on every (τ ≥ 1, f > 0) cell.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.serve.loadgen import LoadConfig
+
+
+def main(argv: Optional[Tuple[str, ...]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (d=4096, 10 rounds, tau=1)")
+    ap.add_argument("--workers", type=int, default=11)
+    ap.add_argument("--f", type=int, nargs="+", default=[0, 2])
+    ap.add_argument("--d", type=int, default=65536)
+    ap.add_argument("--tau", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--microbatch", type=int, default=8)
+    ap.add_argument("--gar", default="multi_bulyan")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mean-ms", type=float, default=20.0)
+    ap.add_argument("--stragglers", type=int, default=2)
+    ap.add_argument("--straggler-mult", type=float, default=4.0)
+    ap.add_argument("--deadline-quantile", type=float, default=0.9)
+    ap.add_argument("--json", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+
+    from benchmarks import serving as SB
+    if args.smoke:
+        rows: List[str] = []
+        SB.run(rows, smoke=True, json_path=args.json)
+        print("\n".join(rows))
+        print(f"[serve_bench] --smoke -> {args.json}")
+        return 0
+
+    from repro.serve.loadgen import run_closed_loop
+    base = LoadConfig(n=args.workers, d=args.d, rounds=args.rounds,
+                      microbatch=args.microbatch, gar=args.gar,
+                      seed=args.seed, mean_ms=args.mean_ms,
+                      stragglers=args.stragglers,
+                      straggler_mult=args.straggler_mult,
+                      deadline_quantile=args.deadline_quantile)
+    rows = (f"{args.gar}[sync]", f"{args.gar}[async]")
+    results = {r: {} for r in rows}
+    for f in args.f:
+        for tau in args.tau:
+            cfg = dataclasses.replace(base, tau=tau, f=f)
+            for mode, row in zip(("sync", "async"), rows):
+                cell = run_closed_loop(cfg, mode)
+                results[row][f"tau={tau},f={f}"] = cell
+                print(f"[serve_bench] {row} tau={tau} f={f}: "
+                      f"qps={cell['qps']:.1f} "
+                      f"round={cell['round_us']:.0f}us "
+                      f"stale_rounds={cell['stale_rounds']} "
+                      f"f_defended={cell['f_defended_mean']:.1f}")
+    meta = {"n": base.n, "d": base.d, "rounds": base.rounds,
+            "microbatch": base.microbatch, "mean_ms": base.mean_ms,
+            "stragglers": base.stragglers,
+            "straggler_mult": base.straggler_mult,
+            "deadline_quantile": base.deadline_quantile}
+    SB.write_json(results, meta, args.json)
+    print(f"[serve_bench] -> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

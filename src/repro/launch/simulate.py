@@ -181,6 +181,69 @@ def _smoke_codec_sweep(args) -> List[str]:
     return problems
 
 
+# --smoke --async-tau churn acceptance: the same no_attack -> attack
+# switch, but every round goes through the real bounded-staleness buffer
+# (repro.serve) with two honest stragglers delivering only every
+# ``stale_period`` rounds.  stale_period > tau+1 makes their slots
+# overstale between deliveries, so the campaign actually exercises the
+# effective-f haircut — asserted via the n_overstale telemetry — while
+# the robust rule must hold the same deviation/selection-mass thresholds
+# as the synchronous smoke.
+ASYNC_SMOKE_STEPS = 8
+ASYNC_STALE = (9, 10)           # honest stragglers (byz rows come first)
+
+
+def _smoke_async(args) -> int:
+    import numpy as np
+
+    sched = AttackSchedule((
+        AttackPhase(steps=ASYNC_SMOKE_STEPS, attack="none"),
+        AttackPhase(steps=ASYNC_SMOKE_STEPS,
+                    attack="little_is_enough:z=4.0",
+                    stale_workers=ASYNC_STALE)))
+    sc = Scenario(name="async-churn", schedule=sched, gar=args.gar,
+                  n_workers=args.workers, f=args.f, seed=args.seed,
+                  use_pallas=args.use_pallas,
+                  async_tau=args.async_tau, stale_period=args.stale_period)
+    r = run_campaign(sc, verbose=True)
+    if args.report:
+        print(f"[sim] report -> {report.write_json(args.report, r)}")
+
+    post = slice(ASYNC_SMOKE_STEPS, 2 * ASYNC_SMOKE_STEPS)
+    dev = float(np.max(r.trace["honest_dev"][post]))
+    byz = float(np.mean(r.trace["byz_mass"][post]))
+    n_over_max = float(np.max(r.trace["n_overstale"]))
+    f_def_min = float(np.min(r.trace["f_defended"]))
+    reused = float(np.sum(r.trace["plan_reused"]))
+    print(f"[sim] async churn (tau={args.async_tau}, "
+          f"period={args.stale_period}): honest_dev max={dev:.3f} "
+          f"byz_mass={byz:.4f} n_overstale max={n_over_max:.0f} "
+          f"f_defended min={f_def_min:.0f} plans_reused={reused:.0f}")
+    problems: List[str] = []
+    if dev > ROBUST_DEV_MAX:
+        problems.append(f"async churn honest_dev max {dev:.3f} > "
+                        f"{ROBUST_DEV_MAX}")
+    if byz > ROBUST_BYZ_MASS:
+        problems.append(f"async churn byzantine selection mass {byz:.4f} "
+                        f"> {ROBUST_BYZ_MASS}")
+    if args.stale_period > args.async_tau + 1 and n_over_max < 1:
+        problems.append(
+            f"stale_period {args.stale_period} > tau+1 "
+            f"{args.async_tau + 1} but no overstale slot was ever "
+            "charged — the churn never reached the buffer")
+    if n_over_max >= 1 and f_def_min >= args.f:
+        problems.append("overstale slots were charged but f_defended "
+                        "never dropped below the contract — the haircut "
+                        "is not wired")
+    for p in problems:
+        print(f"[sim] SMOKE FAILED: {p}", file=sys.stderr)
+    if not problems:
+        print("[sim] --smoke --async-tau OK: churn replayed through the "
+              "real buffer, overstale slots haircut the budget, robust "
+              "rule stayed bounded with byzantine rows deselected")
+    return 1 if problems else 0
+
+
 def _hier_fields(args) -> dict:
     """``--hier SPEC`` -> the Scenario hier_* field dict (empty when unset)."""
     if not args.hier:
@@ -316,6 +379,16 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
                          "enables wire attacks (scale_poison, payload_flip) "
                          "in --phase specs and per-phase WireStats in the "
                          "report")
+    ap.add_argument("--async-tau", type=int, default=0, dest="async_tau",
+                    help="bounded-staleness async aggregation (repro.serve): "
+                         "buffer slots older than TAU rounds are overstale "
+                         "and haircut the byzantine budget (0 = sync "
+                         "lockstep); with --smoke runs the async churn "
+                         "acceptance campaign")
+    ap.add_argument("--stale-period", type=int, default=4,
+                    dest="stale_period",
+                    help="async churn: stale workers deliver every PERIOD "
+                         "rounds (default 4)")
     ap.add_argument("--noniid-alpha", type=float, default=0.0,
                     help="Dirichlet alpha for non-IID worker data "
                          "(0 = i.i.d.)")
@@ -333,7 +406,11 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
     args = ap.parse_args(argv)
 
     if args.smoke:
-        return _smoke_hier(args) if args.hier else _smoke(args)
+        if args.hier:
+            return _smoke_hier(args)
+        if args.async_tau > 0:
+            return _smoke_async(args)
+        return _smoke(args)
 
     if not args.phase:
         ap.error("need at least one --phase (or --smoke)")
@@ -347,7 +424,8 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
         data=DataConfig(noniid_alpha=args.noniid_alpha,
                         n_domains=args.n_domains),
         per_worker_batch=args.per_worker_batch, seq=args.seq, lr=args.lr,
-        seed=args.seed, **_hier_fields(args))
+        seed=args.seed, async_tau=args.async_tau,
+        stale_period=args.stale_period, **_hier_fields(args))
     print(f"[sim] {sc.name}: {sc.schedule.describe()} gar={sc.gar} "
           f"n={sc.n_workers} f={sc.f} trainer={sc.trainer}")
     result = run_campaign(sc, ckpt_dir=args.ckpt_dir, resume=args.resume,

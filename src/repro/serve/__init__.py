@@ -1,0 +1,35 @@
+"""repro.serve — async bounded-staleness aggregation service (DESIGN.md §13).
+
+The plan/apply split of the robust aggregation pipeline, packaged as a
+service: a bounded-staleness gradient buffer (``buffer``), the plan/apply
+service loop and the async trainer step built on it (``service``),
+microbatched robust serving that fuses many decode requests through one
+shared plan (``batching``), and the closed-loop throughput model behind
+``BENCH_serving.json`` (``loadgen``).
+"""
+from repro.serve.batching import (RequestBatch, make_microbatch_serve_step,
+                                  pack_requests, replica_cache_specs,
+                                  replica_param_specs)
+from repro.serve.buffer import (BufferState, admit, buffered_round,
+                                init_buffer_state, staleness_info)
+from repro.serve.loadgen import LoadConfig, run_closed_loop
+from repro.serve.service import (AsyncAggService, make_async_train_step,
+                                 with_buffer)
+
+__all__ = [
+    "AsyncAggService",
+    "BufferState",
+    "LoadConfig",
+    "RequestBatch",
+    "admit",
+    "buffered_round",
+    "init_buffer_state",
+    "make_async_train_step",
+    "make_microbatch_serve_step",
+    "pack_requests",
+    "replica_cache_specs",
+    "replica_param_specs",
+    "run_closed_loop",
+    "staleness_info",
+    "with_buffer",
+]

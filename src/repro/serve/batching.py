@@ -1,0 +1,140 @@
+"""Microbatched robust serving (DESIGN.md §13).
+
+The robust serving ensemble (``dist.serving.make_robust_serve_step``)
+fuses replica logits one request batch at a time.  This module packs many
+independent decode requests — each at its *own* absolute position — into
+one fixed-size microbatch, decodes all ``n`` replicas in lockstep, and
+fuses the resulting (n, B, V) logit stack with a **single** plan/apply
+through the shared :class:`~repro.core.api.AggregatorBackend`: one (n, n)
+statistics pass and one apply over the whole microbatch instead of B
+separate per-request GAR invocations.
+
+The cache PartitionSpecs extend ``dist/sharding.cache_specs`` with the
+leading replica axis playing the worker role (replicas over pod×data, the
+cache length axis over ``model``) — KV-cache-aware layout end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RobustConfig
+from repro.core import api
+from repro.dist import sharding as DSH
+from repro import models as MD
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestBatch:
+    """A fixed-size microbatch of decode requests.
+
+    ``tokens``/``pos`` are (B,) int32 — each request's next input token
+    and its absolute decode position; ``active`` is the (B,) bool validity
+    mask (False = padding slot).  Static B keeps the serve step's jit
+    cache warm regardless of instantaneous load.
+    """
+
+    tokens: Array
+    pos: Array
+    active: Array
+
+    @property
+    def size(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+def pack_requests(tokens: Sequence[int], pos: Sequence[int],
+                  size: int) -> RequestBatch:
+    """Pack up to ``size`` requests into one padded :class:`RequestBatch`."""
+    k = len(tokens)
+    if k != len(pos):
+        raise ValueError(f"tokens/pos length mismatch ({k} vs {len(pos)})")
+    if k > size:
+        raise ValueError(f"{k} requests exceed microbatch size {size}")
+    pad = size - k
+    return RequestBatch(
+        tokens=jnp.asarray(list(tokens) + [0] * pad, jnp.int32),
+        pos=jnp.asarray(list(pos) + [0] * pad, jnp.int32),
+        active=jnp.asarray([True] * k + [False] * pad, jnp.bool_))
+
+
+# ------------------------------------------------------------------- specs
+def replica_param_specs(stacked_params: PyTree, params: PyTree,
+                        mesh: Mesh) -> PyTree:
+    """Specs for replica-stacked params: (n, *param) — the replica axis
+    over pod×data plus the leaf's tensor-parallel spec shifted right
+    (identical layout to the trainer's gradient stack)."""
+    del stacked_params  # layout depends only on the unstacked leaves
+    return DSH.grad_stack_specs(params, mesh)
+
+
+def replica_cache_specs(stacked_cache: PyTree, mesh: Mesh) -> PyTree:
+    """KV-cache specs with a leading replica axis: leaves
+    ``(n, n_groups, batch, length, ...)``.
+
+    The replica axis (the byzantine worker role) shards over pod×data;
+    the cache *length* axis — dim 3 of attention KV leaves, one right of
+    ``dist/sharding.cache_specs``'s dim 2 — over ``model``, so decode
+    attention stays chunk-local partial softmax per length shard.  The
+    request batch axis stays replicated: microbatches are small and the
+    fused logit aggregation wants whole rows per device.
+    """
+    lead = DSH._worker_axes(mesh)
+
+    def leaf(x):
+        entries = [None] * x.ndim              # dim 1: the group stack
+        entries[0] = lead
+        if x.ndim >= 5:                        # (n, ng, b, length, heads, hd)
+            entries[3] = "model"
+        return DSH.sanitize_spec(P(*entries), x.shape, mesh)
+
+    return jax.tree.map(leaf, stacked_cache)
+
+
+# -------------------------------------------------------------------- step
+def make_microbatch_serve_step(cfg: ArchConfig, rcfg: RobustConfig, *,
+                               window: int = 0, seq_chunks: int = 1,
+                               backend: Optional[api.AggregatorBackend] = None):
+    """Build the microbatched robust decode step.
+
+    ``(stacked_params, stacked_caches, rb: RequestBatch) ->
+    ((B, V) fused logits, new stacked_caches)``.
+
+    Each of the B requests decodes at its own ``rb.pos`` (vmap over the
+    cache batch axis with per-lane scalar positions), all n replicas run
+    in lockstep, and the (n, B, V) logit stack is fused with one shared
+    plan/apply — padded (inactive) slots are zeroed first so they
+    contribute nothing to the replica distance statistics.
+    """
+    rcfg.validate()
+    if backend is None:
+        backend = api.AggregatorBackend.for_config(rcfg)
+
+    def one_request(p, tok, cache_row, pr):
+        # re-insert the batch axis the vmap stripped: decode runs at B=1
+        c1 = jax.tree.map(lambda x: jnp.expand_dims(x, 1), cache_row)
+        logits, c1 = MD.decode_fn(p, cfg, tok[None], c1, pr,
+                                  window=window, seq_chunks=seq_chunks)
+        return logits[0], jax.tree.map(lambda x: x[:, 0], c1)
+
+    def one_replica(p, c, rb: RequestBatch):
+        cache_axes = jax.tree.map(lambda _: 1, c)
+        return jax.vmap(one_request, in_axes=(None, 0, cache_axes, 0),
+                        out_axes=(0, cache_axes))(p, rb.tokens, c, rb.pos)
+
+    def step(stacked_params, stacked_caches, rb: RequestBatch):
+        logits, caches = jax.vmap(
+            lambda p, c: one_replica(p, c, rb))(stacked_params,
+                                                stacked_caches)
+        # (n, B, V); inactive slots must not perturb the (n, n) statistics
+        logits = logits * rb.active[None, :, None].astype(logits.dtype)
+        return backend(logits), caches
+
+    return step

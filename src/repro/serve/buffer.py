@@ -1,0 +1,140 @@
+"""Bounded-staleness async gradient buffer (DESIGN.md §13).
+
+The buffer is the asynchrony boundary of the plan/apply service split:
+workers deliver gradients whenever they finish, the round deadline fires
+regardless, and a worker that missed it simply keeps its *previous* row in
+the buffered stack — admitted into the next plan instead of blocking this
+one.  Every slot carries an int32 age (rounds since last delivery); rows
+older than the staleness bound ``tau`` are *overstale* and are charged
+against the contract ``f`` (``core.theory.StalenessBudget`` — the round-
+based resilience argument of Chen et al., arXiv 1705.05491).
+
+Everything is static-shape and jit-pure: admission is a masked ``where``
+per leaf, ages are a single (n,) vector, and the previous round's
+:class:`~repro.core.api.AggPlan` rides along so an inadmissible round
+(more overstale rows than ``f``) can degrade to it without retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+
+Array = jax.Array
+PyTree = Any
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("grads", "age", "plan"),
+    meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class BufferState:
+    """Per-round state of the async aggregation buffer.
+
+    * ``grads`` — stacked pytree, every leaf ``(n, ...)``: each worker's
+      most recently delivered gradient (its buffer slot);
+    * ``age``   — (n,) int32: rounds since the slot was last refreshed
+      (0 = delivered this round);
+    * ``plan``  — the :class:`~repro.core.api.AggPlan` the service applied
+      last round (the degradation target for inadmissible rounds).
+    """
+
+    grads: PyTree
+    age: Array
+    plan: api.AggPlan
+
+
+def init_buffer_state(grads_like: PyTree, backend: api.AggregatorBackend,
+                      *, tau: int) -> BufferState:
+    """Empty buffer: zero slots, every worker overstale until it delivers.
+
+    Ages start at ``tau + 1`` so a worker that never delivered counts
+    against the budget from round one (its zero row is as untrustworthy as
+    any other stale value).  The seed plan is the backend's plan on
+    all-zero statistics — structurally identical to every later plan, so
+    the degradation ``where`` never changes tree shape.
+    """
+    leaves = jax.tree.leaves(grads_like)
+    if not leaves:
+        raise ValueError("empty gradient pytree")
+    n = leaves[0].shape[0]
+    grads = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), grads_like)
+    age = jnp.full((n,), tau + 1, jnp.int32)
+    needs = backend.aggregator.needs_dists or backend.needs_dists
+    stats = api.AggStats(
+        n=n, f=backend.f,
+        dists=jnp.zeros((n, n), jnp.float32) if needs else None,
+        sq_norms=None)
+    return BufferState(grads=grads, age=age, plan=backend.plan(stats))
+
+
+def admit(state: BufferState, grads: PyTree, fresh: Array) -> BufferState:
+    """One round of admissions: overwrite the slots of workers whose
+    gradient arrived by the deadline (``fresh`` — (n,) bool), age the rest.
+
+    Late arrivals are not lost — the caller feeds them as ``fresh`` next
+    round, which is exactly the bounded-staleness admission rule: a late
+    gradient enters the *next* plan instead of blocking this one.
+    """
+
+    def take(slot, new):
+        m = fresh.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new.astype(slot.dtype), slot)
+
+    return dataclasses.replace(
+        state,
+        grads=jax.tree.map(take, state.grads, grads),
+        age=jnp.where(fresh, 0, state.age + 1).astype(jnp.int32))
+
+
+def staleness_info(age: Array, *, tau: int, f: int) -> Dict[str, Array]:
+    """The jnp mirror of :class:`~repro.core.theory.StalenessBudget`.
+
+    * ``overstale``  — (n,) bool: age > tau;
+    * ``n_overstale`` — int32 count;
+    * ``f_defended`` — ``max(f - n_overstale, 0)``: byzantine defense left
+      after the staleness haircut (never exceeds the contract f);
+    * ``admissible`` — bool: ``n_overstale <= f`` — past that the round's
+      plan is not covered by the contract and must be degraded.
+    """
+    overstale = age > tau
+    n_over = jnp.sum(overstale).astype(jnp.int32)
+    f_arr = jnp.asarray(f, jnp.int32)
+    return {
+        "overstale": overstale,
+        "n_overstale": n_over,
+        "f_defended": jnp.maximum(f_arr - jnp.minimum(n_over, f_arr), 0),
+        "admissible": n_over <= f_arr,
+    }
+
+
+def buffered_round(state: BufferState, backend: api.AggregatorBackend,
+                   grads: PyTree, fresh: Array, *, tau: int
+                   ) -> Tuple[PyTree, BufferState, Dict[str, Array]]:
+    """Admit → plan → degrade-if-inadmissible → apply: one async round.
+
+    The plan is always computed at the contract ``f`` over the full
+    buffered stack (static shapes, jit-cache stable); when the round is
+    inadmissible the *previous* plan is selected instead
+    (:func:`~repro.core.api.select_plan`) and applied to the current
+    buffer — serving continues on the last covered selection.
+
+    Returns ``(aggregate, new_state, info)`` where ``info`` carries the
+    staleness telemetry (:func:`staleness_info` plus ``admitted`` — the
+    delivery mask — ``plan_reused`` and the round's :class:`AggStats`).
+    """
+    state = admit(state, grads, fresh)
+    info = staleness_info(state.age, tau=tau, f=backend.f)
+    plan, stats = backend.plan_stats(state.grads)
+    plan = api.select_plan(info["admissible"], plan, state.plan)
+    agg = backend.apply(plan, state.grads)
+    info = dict(info, admitted=fresh,
+                plan_reused=jnp.logical_not(info["admissible"]),
+                stats=stats, age=state.age)
+    return agg, dataclasses.replace(state, plan=plan), info

@@ -1,0 +1,190 @@
+"""Closed-loop throughput model for the async aggregation service.
+
+The benchmark question (``benchmarks/serving.py``): at a fixed in-flight
+request budget, does the bounded-staleness buffer sustain higher QPS than
+the synchronous lockstep round under realistic straggler latency?
+
+Honest framing (like ``comm/transport.py``'s simulated wire): worker
+*arrival latencies* are drawn from a seeded lognormal straggler model —
+this module never sleeps — while the aggregation compute per round is
+**measured** by timing the real jitted ``AsyncAggService.round``, and the
+stale-admission accounting comes from replaying the arrival schedule
+through the **real** buffer (every ``n_overstale`` / ``plan_reused``
+number in BENCH_serving.json was produced by ``repro.serve.buffer``, not
+by arithmetic on the side).
+
+* synchronous round: wall = slowest worker's latency + aggregation;
+* async round: wall = the admission deadline + aggregation; workers that
+  miss deliver into a later round (their slot goes stale, the haircut
+  applies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+Array = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadConfig:
+    """One closed-loop serving experiment.
+
+    Latency model: per round each worker's gradient takes
+    ``mean_ms · LogNormal(0, jitter)`` — except the last ``stragglers``
+    (honest) workers, slowed by ``straggler_mult`` — and the async
+    deadline is the ``deadline_quantile`` of the non-straggler latency
+    distribution.  ``microbatch`` requests are served per completed round.
+    """
+
+    n: int = 11
+    f: int = 2
+    d: int = 4096
+    tau: int = 1
+    rounds: int = 40
+    microbatch: int = 8
+    gar: str = "multi_bulyan"
+    seed: int = 0
+    mean_ms: float = 20.0
+    jitter: float = 0.25
+    stragglers: int = 2
+    straggler_mult: float = 4.0
+    deadline_quantile: float = 0.9
+
+
+def worker_latencies(cfg: LoadConfig) -> np.ndarray:
+    """(rounds, n) per-gradient compute latencies in ms (seeded)."""
+    rng = np.random.default_rng(cfg.seed)
+    lat = cfg.mean_ms * rng.lognormal(0.0, cfg.jitter,
+                                      size=(cfg.rounds, cfg.n))
+    if cfg.stragglers:
+        # stragglers sit on the last rows: byzantine rows come first by
+        # the inject_byzantine convention, and a straggling *honest*
+        # worker is the interesting case for the staleness haircut
+        lat[:, cfg.n - cfg.stragglers:] *= cfg.straggler_mult
+    return lat
+
+
+def deadline_ms(cfg: LoadConfig, lat: np.ndarray) -> float:
+    """Admission deadline: a quantile of the non-straggler latencies."""
+    fast = lat[:, : cfg.n - cfg.stragglers] if cfg.stragglers else lat
+    return float(np.quantile(fast, cfg.deadline_quantile))
+
+
+def arrival_masks(cfg: LoadConfig, lat: np.ndarray, round_wall_ms: float,
+                  cut_ms: float) -> np.ndarray:
+    """(rounds, n) bool delivery masks of the closed arrival loop.
+
+    Round ``r`` spans ``[r·wall, (r+1)·wall)``; a worker delivers into
+    round ``r`` when its in-flight gradient finishes by ``r·wall + cut``.
+    On delivery it immediately starts the next gradient — a worker slower
+    than the cut therefore delivers every second (third, …) round, which
+    is exactly the bounded-staleness admission the buffer models.
+    """
+    fresh = np.zeros((cfg.rounds, cfg.n), dtype=bool)
+    finish = lat[0].copy()                       # first gradients start at 0
+    job = np.zeros(cfg.n, dtype=int)
+    for r in range(cfg.rounds):
+        cut = r * round_wall_ms + cut_ms
+        for w in range(cfg.n):
+            if finish[w] <= cut:
+                fresh[r, w] = True
+                job[w] = min(job[w] + 1, cfg.rounds - 1)
+                finish[w] = max(finish[w], r * round_wall_ms) + \
+                    lat[job[w], w]
+    return fresh
+
+
+def _make_round(cfg: LoadConfig):
+    """The real jitted service round on an (n, d) single-leaf stack."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import api
+    from repro.serve.service import AsyncAggService
+
+    backend = api.AggregatorBackend(gar=cfg.gar, f=cfg.f)
+    svc = AsyncAggService(backend=backend, tau=cfg.tau)
+    grads_like = jnp.zeros((cfg.n, cfg.d), jnp.float32)
+    state0 = svc.init_state(grads_like)
+    round_fn = jax.jit(lambda s, g, fr: svc.round(s, g, fr))
+
+    key = jax.random.key(cfg.seed)
+
+    def grads_for(r: int):
+        k = jax.random.fold_in(key, r)
+        g = jax.random.normal(k, (cfg.n, cfg.d), jnp.float32)
+        # first f rows drift: exercise a non-trivial selection
+        return g.at[: cfg.f].multiply(5.0)
+
+    return svc, state0, round_fn, grads_for
+
+
+def replay_buffer(cfg: LoadConfig, fresh: np.ndarray
+                  ) -> Tuple[Dict[str, float], float]:
+    """Replay an arrival schedule through the real buffer.
+
+    Returns (accounting dict, measured mean aggregation µs per round).
+    The timing is measured on the same jitted round the accounting comes
+    from (warm-up call excluded, mean of the replay calls).
+    """
+    import jax
+
+    svc, state, round_fn, grads_for = _make_round(cfg)
+    # warm-up/compile on round 0 inputs
+    import jax.numpy as jnp
+    fr0 = jnp.asarray(fresh[0])
+    jax.block_until_ready(round_fn(state, grads_for(0), fr0)[0])
+
+    n_over = np.zeros(cfg.rounds)
+    reused = np.zeros(cfg.rounds)
+    f_def = np.zeros(cfg.rounds)
+    t0 = time.perf_counter()
+    for r in range(cfg.rounds):
+        agg, state, info = round_fn(state, grads_for(r),
+                                    jnp.asarray(fresh[r]))
+        jax.block_until_ready(agg)
+        n_over[r] = int(info["n_overstale"])
+        reused[r] = bool(info["plan_reused"])
+        f_def[r] = int(info["f_defended"])
+    wall_us = (time.perf_counter() - t0) * 1e6 / cfg.rounds
+    acct = {
+        "stale_rounds": int(np.sum(n_over > 0)),
+        "reused_rounds": int(np.sum(reused)),
+        "n_overstale_max": int(np.max(n_over)),
+        "f_defended_mean": float(np.mean(f_def)),
+        "admitted_frac": float(np.mean(fresh)),
+    }
+    return acct, wall_us
+
+
+def run_closed_loop(cfg: LoadConfig, mode: str) -> Dict[str, float]:
+    """One (mode, tau, f) cell of the serving benchmark."""
+    if mode not in ("sync", "async"):
+        raise ValueError(f"mode must be sync|async, got {mode!r}")
+    lat = worker_latencies(cfg)
+    if mode == "sync":
+        # lockstep: every round waits for the slowest worker; everyone
+        # is always fresh, the buffer degenerates to pass-through
+        fresh = np.ones((cfg.rounds, cfg.n), dtype=bool)
+        acct, agg_us = replay_buffer(cfg, fresh)
+        waits_ms = np.max(lat, axis=1)
+        round_us = waits_ms * 1000.0 + agg_us
+    else:
+        cut = deadline_ms(cfg, lat)
+        # round wall needs agg_us: measure once on an all-fresh replay,
+        # then replay the actual arrival schedule for the accounting
+        _, agg_us = replay_buffer(cfg, np.ones((cfg.rounds, cfg.n), bool))
+        wall_ms = cut + agg_us / 1000.0
+        fresh = arrival_masks(cfg, lat, wall_ms, cut)
+        acct, agg_us = replay_buffer(cfg, fresh)
+        round_us = np.full(cfg.rounds, cut * 1000.0 + agg_us)
+    total_s = float(np.sum(round_us)) / 1e6
+    return {
+        "qps": cfg.microbatch * cfg.rounds / total_s,
+        "round_us": float(np.mean(round_us)),
+        "agg_us": float(agg_us),
+        **acct,
+    }

@@ -1,0 +1,164 @@
+"""The async plan/apply aggregation service (DESIGN.md §13).
+
+:class:`AsyncAggService` bundles the shared
+:class:`~repro.core.api.AggregatorBackend` with a staleness bound: the
+*plan service* runs on the buffered statistics (O(n²), d-free), the
+*apply service* applies the covered plan to the buffered gradient stack.
+Both the synchronous trainers and ``make_robust_serve_step`` consume the
+same backend; this module adds the bounded-staleness round on top
+(``repro.serve.buffer``) and the trainer step that threads its state
+through ``TrainerState.bstate``.
+
+The service loop is deliberately collective-free: cross-worker data moves
+through the buffer (admission is a masked ``where``), never through
+blocking collectives — ``analysis/lint.py`` rule R006 enforces this
+statically on every async service function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RobustConfig
+from repro.core import api
+from repro.core import theory
+from repro import models as MD
+from repro.optim.optimizers import Optimizer
+from repro.serve import buffer as BUF
+from repro.dist.trainer import (TrainerState, _honest_mean_dev,
+                                as_trainer_state, inject_byzantine)
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncAggService:
+    """Plan service + apply service over a bounded-staleness buffer.
+
+    ``backend`` is the one shared aggregation pipeline; ``tau`` the
+    staleness bound (a slot older than ``tau`` rounds is overstale and
+    spends contract-f budget — ``core.theory.staleness_budget``).
+    """
+
+    backend: api.AggregatorBackend
+    tau: int
+
+    def __post_init__(self):
+        # config-time gate: n is unknown here, but tau must be sane
+        if self.tau < 0:
+            raise ValueError(f"staleness bound tau must be >= 0, "
+                             f"got {self.tau}")
+
+    def budget(self, n: int) -> theory.StalenessBudget:
+        return theory.staleness_budget(n, self.backend.f, self.tau,
+                                       rule=self.backend.gar)
+
+    def init_state(self, grads_like: PyTree) -> BUF.BufferState:
+        return BUF.init_buffer_state(grads_like, self.backend, tau=self.tau)
+
+    # ------------------------------------------------------------ services
+    def plan(self, state: BUF.BufferState
+             ) -> Tuple[api.AggPlan, Dict[str, Array]]:
+        """The plan service on the current buffer (no admission)."""
+        info = BUF.staleness_info(state.age, tau=self.tau,
+                                  f=self.backend.f)
+        plan, stats = self.backend.plan_stats(state.grads)
+        plan = api.select_plan(info["admissible"], plan, state.plan)
+        info = dict(info, stats=stats)
+        return plan, info
+
+    def apply(self, plan: api.AggPlan, state: BUF.BufferState) -> PyTree:
+        """The apply service: the covered plan over the buffered stack."""
+        return self.backend.apply(plan, state.grads)
+
+    def round(self, state: BUF.BufferState, grads: PyTree, fresh: Array
+              ) -> Tuple[PyTree, BUF.BufferState, Dict[str, Array]]:
+        """One full async round: admit → plan → apply."""
+        return BUF.buffered_round(state, self.backend, grads, fresh,
+                                  tau=self.tau)
+
+
+def with_buffer(tstate: TrainerState, service: AsyncAggService,
+                params: PyTree, n_workers: int) -> TrainerState:
+    """Seed the ``bstate`` slot of a :class:`TrainerState` for the async
+    trainer (stacked gradient shapes mirror the params)."""
+    stacked = jax.tree.map(
+        lambda p: jnp.zeros((n_workers,) + p.shape, p.dtype), params)
+    return dataclasses.replace(tstate, bstate=service.init_state(stacked))
+
+
+def make_async_train_step(cfg: ArchConfig, rcfg: RobustConfig,
+                          opt: Optimizer, lr_fn, *, tau: int,
+                          window: int = 0, chunk_q: int = 1024,
+                          attack: str = "none",
+                          attack_f: Optional[int] = None,
+                          telemetry: bool = False):
+    """Build the bounded-staleness async trainer step.
+
+    Signature ``(params, state, batch, key, fresh) -> (params, state,
+    metrics)`` — ``fresh`` is the (n,) bool delivery mask of the round
+    (True = the worker's gradient arrived by the deadline).  Workers that
+    missed keep their buffered slot; slots older than ``tau`` rounds are
+    overstale and haircut the byzantine budget
+    (``core.theory.StalenessBudget``).  The buffer state lives in
+    ``TrainerState.bstate`` — seed it with :func:`with_buffer`.
+
+    v1 scope: the async path composes with attacks and telemetry but not
+    with transforms / codecs / hierarchical aggregation / the mesh-native
+    (spmd) path — those raise in the synchronous trainer's richer builder
+    and stay synchronous for now.
+    """
+    rcfg.validate()
+    backend = api.AggregatorBackend.for_config(rcfg, needs_dists=telemetry)
+    service = AsyncAggService(backend=backend, tau=tau)
+    theory.staleness_budget(rcfg.n_workers, rcfg.f, tau, rule=rcfg.gar)
+    f_eff = rcfg.f if attack_f is None else attack_f
+    if not 0 <= f_eff <= rcfg.f:
+        raise ValueError(
+            f"attack_f must be in [0, f] (attack_f={f_eff}, f={rcfg.f})")
+
+    def worker_loss(p, wb):
+        return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q)
+
+    def step(params, state, batch, key, fresh):
+        state = as_trainer_state(state)
+        if state.bstate is None:
+            raise ValueError("async trainer needs TrainerState.bstate; "
+                             "seed it with serve.service.with_buffer()")
+        losses, grads = jax.vmap(
+            lambda wb: jax.value_and_grad(worker_loss)(params, wb))(batch)
+        grads = inject_byzantine(grads, f_eff, attack, key)
+        agg, bstate, info = service.round(state.bstate, grads, fresh)
+        lr = lr_fn(state.opt.step)
+        new_params, new_opt = opt.update(agg, state.opt, params, lr)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(g.astype(jnp.float32) ** 2)
+            for g in jax.tree.leaves(agg)))
+        metrics = {
+            "loss": jnp.mean(losses),
+            "loss_per_worker": losses,
+            "lr": jnp.asarray(lr, jnp.float32),
+            "agg_grad_norm": gnorm,
+        }
+        if telemetry:
+            diag = bstate.plan.diagnostics(info["stats"])
+            diag["byz_mass"] = jnp.sum(diag["selection"][:f_eff])
+            # deviation vs the honest rows of the *buffered* stack — the
+            # values the aggregate was actually computed from
+            diag["honest_dev"] = _honest_mean_dev(agg, bstate.grads, f_eff)
+            diag["admitted"] = fresh.astype(jnp.float32)
+            diag["overstale"] = info["overstale"].astype(jnp.float32)
+            diag["staleness_age"] = info["age"].astype(jnp.float32)
+            diag["n_overstale"] = info["n_overstale"].astype(jnp.float32)
+            diag["f_defended"] = info["f_defended"].astype(jnp.float32)
+            diag["plan_reused"] = info["plan_reused"].astype(jnp.float32)
+            metrics["telemetry"] = diag
+        return (new_params,
+                dataclasses.replace(state, opt=new_opt, bstate=bstate),
+                metrics)
+
+    return step

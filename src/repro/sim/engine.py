@@ -68,13 +68,16 @@ class CampaignResult:
 
 
 def _phase_batches(scenario: Scenario, phase: AttackPhase, start: int,
-                   mixture) -> PyTree:
+                   mixture, *, freeze: bool = True) -> PyTree:
     """Worker-split token batches for one phase: leaves (steps, n, pwb, ...).
 
     Batch randomness is keyed by the *global* step index (phase layout does
     not change the data), matching ``launch/train.py``'s per-step fold_in
     convention.  Stale (churned) workers are frozen to the phase's first
-    batch — they keep resubmitting gradients computed on old data.
+    batch — they keep resubmitting gradients computed on old data.  On the
+    async path (``freeze=False``) the data stays fresh: staleness is
+    modelled by the real gradient buffer instead (missed deadlines replay
+    the worker's *buffered* gradient, see :func:`_phase_fresh`).
     """
     n, pwb, seq = scenario.n_workers, scenario.per_worker_batch, scenario.seq
     vocab = scenario.arch.vocab_size
@@ -92,10 +95,27 @@ def _phase_batches(scenario: Scenario, phase: AttackPhase, start: int,
 
     steps = jnp.arange(start, start + phase.steps)
     batches = jax.vmap(one)(steps)
-    for w in phase.stale_workers:
-        batches = jax.tree.map(
-            lambda x: x.at[:, w].set(x[0, w]), batches)
+    if freeze:
+        for w in phase.stale_workers:
+            batches = jax.tree.map(
+                lambda x: x.at[:, w].set(x[0, w]), batches)
     return batches
+
+
+def _phase_fresh(scenario: Scenario, phase: AttackPhase,
+                 start: int) -> jnp.ndarray:
+    """(steps, n) bool delivery masks for the async buffered path.
+
+    A phase's ``stale_workers`` miss the round deadline and deliver only
+    every ``scenario.stale_period`` rounds (keyed by *global* step so
+    resume replays the same arrival schedule); everyone else delivers
+    every round.
+    """
+    fresh = np.ones((phase.steps, scenario.n_workers), dtype=bool)
+    for w in phase.stale_workers:
+        for t in range(phase.steps):
+            fresh[t, w] = (start + t) % scenario.stale_period == 0
+    return jnp.asarray(fresh)
 
 
 def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
@@ -140,7 +160,17 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
     tstate: TrainerState = init_train_state(
         opt, params, transforms, n_workers=scenario.n_workers,
         codec=scenario.codec)
+    if scenario.async_tau > 0:
+        # the campaign replays through the real bounded-staleness buffer:
+        # seed the TrainerState-resident round state (DESIGN.md §13)
+        from repro.core import api
+        from repro.serve import service as SRV
+        svc = SRV.AsyncAggService(
+            backend=api.AggregatorBackend.for_config(rcfg, needs_dists=True),
+            tau=scenario.async_tau)
+        tstate = SRV.with_buffer(tstate, svc, params, scenario.n_workers)
     susp = TEL.init_suspicion(scenario.n_workers)
+    stale_ema = TEL.init_suspicion(scenario.n_workers)
     gsusp = None
     if hier is not None:
         n_groups = hier.budget(scenario.n_workers, scenario.f).n_groups
@@ -166,11 +196,14 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
             like = {"params": params, "state": tstate, "susp": susp}
             if gsusp is not None:
                 like["gsusp"] = gsusp
+            if scenario.async_tau > 0:
+                like["stale"] = stale_ema
             loaded = restore(ckpt_dir, latest, like,
                              key_aliases=LEGACY_STATE_ALIASES)
             params, tstate = loaded["params"], loaded["state"]
             susp = loaded["susp"]
             gsusp = loaded.get("gsusp", gsusp)
+            stale_ema = loaded.get("stale", stale_ema)
             start_step = latest
             if verbose:
                 print(f"[sim] resumed {scenario.name} at step {latest}")
@@ -184,8 +217,16 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
     # the phase index rides in the carry so it never bakes into the trace)
     runners = {}
 
+    is_async = scenario.async_tau > 0
+
     def _make_runner(attack: str, f_eff: int):
-        if scenario.trainer == "stacked":
+        if is_async:
+            from repro.serve.service import make_async_train_step
+            step_fn = make_async_train_step(
+                cfg, rcfg, opt, lr_fn, tau=scenario.async_tau,
+                chunk_q=chunk_q, attack=attack, attack_f=f_eff,
+                telemetry=True)
+        elif scenario.trainer == "stacked":
             step_fn = make_train_step(
                 cfg, rcfg, opt, lr_fn, chunk_q=chunk_q, attack=attack,
                 attack_f=f_eff, transforms=transforms,
@@ -199,17 +240,22 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
                 codec=scenario.codec, telemetry=True, hier=hier)
 
         def body(carry, xs):
-            p, st, sp, gsp, pi = carry
-            batch, k = xs
-            p, st, m = step_fn(p, st, batch, k)
+            p, st, sp, gsp, stale, pi = carry
+            batch, k, fresh = xs
+            if is_async:
+                p, st, m = step_fn(p, st, batch, k, fresh)
+                stale = TEL.update_ema(stale, m["telemetry"]["overstale"],
+                                       scenario.suspicion_ema)
+            else:
+                p, st, m = step_fn(p, st, batch, k)
             sp = TEL.update_suspicion(sp, m["telemetry"]["selection"],
                                       scenario.suspicion_ema)
             if gsp is not None:
                 gsp = TEL.update_suspicion(
                     gsp, m["telemetry"]["group_selection"],
                     scenario.suspicion_ema)
-            return (p, st, sp, gsp, pi), TEL.step_record(m, sp, pi,
-                                                         gsusp=gsp)
+            return (p, st, sp, gsp, stale, pi), TEL.step_record(
+                m, sp, pi, gsusp=gsp, stale=stale if is_async else None)
 
         return jax.jit(lambda c, xs: jax.lax.scan(body, c, xs))
 
@@ -232,12 +278,16 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
         # phase-local, everything else carries across phases
         state = dataclasses.replace(tstate, astate=astate)
 
-        batches = _phase_batches(scenario, phase, start, mixture)
+        batches = _phase_batches(scenario, phase, start, mixture,
+                                 freeze=not is_async)
         keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
             jnp.arange(start, stop))
-        (params, state, susp, gsusp, _), rec = runner(
-            (params, state, susp, gsusp, jnp.asarray(phase_idx, jnp.int32)),
-            (batches, keys))
+        fresh = _phase_fresh(scenario, phase, start) if is_async else \
+            jnp.ones((stop - start, scenario.n_workers), bool)
+        (params, state, susp, gsusp, stale_ema, _), rec = runner(
+            (params, state, susp, gsusp, stale_ema,
+             jnp.asarray(phase_idx, jnp.int32)),
+            (batches, keys, fresh))
         tstate = dataclasses.replace(state, astate=None)
         phase_traces.append(jax.device_get(rec))
         if verbose:
@@ -251,6 +301,8 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
             ck = {"params": params, "state": tstate, "susp": susp}
             if gsusp is not None:
                 ck["gsusp"] = gsusp
+            if scenario.async_tau > 0:
+                ck["stale"] = stale_ema
             save(ckpt_dir, stop, ck)
 
     trace = TEL.concat_traces(phase_traces)

@@ -131,6 +131,14 @@ class Scenario:
     hier_f_inner: Optional[int] = None
     hier_f_outer: Optional[int] = None
     hier_enforce: bool = True
+    # async bounded-staleness aggregation — repro.serve, DESIGN.md §13.
+    # async_tau=0 keeps the synchronous lockstep path; > 0 replays every
+    # phase through the real gradient buffer: each phase's stale_workers
+    # miss the round deadline and deliver only every stale_period rounds,
+    # slots older than async_tau rounds are overstale and haircut the
+    # byzantine budget (core.theory.StalenessBudget).
+    async_tau: int = 0
+    stale_period: int = 4
 
     def __post_init__(self):
         if self.trainer not in ("stacked", "stream_block", "stream_global"):
@@ -177,6 +185,28 @@ class Scenario:
                     "(no residual slot at the leaders→server hop)")
         if self.hier_g < 0:
             raise ValueError(f"hier_g must be >= 0, got {self.hier_g}")
+        if self.async_tau < 0:
+            raise ValueError(
+                f"async_tau must be >= 0, got {self.async_tau}")
+        if self.async_tau > 0:
+            if self.stale_period < 1:
+                raise ValueError(
+                    f"stale_period must be >= 1, got {self.stale_period}")
+            if self.trainer != "stacked":
+                raise ValueError(
+                    "async bounded-staleness aggregation needs "
+                    "trainer='stacked'")
+            if self.transforms or self.codec is not None or self.hier_g > 0:
+                raise ValueError(
+                    "async_tau > 0 does not compose with transforms, "
+                    "codecs or hierarchical aggregation yet (the v1 "
+                    "service scope — DESIGN.md §13)")
+            for p in self.schedule.phases:
+                name, _ = ATK.parse_spec(p.attack)
+                if name in ATK.ADAPTIVE:
+                    raise ValueError(
+                        f"adaptive attack {name!r} is not supported on "
+                        f"the async service path")
         if self.hier_g > 0:
             # fail on an infeasible per-level budget at scenario build
             # time; split_f_budget raises with the offending level named
@@ -236,6 +266,9 @@ class Scenario:
                  "f": self.phase_f(p), "stale_workers": list(p.stale_workers)}
                 for p in self.schedule.phases
             ],
+            **({"async": {"tau": self.async_tau,
+                          "stale_period": self.stale_period}}
+               if self.async_tau > 0 else {}),
             **({"hier": {"g": self.hier_g,
                          "rule": self.hier_rule or self.gar,
                          "outer_rule": self.hier_outer_rule,

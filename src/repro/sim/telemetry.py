@@ -34,9 +34,17 @@ def update_suspicion(susp: Array, selection: Array, ema: float) -> Array:
     return ema * susp + (1.0 - ema) * rej
 
 
+def update_ema(prev: Array, value: Array, ema: float) -> Array:
+    """Plain per-worker EMA — the suspicion-carry pattern for any 0/1
+    indicator (the async service uses it on the per-round overstale mask,
+    so campaigns report *sustained* staleness per worker, not one-round
+    blips)."""
+    return ema * prev + (1.0 - ema) * value.astype(jnp.float32)
+
+
 def step_record(metrics: Dict[str, Any], susp: Array,
-                phase_idx: int, gsusp: "Array | None" = None
-                ) -> Dict[str, Array]:
+                phase_idx: int, gsusp: "Array | None" = None,
+                stale: "Array | None" = None) -> Dict[str, Array]:
     """Assemble one scan output slot from the trainer metrics.
 
     Everything is a fixed-shape fp32/int32 array so ``lax.scan`` stacks the
@@ -56,6 +64,8 @@ def step_record(metrics: Dict[str, Any], susp: Array,
     }
     if gsusp is not None:
         rec["group_suspicion"] = gsusp
+    if stale is not None:
+        rec["staleness_ema"] = stale
     for k, v in diag.items():
         rec[k] = jnp.asarray(v, jnp.float32)
     return rec
@@ -107,13 +117,25 @@ def summarize(trace: Dict[str, np.ndarray], scenario,
             "loss_last": float(trace["loss"][stop - 1]),
             "loss_mean": float(np.mean(trace["loss"][sl])),
         }
-        for k in ("honest_dev", "byz_mass", "score_gap", "mean_dist"):
+        for k in ("honest_dev", "byz_mass", "score_gap", "mean_dist",
+                  "n_overstale", "f_defended", "plan_reused"):
             if k in trace:
                 ph[f"{k}_mean"] = float(np.mean(trace[k][sl]))
                 ph[f"{k}_max"] = float(np.max(trace[k][sl]))
         if "selection" in trace:
             ph["selection_mean"] = np.mean(
                 trace["selection"][sl], axis=0).tolist()
+        # async staleness accounting: which workers were admitted on time
+        # vs sat overstale (haircut) this phase — repro.serve telemetry
+        if "admitted" in trace:
+            ph["admitted_mean"] = np.mean(
+                trace["admitted"][sl], axis=0).tolist()
+        if "overstale" in trace:
+            ph["overstale_mean"] = np.mean(
+                trace["overstale"][sl], axis=0).tolist()
+        if "staleness_ema" in trace:
+            ph["staleness_ema_last"] = \
+                trace["staleness_ema"][stop - 1].tolist()
         if "suspicion" in trace:
             ph["suspicion_last"] = trace["suspicion"][stop - 1].tolist()
         if "group_selection" in trace:

@@ -1,0 +1,7 @@
+"""R006 fixture: blocking collective inside an async service function."""
+import jax
+
+
+def async_plan_loop(stack, axis_name):   # R006: psum barriers the workers
+    total = jax.lax.psum(stack, axis_name)
+    return total

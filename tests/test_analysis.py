@@ -191,16 +191,32 @@ def bench():
 
 
 def test_vmem_matches_autotuner_at_grid_points():
+    # the estimator must live on the exact tile the fused_select wrapper
+    # launches with — the shared policy (base cap + deep-grid lift)
     from repro.kernels import ops
     for n, d in ((11, 4096), (15, 100_000), (15, 1_000_000)):
         est = vmem.estimate_fused_select(n, d)
         n_pad = n + (-n) % 8
         theta = n - 2 * vmem.f_for_bench(n) - 2
-        want = ops.autotune_d_tile(
-            n_pad, d, scratch_rows=ops._select_scratch_rows(theta),
-            fixed_bytes=2 * theta * n_pad * 4)
+        want = ops.fused_select_d_tile(n_pad, d, theta)
         assert est.d_tile == want
         assert est.vmem_bytes <= est.vmem_budget   # chosen tile must fit
+
+
+def test_deep_grid_tile_lift():
+    # past DEEP_GRID_STEPS the cap lifts; the lifted launch must still fit
+    # the budget and must not change shallow-grid tiles
+    from repro.kernels import ops
+    theta = 15 - 2 * vmem.f_for_bench(15) - 2
+    shallow = ops.fused_select_d_tile(16, 100_000, theta)
+    assert shallow == ops.autotune_d_tile(
+        16, 100_000, scratch_rows=ops._select_scratch_rows(theta),
+        fixed_bytes=2 * theta * 16 * 4)
+    deep = ops.fused_select_d_tile(16, 1_000_000, theta)
+    assert deep > shallow
+    assert deep <= ops._DEEP_MAX_D_TILE
+    est = vmem.estimate_fused_select(15, 1_000_000)
+    assert est.d_tile == deep and est.vmem_bytes <= est.vmem_budget
 
 
 def test_vmem_flags_the_d1e6_cliff():

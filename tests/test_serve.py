@@ -1,0 +1,232 @@
+"""repro.serve: bounded-staleness buffer semantics + microbatched serving.
+
+The contract under test (DESIGN.md §13): admission is deterministic (the
+same delivery schedule yields bitwise-identical plans), a round with more
+than f overstale workers degrades to the previous covered plan, and the
+staleness haircut never defends more than the contract f.  The jnp
+staleness arithmetic must agree with ``core.theory.StalenessBudget`` for
+every overstale count, and the async service must aggregate through the
+exact same backend as the synchronous registry path.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import models as MD
+from repro.configs.base import RobustConfig
+from repro.core import api, theory
+from repro.dist.serving import make_robust_serve_step
+from repro.serve import batching as SB
+from repro.serve import buffer as BUF
+from repro.serve import service as SV
+
+from helpers import reduced_cfg
+
+KEY = jax.random.key(0)
+TOL = 5e-2
+N, F, TAU = 11, 2, 1
+
+
+def _service(tau=TAU, f=F, needs_dists=False):
+    return SV.AsyncAggService(
+        backend=api.AggregatorBackend(gar="multi_bulyan", f=f,
+                                      needs_dists=needs_dists),
+        tau=tau)
+
+
+def _grads(r, d=64):
+    g = jax.random.normal(jax.random.fold_in(KEY, r), (N, d))
+    # byzantine convention: rows [0, f) are the traitors
+    return {"w": g.at[:F].multiply(5.0)}
+
+
+def _run(svc, schedule, d=64):
+    """Replay a delivery schedule through the jitted round; collect all."""
+    rnd = jax.jit(lambda s, g, fr: svc.round(s, g, fr))
+    state = svc.init_state(_grads(0, d))
+    out = []
+    for r, fresh in enumerate(schedule):
+        agg, state, info = rnd(state, _grads(r, d),
+                               jnp.asarray(fresh, jnp.bool_))
+        out.append((agg, state, info))
+    return out
+
+
+# ===================================================== admission semantics
+def test_staleness_admission_determinism():
+    """Same schedule ⇒ bitwise-identical aggregates AND plans."""
+    rng = np.random.default_rng(7)
+    schedule = [rng.random(N) < 0.7 for _ in range(6)]
+    a = _run(_service(), schedule)
+    b = _run(_service(), schedule)
+    for (agg_a, st_a, _), (agg_b, st_b, _) in zip(a, b):
+        assert np.array_equal(np.asarray(agg_a["w"]), np.asarray(agg_b["w"]))
+        assert np.array_equal(np.asarray(st_a.plan.weights),
+                              np.asarray(st_b.plan.weights))
+
+
+def test_all_stale_round_degrades_to_previous_plan():
+    """Past tau the round is inadmissible: the previous plan is reused.
+
+    With tau=1 a single missed round (age 1) is still admissible — the
+    whole point of bounded staleness — so degradation takes tau+1
+    consecutive all-stale rounds.
+    """
+    fresh = [True] * N
+    stale = [False] * N
+    out = _run(_service(), [fresh, stale, stale])
+    (_, _, i1), (agg2, st2, i2), (agg3, st3, i3) = out
+    assert not bool(i1["plan_reused"])
+    assert not bool(i2["plan_reused"])          # age 1 <= tau: admissible
+    assert bool(i3["plan_reused"])              # age 2 > tau for all n > f
+    assert int(i3["n_overstale"]) == N
+    assert int(i3["f_defended"]) == 0
+    # degraded plan IS the previous plan, and (buffer unchanged) so is agg
+    assert np.array_equal(np.asarray(st3.plan.weights),
+                          np.asarray(st2.plan.weights))
+    assert np.array_equal(np.asarray(agg3["w"]), np.asarray(agg2["w"]))
+
+
+def test_late_worker_enters_next_plan():
+    """A straggler's slot keeps serving its old gradient until it delivers;
+    its next delivery refreshes the slot (admitted into the *next* plan)."""
+    svc = _service()
+    miss = np.ones(N, bool)
+    miss[-1] = False                           # worker n-1 misses round 1
+    out = _run(svc, [np.ones(N, bool), miss, np.ones(N, bool)])
+    _, st1, _ = out[0]
+    _, st2, i2 = out[1]
+    _, st3, i3 = out[2]
+    # missed round: slot still holds the round-0 gradient, age ticks to 1
+    assert np.array_equal(np.asarray(st2.grads["w"][-1]),
+                          np.asarray(st1.grads["w"][-1]))
+    assert int(st2.age[-1]) == 1 and int(i2["n_overstale"]) == 0
+    # delivery: slot refreshed, age reset
+    assert np.array_equal(np.asarray(st3.grads["w"][-1]),
+                          np.asarray(_grads(2)["w"][-1]))
+    assert int(st3.age[-1]) == 0 and int(i3["n_overstale"]) == 0
+
+
+def test_effective_f_haircut_never_exceeds_contract():
+    """jnp staleness arithmetic == theory.StalenessBudget for every k."""
+    budget = theory.staleness_budget(N, F, TAU)
+    for k in range(N + 1):
+        age = jnp.full((N,), TAU + 1, jnp.int32).at[: N - k].set(0)
+        info = BUF.staleness_info(age, tau=TAU, f=F)
+        assert int(info["n_overstale"]) == k
+        assert int(info["f_defended"]) == budget.f_defended(k)
+        assert bool(info["admissible"]) == budget.admissible(k)
+        assert 0 <= int(info["f_defended"]) <= F
+
+
+def test_service_budget_gates_infeasible_pairs():
+    svc = _service()
+    assert svc.budget(N).f == F
+    with pytest.raises(ValueError):
+        svc.budget(F * 4 + 2)                  # multi_bulyan needs 4f+3
+    with pytest.raises(ValueError):
+        SV.AsyncAggService(backend=svc.backend, tau=-1)
+
+
+def test_all_fresh_round_matches_registry_aggregate():
+    """The async service on an all-fresh round IS the sync aggregator."""
+    out = _run(_service(), [np.ones(N, bool)])
+    agg, _, info = out[0]
+    want = api.aggregate_tree(_grads(0), F, "multi_bulyan")
+    assert np.array_equal(np.asarray(agg["w"]), np.asarray(want["w"]))
+    assert int(info["f_defended"]) == F and not bool(info["plan_reused"])
+
+
+# ==================================================== microbatched serving
+def test_microbatch_fuses_per_lane_positions():
+    """One plan/apply over the (n, B, V) stack == per-lane manual decode +
+    the same backend; padded lanes contribute zeros."""
+    cfg = reduced_cfg("qwen2-1.5b")
+    rcfg = RobustConfig(n_workers=7, f=1)
+    backend = api.AggregatorBackend.for_config(rcfg)
+    n, B = rcfg.n_workers, 3
+    lane_seq = [8, 12, 8]                       # per-request positions
+    cache_len = 16
+
+    params = [MD.init_model(jax.random.fold_in(KEY, i), cfg)
+              for i in range(n)]
+    stacked_params = jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+
+    lane_caches = []                            # [replica][lane] at B=1
+    for i in range(n):
+        row = []
+        for b, seq in enumerate(lane_seq):
+            batch = MD.make_batch(cfg, "prefill", 1, seq,
+                                  key=jax.random.fold_in(KEY, 100 + b))
+            _, c = MD.prefill_fn(params[i], cfg, batch, chunk_q=seq,
+                                 cache_len=cache_len)
+            row.append(c)
+        lane_caches.append(row)
+    # lanes concat on the cache batch axis (dim 1), replicas stack on dim 0
+    per_replica = [jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                                *row) for row in lane_caches]
+    stacked_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_replica)
+
+    toks = [3, 5]                               # 2 live requests + 1 pad
+    rb = SB.pack_requests(toks, lane_seq[:2], size=B)
+    step = SB.make_microbatch_serve_step(cfg, rcfg, backend=backend)
+    fused, new_caches = step(stacked_params, stacked_caches, rb)
+    assert fused.shape == (B, cfg.vocab_size)
+
+    # manual reference: per-replica per-lane B=1 decode, then one fuse
+    manual = np.zeros((n, B, cfg.vocab_size), np.float32)
+    for i in range(n):
+        for b in range(B):
+            lane = jax.tree.map(lambda x: x[i, :, b:b + 1],
+                                stacked_caches)
+            logits, _ = MD.decode_fn(params[i], cfg,
+                                     jnp.asarray([int(rb.tokens[b])]),
+                                     lane, rb.pos[b])
+            manual[i, b] = np.asarray(logits[0], np.float32)
+    manual *= np.asarray(rb.active, np.float32)[None, :, None]
+    want = backend(jnp.asarray(manual))
+    np.testing.assert_allclose(np.asarray(fused, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL, rtol=0)
+    # padded lane's logits were zeroed before fusing
+    assert not bool(rb.active[2])
+
+
+def test_microbatch_agrees_with_robust_serve_step_at_uniform_pos():
+    """At a uniform position the microbatch path and the batched robust
+    serve step are the same computation through the same backend."""
+    cfg = reduced_cfg("qwen2-1.5b")
+    rcfg = RobustConfig(n_workers=7, f=1)
+    backend = api.AggregatorBackend.for_config(rcfg)
+    n, B, seq = rcfg.n_workers, 2, 8
+
+    params = [MD.init_model(jax.random.fold_in(KEY, i), cfg)
+              for i in range(n)]
+    stacked_params = jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+    batch = MD.make_batch(cfg, "prefill", B, seq, key=KEY)
+    caches = [MD.prefill_fn(p, cfg, batch, chunk_q=seq, cache_len=16)[1]
+              for p in params]
+    stacked_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+    toks = [3, 5]
+    robust = make_robust_serve_step(cfg, rcfg, backend=backend)
+    want, _ = robust(stacked_params, stacked_caches,
+                     jnp.asarray(toks, jnp.int32), jnp.int32(seq))
+
+    rb = SB.pack_requests(toks, [seq] * B, size=B)
+    micro = SB.make_microbatch_serve_step(cfg, rcfg, backend=backend)
+    got, _ = micro(stacked_params, stacked_caches, rb)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL, rtol=0)
+
+
+def test_pack_requests_validation():
+    rb = SB.pack_requests([1, 2], [0, 3], size=4)
+    assert rb.size == 4
+    assert np.asarray(rb.active).tolist() == [True, True, False, False]
+    with pytest.raises(ValueError):
+        SB.pack_requests([1, 2, 3], [0, 1, 2], size=2)
+    with pytest.raises(ValueError):
+        SB.pack_requests([1, 2], [0], size=4)
