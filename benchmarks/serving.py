@@ -14,8 +14,11 @@ staleness accounting (overstale slots, plan reuse, the f haircut) is
 replayed through the real ``repro.serve.buffer``.
 
 Persists ``BENCH_serving.json``
-(schema ``serving.v1``: mode row -> "tau=<t>,f=<f>" -> cell) for
-``benchmarks/validate_bench.py``'s async-beats-sync ordering gate.
+(schema ``serving.v2``: mode row -> "tau=<t>,f=<f>" -> cell) for
+``benchmarks/validate_bench.py``'s async-beats-sync ordering gate.  v2
+adds per-cell ``round_us_p50/p95/p99`` — v1 collapsed the rounds to a
+mean before any percentile could exist, hiding the straggler tail the
+staleness bound is there to control.
 
 CSV: name,us_per_call,derived (value column = closed-loop QPS).
 """
@@ -28,7 +31,7 @@ from typing import Dict, List
 from repro.serve.loadgen import LoadConfig, run_closed_loop
 
 SERVING_JSON = "BENCH_serving.json"
-SCHEMA = "serving.v1"
+SCHEMA = "serving.v2"
 
 TAUS = (1, 2, 4)
 FS = (0, 2)

@@ -22,11 +22,16 @@ the payload's ``schema`` field:
   skipped-as-infeasible or ≥ 5× slower than the grouped path, and the
   grouped column must grow subquadratically in n (the O(n·g) vs O(n²)
   ordering gate);
-* serving (``serving.v1``) — closed-loop async vs sync robust serving
+* serving (``serving.v2``) — closed-loop async vs sync robust serving
   cells from ``benchmarks/serving.py``: both mode rows present with
-  positive finite qps/round_us, and async QPS *strictly above* sync on
-  every shared (τ ≥ 1, f > 0) cell — the bounded-staleness buffer must
+  positive finite qps/round_us, per-cell p50/p95/p99 round latency in
+  non-decreasing order, and async QPS *strictly above* sync on every
+  shared (τ ≥ 1, f > 0) cell — the bounded-staleness buffer must
   actually buy throughput where the byzantine contract is live;
+* obs (``bench.obs.v1``) — observability overhead cells from
+  ``benchmarks/obs_overhead.py``: every instrumented step type
+  (stacked/streaming/async) within the < 3 % per-step overhead budget
+  of its uninstrumented baseline;
 * analysis (``analysis.v1``) — the static-contract report from
   ``repro.launch.analyze``: zero committed lint violations, every
   sharding contract proven, kernel estimates present at the committed
@@ -68,11 +73,16 @@ HIER_ROWS = ("multi_bulyan[hier]", "multi_bulyan[flat]")
 HIER_FLAT_FACTOR = 5.0          # flat must be >= this × hier at n >= 1024
 HIER_BIG_N = 1024
 _HIER_KEY_RE = re.compile(r"^n=(\d+),g=(\d+),d=(\d+)$")
-SERVING_SCHEMA = "serving.v1"
-SERVING_FIELDS = ("qps", "round_us", "agg_us", "stale_rounds",
+SERVING_SCHEMA = "serving.v2"
+SERVING_FIELDS = ("qps", "round_us", "round_us_p50", "round_us_p95",
+                  "round_us_p99", "agg_us", "stale_rounds",
                   "reused_rounds", "f_defended_mean", "admitted_frac")
 SERVING_ROWS = ("multi_bulyan[sync]", "multi_bulyan[async]")
 _SERVING_KEY_RE = re.compile(r"^tau=(\d+),f=(\d+)$")
+OBS_SCHEMA = "bench.obs.v1"
+OBS_FIELDS = ("us_base", "us_obs", "overhead_frac")
+OBS_STEPS = ("stacked", "streaming", "async")
+OBS_MAX_OVERHEAD = 0.03
 
 
 def _fail(msg: str) -> "list[str]":
@@ -305,12 +315,20 @@ def _check_serving(path: str, results: dict) -> "list[str]":
             missing = [f for f in SERVING_FIELDS if f not in cell]
             if missing:
                 problems.append(f"{row}/{key}: missing {missing}")
-            for f in ("qps", "round_us"):
+            for f in ("qps", "round_us", "round_us_p50", "round_us_p95",
+                      "round_us_p99"):
                 v = cell.get(f)
                 if not isinstance(v, (int, float)) or not math.isfinite(v) \
                         or v <= 0:
                     problems.append(f"{row}/{key}: {f} must be a positive "
                                     f"finite number, got {v!r}")
+            ps = [cell.get(f) for f in ("round_us_p50", "round_us_p95",
+                                        "round_us_p99")]
+            if all(isinstance(p, (int, float)) for p in ps) and \
+                    not ps[0] <= ps[1] <= ps[2]:
+                problems.append(
+                    f"{row}/{key}: percentiles not non-decreasing "
+                    f"(p50={ps[0]!r}, p95={ps[1]!r}, p99={ps[2]!r})")
             af = cell.get("admitted_frac")
             if isinstance(af, (int, float)) and not 0.0 <= af <= 1.0:
                 problems.append(f"{row}/{key}: admitted_frac {af} "
@@ -335,6 +353,39 @@ def _check_serving(path: str, results: dict) -> "list[str]":
                 f"tau={t},f={f}: async qps ({aq!r}) not strictly above "
                 f"sync qps ({sq!r}) — the bounded-staleness buffer bought "
                 "no throughput")
+    return problems
+
+
+def _check_obs(path: str, results: dict) -> "list[str]":
+    """The observability overhead gate: < 3 % on every step type."""
+    problems = []
+    for step in OBS_STEPS:
+        if step not in results:
+            problems.append(f"missing required obs step row {step!r}")
+    for step, cell in results.items():
+        if not isinstance(cell, dict):
+            problems.append(f"{step}: cell must be an object")
+            continue
+        missing = [f for f in OBS_FIELDS if f not in cell]
+        if missing:
+            problems.append(f"{step}: missing {missing}")
+        for f in ("us_base", "us_obs"):
+            v = cell.get(f)
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v <= 0:
+                problems.append(f"{step}: {f} must be a positive finite "
+                                f"number, got {v!r}")
+        frac = cell.get("overhead_frac")
+        if not isinstance(frac, (int, float)) or not math.isfinite(frac):
+            problems.append(f"{step}: overhead_frac must be finite, "
+                            f"got {frac!r}")
+        elif frac >= OBS_MAX_OVERHEAD:
+            problems.append(
+                f"{step}: obs overhead {frac * 100:.2f}% >= "
+                f"{OBS_MAX_OVERHEAD * 100:.0f}% budget "
+                f"(us_base={cell.get('us_base')!r}, "
+                f"us_obs={cell.get('us_obs')!r}) — the in-graph registry "
+                "must stay effectively free")
     return problems
 
 
@@ -415,6 +466,8 @@ def check(path: str) -> "list[str]":
         problems += _check_hier(path, results)
     elif schema == SERVING_SCHEMA:
         problems += _check_serving(path, results)
+    elif schema == OBS_SCHEMA:
+        problems += _check_obs(path, results)
     elif schema == ANALYSIS_SCHEMA:
         problems += _check_analysis(path, results)
     elif schema == AGG_TIME_SCHEMA or schema is None:
@@ -424,7 +477,7 @@ def check(path: str) -> "list[str]":
     else:
         problems.append(
             f"{path}: unrecognised schema {schema!r}; known: "
-            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA, HIER_SCHEMA, SERVING_SCHEMA, ANALYSIS_SCHEMA]}")
+            f"{[AGG_TIME_SCHEMA, RESILIENCE_SCHEMA, COMM_SCHEMA, ACCURACY_SCHEMA, HIER_SCHEMA, SERVING_SCHEMA, OBS_SCHEMA, ANALYSIS_SCHEMA]}")
     return problems
 
 

@@ -38,6 +38,15 @@ stack silently depends on:
   never *wait* on workers — cross-worker data moves through the buffer's
   masked admission, and a collective in that loop silently reintroduces
   the lockstep barrier the subsystem exists to remove.
+* **R007 debug-io-in-step** — no host debug I/O (``jax.debug.print`` /
+  ``jax.debug.callback`` / ``jax.experimental.io_callback`` / bare
+  ``print``) inside jitted step functions: functions jit-decorated at
+  definition site, or named ``step`` / ``*_step`` (the trainer-builder
+  closures).  Each such call is a host round-trip per step — it
+  serialises the dispatch pipeline and silently destroys the perf the
+  benchmarks measure.  Observability belongs in the in-graph registry
+  (``repro.obs``, DESIGN.md §14), which is exempt by path: it is the
+  sanctioned channel, and its record ops are pure ``jnp``.
 
 ``lint_source`` lints one source string; ``lint_paths`` walks files and
 directories.  Both are pure AST passes — linted code is never imported.
@@ -49,7 +58,7 @@ import dataclasses
 import os
 from typing import Iterable, List, Optional, Sequence, Set, Tuple
 
-RULE_IDS = ("R001", "R002", "R003", "R004", "R005", "R006")
+RULE_IDS = ("R001", "R002", "R003", "R004", "R005", "R006", "R007")
 
 #: calls that touch devices / the backend when *executed* (R001 at module
 #: scope, R005 inside jitted bodies for the backend-resolving subset)
@@ -388,6 +397,49 @@ def _rule_async_collective(tree: ast.Module, path: str) -> List[Violation]:
     return out
 
 
+# ------------------------------------------------------------------ R007
+#: host debug I/O — each call is a host round-trip from inside the step
+_DEBUG_IO_CALLS = frozenset({
+    "jax.debug.print", "jax.debug.callback", "jax.debug.breakpoint",
+    "jax.experimental.io_callback", "io_callback", "print",
+})
+#: repro.obs is the sanctioned observability channel (pure-jnp record ops;
+#: host I/O only in its export layer, which no step ever traces)
+_OBS_PATH_MARKERS = (os.path.join("repro", "obs"),)
+
+
+def _rule_debug_io(tree: ast.Module, path: str) -> List[Violation]:
+    out = []
+    norm = path.replace("\\", "/")
+    if any(m.replace("\\", "/") in norm for m in _OBS_PATH_MARKERS):
+        return out
+
+    def is_step(node) -> bool:
+        if node.name == "step" or node.name.endswith("_step"):
+            return True
+        return any(_jit_decorator(d) is not None
+                   for d in node.decorator_list)
+
+    seen: Set[Tuple[int, str]] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                or not is_step(node):
+            continue
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = _dotted(sub.func) or ""
+            if name in _DEBUG_IO_CALLS and (sub.lineno, name) not in seen:
+                seen.add((sub.lineno, name))
+                out.append(Violation(
+                    "R007", path, sub.lineno,
+                    f"host debug I/O {name}() inside step function "
+                    f"{node.name}() — a host round-trip per step; record "
+                    "into the repro.obs registry/span ring instead "
+                    "(DESIGN.md §14)"))
+    return out
+
+
 #: rule id -> one-line description (R000 is the parse-failure sentinel)
 RULES = {
     "R000": "file must parse",
@@ -397,6 +449,8 @@ RULES = {
     "R004": "TrainerState is accessed by field name, never by index",
     "R005": "jit'd config/flag params must be declared static",
     "R006": "no blocking collectives inside the async service loop",
+    "R007": "no host debug I/O inside jitted step functions (use "
+            "repro.obs)",
 }
 
 
@@ -415,6 +469,7 @@ def lint_source(src: str, path: str = "<string>") -> List[Violation]:
     out += _rule_state_index(tree, path)
     out += _rule_jit_static(tree, path)
     out += _rule_async_collective(tree, path)
+    out += _rule_debug_io(tree, path)
     return sorted(out, key=lambda v: (v.path, v.line, v.rule))
 
 

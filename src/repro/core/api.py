@@ -877,6 +877,11 @@ class AggregatorBackend:
     fused: "bool | str" = True
     needs_dists: bool = False          # force stats for distance-free rules
     mesh_ctx: Optional[MeshContext] = None
+    # observability switchboard (repro.obs.ObsConfig, frozen+hashable):
+    # every consumer of a backend — trainers, async service, hier tree —
+    # reads the same config, so instrumentation can't half-apply.  None
+    # (the default) keeps every step builder on the uninstrumented path.
+    obs: Optional[Any] = None
 
     @classmethod
     def for_config(cls, rcfg, **overrides) -> "AggregatorBackend":

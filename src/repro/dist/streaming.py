@@ -42,6 +42,7 @@ from repro.dist.trainer import (_derive_mesh_ctx, _resolve_codec,
                                 honest_dev_finalize, inject_byzantine,
                                 inject_wire)
 from repro import models as MD
+from repro import obs as OBS
 from repro.optim.optimizers import Optimizer
 
 PyTree = Any
@@ -71,7 +72,8 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                               boundary_spec=None, dx_spec=None,
                               shard_map_mesh=None, shard_map_axes=None,
                               spmd: Optional[bool] = None,
-                              hier=None):
+                              hier=None,
+                              obs: Optional[OBS.ObsConfig] = None):
     """Build the streaming-trainer step function (same signature as stacked).
 
     ``attack`` accepts the same spec strings as the stacked trainer
@@ -112,6 +114,12 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
     slot is live — a state carrying transform/attack/residual extras is
     rejected at trace time, since this trainer would silently never
     update them); a bare ``OptState`` is coerced on entry.
+
+    ``obs`` mirrors the stacked trainer (DESIGN.md §14): an enabled
+    ``repro.obs.ObsConfig`` threads the device-resident registry through
+    ``TrainerState.mstate`` (the one extra slot this trainer *does*
+    carry) and records stats→plan→apply spans per step; disabled/None
+    compiles to the bitwise uninstrumented jaxpr.
     """
     if scope not in ("block", "global"):
         raise ValueError(f"scope must be 'block' or 'global', got {scope!r}")
@@ -157,6 +165,9 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
         return MD.loss_fn(p, cfg, wb, window=window, chunk_q=chunk_q,
                           boundary_spec=boundary_spec)
 
+    obs_live = OBS.obs_on(obs)
+    obs_trace = obs_live and obs.trace
+
     def step(params, state, batch, key):
         state = as_trainer_state(state)
         if state.tstates or state.astate is not None \
@@ -166,6 +177,11 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                 "TrainerState with live tstates/astate/cres belongs to "
                 "the stacked trainer (dist.make_train_step)")
         opt_state = state.opt
+        mstate = state.mstate
+        if obs_live and mstate is None:
+            mstate = OBS.init_train_obs(obs, rcfg.n_workers,
+                                        telemetry=telemetry)
+        obs_round = opt_state.step
         block_keys = _block_keys(params)
 
         def block_grads(p, k, with_loss=False):
@@ -298,6 +314,14 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             stats = api.AggStats(n=rcfg.n_workers, f=rcfg.f)
             aggregator.validate(stats.n, stats.f)
             plan = aggregator.plan(stats)
+
+        if obs_trace:
+            # one span per phase per step — pass-1 stats + the (global or
+            # per-block) plan; payload marks whether a global plan exists
+            t = OBS.record(mstate["t"], OBS.PH_STATS, obs_round)
+            t = OBS.record(t, OBS.PH_PLAN, obs_round,
+                           0.0 if plan is None else 1.0)
+            mstate = {**mstate, "t": t}
 
         # pass 2 (or the only pass): aggregate block by block; the first
         # block's value_and_grad also yields the per-worker loss metrics
@@ -446,6 +470,23 @@ def make_streaming_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                 diag["leader_wire_bytes"] = jnp.asarray(
                     leader_total, jnp.float32)
             metrics["telemetry"] = diag
-        return new_params, dataclasses.replace(state, opt=new_opt), metrics
+        if obs_live:
+            m = mstate["m"]
+            m = OBS.inc(m, "rounds")
+            m = OBS.set_gauge(m, "loss", metrics["loss"])
+            m = OBS.set_gauge(m, "agg_grad_norm", gnorm)
+            m = OBS.observe(m, "agg_grad_norm", gnorm)
+            if telemetry:
+                m = OBS.set_gauge(m, "byz_mass", diag["byz_mass"])
+                m = OBS.set_gauge(m, "suspicion", OBS.update_suspicion(
+                    m.gauges["suspicion"], diag["selection"],
+                    obs.suspicion_ema))
+            t = mstate["t"]
+            if obs_trace:
+                t = OBS.record(t, OBS.PH_APPLY, obs_round, gnorm)
+            mstate = {"m": m, "t": t}
+        return (new_params,
+                dataclasses.replace(state, opt=new_opt, mstate=mstate),
+                metrics)
 
     return step

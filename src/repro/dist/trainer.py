@@ -32,6 +32,7 @@ from repro.configs.base import ArchConfig, RobustConfig
 from repro.core import api
 from repro.core import attacks as ATK
 from repro import models as MD
+from repro import obs as OBS
 from repro.optim.optimizers import OptState, Optimizer
 
 PyTree = Any
@@ -126,7 +127,7 @@ def inject_wire(enc, f: int, attack, key, *, leaf_offset: int = 0):
 # -------------------------------------------------------------- state
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("opt", "tstates", "astate", "cres", "bstate"),
+    data_fields=("opt", "tstates", "astate", "cres", "bstate", "mstate"),
     meta_fields=())
 @dataclasses.dataclass(frozen=True)
 class TrainerState:
@@ -141,7 +142,12 @@ class TrainerState:
       the codec spec has ``ef=1``);
     * ``bstate``  — the async bounded-staleness buffer
       (``repro.serve.buffer.BufferState``; ``None`` on the synchronous
-      trainers — seed it with ``repro.serve.service.with_buffer``).
+      trainers — seed it with ``repro.serve.service.with_buffer``);
+    * ``mstate``  — the device-resident observability carry
+      (``{"m": repro.obs.MetricsState, "t": TraceState | None}``;
+      ``None`` unless the step was built with an enabled
+      ``repro.obs.ObsConfig`` — steps auto-seed it at trace time, scans
+      seed it up front with ``repro.obs.init_train_obs``).
 
     Unused slots are ``None``/``()`` and flatten to zero leaves, so the
     container costs nothing under jit and checkpoints by field *name*
@@ -156,6 +162,7 @@ class TrainerState:
     astate: Any = None
     cres: Any = None
     bstate: Any = None
+    mstate: Any = None
 
 
 def as_trainer_state(state) -> TrainerState:
@@ -279,7 +286,8 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                     boundary_spec=None,
                     shard_map_mesh=None, shard_map_axes=None,
                     spmd: Optional[bool] = None,
-                    hier=None):
+                    hier=None,
+                    obs: Optional[OBS.ObsConfig] = None):
     """Build the stacked-trainer step function (jit it yourself).
 
     ``attack`` is a spec string (``"little_is_enough:z=2.0"`` — see
@@ -300,6 +308,13 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     dequantize→stats kernel, apply on the decoded rows).  Error-feedback
     codecs (``ef=1``) thread a per-worker residual through the state
     (:func:`init_train_state`).
+
+    ``obs`` — an enabled ``repro.obs.ObsConfig`` — makes the step record
+    into the device-resident registry riding in ``TrainerState.mstate``
+    (rounds counter, loss / grad-norm gauges + histogram, suspicion EMA
+    under ``telemetry``) and ring-buffer stats→plan→apply span records
+    (DESIGN.md §14).  Disabled or ``None`` compiles to the bitwise
+    jaxpr of the uninstrumented step (tests/test_obs.py).
 
     With ``telemetry`` the metrics dict gains a ``"telemetry"`` sub-dict of
     plan diagnostics (``AggPlan.diagnostics``: per-worker selection mass,
@@ -352,8 +367,10 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
     # async service consume (DESIGN.md §13)
     backend = api.AggregatorBackend.for_config(
         rcfg, coord_chunk=coord_chunk, needs_dists=telemetry,
-        mesh_ctx=mesh_ctx)
+        mesh_ctx=mesh_ctx, obs=obs)
     needs_dists = backend.aggregator.needs_dists or telemetry
+    obs_live = OBS.obs_on(obs)
+    obs_trace = obs_live and obs.trace
     if hier is not None:
         if mesh_ctx is not None:
             raise NotImplementedError(
@@ -372,8 +389,16 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
         state = as_trainer_state(state)
         opt_state, tstates = state.opt, state.tstates
         astate, cres = state.astate, state.cres
+        mstate = state.mstate
         losses, grads = jax.vmap(
             lambda wb: jax.value_and_grad(worker_loss)(params, wb))(batch)
+        if obs_live and mstate is None:
+            # trace-time seed: the worker count is static here, and a jit
+            # caller retraces once when None becomes a live carry.  Scans
+            # seed up front instead (repro.obs.init_train_obs).
+            mstate = OBS.init_train_obs(obs, losses.shape[0],
+                                        telemetry=telemetry)
+        obs_round = opt_state.step
         if adaptive is not None:
             atk = functools.partial(adaptive.propose, state=astate)
         else:
@@ -414,14 +439,23 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
             agg, plan, hinfo = hier_aggregate_tree(
                 stats_src, rcfg.f, hier, codec=codec_obj, key=key,
                 coord_chunk=coord_chunk, use_pallas=rcfg.use_pallas,
-                needs_dists=needs_dists)
+                needs_dists=needs_dists, obs=obs, obs_state=mstate,
+                obs_round=obs_round)
+            mstate = hinfo["obs_state"]
             stats = None
         else:
             # backend.plan validates stats.n against the actual batch
             # split (which RobustConfig's construction-time check never
             # saw) before any selection runs
             stats = backend.stats(stats_src)
+            if obs_trace:
+                mstate = {**mstate, "t": OBS.record(
+                    mstate["t"], OBS.PH_STATS, obs_round)}
             plan = backend.plan(stats)
+            if obs_trace:
+                mstate = {**mstate, "t": OBS.record(
+                    mstate["t"], OBS.PH_PLAN, obs_round,
+                    jnp.max(plan.selection_weights()))}
             agg = backend.apply(plan, grads)
         if adaptive is not None:
             astate = adaptive.update(astate, plan.selection_weights())
@@ -449,9 +483,25 @@ def make_train_step(cfg: ArchConfig, rcfg: RobustConfig, opt: Optimizer,
                 diag["leader_wire_bytes"] = jnp.asarray(
                     hinfo["leader_wire_bytes"], jnp.float32)
             metrics["telemetry"] = diag
+        if obs_live:
+            m = mstate["m"]
+            m = OBS.inc(m, "rounds")
+            m = OBS.set_gauge(m, "loss", metrics["loss"])
+            m = OBS.set_gauge(m, "agg_grad_norm", gnorm)
+            m = OBS.observe(m, "agg_grad_norm", gnorm)
+            if telemetry:
+                m = OBS.set_gauge(m, "byz_mass", diag["byz_mass"])
+                m = OBS.set_gauge(m, "suspicion", OBS.update_suspicion(
+                    m.gauges["suspicion"], diag["selection"],
+                    obs.suspicion_ema))
+            t = mstate["t"]
+            if obs_trace:
+                t = OBS.record(t, OBS.PH_APPLY, obs_round, gnorm)
+            mstate = {"m": m, "t": t}
         return (new_params,
                 TrainerState(opt=new_opt, tstates=tstates, astate=astate,
-                             cres=cres, bstate=state.bstate),
+                             cres=cres, bstate=state.bstate,
+                             mstate=mstate),
                 metrics)
 
     return step

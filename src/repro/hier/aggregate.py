@@ -55,6 +55,9 @@ def hier_aggregate_tree(grads: PyTree, f: int, cfg: GroupConfig, *,
                         coord_chunk: int = 0, use_pallas: bool = False,
                         fused: "bool | str" = True,
                         needs_dists: Optional[bool] = None,
+                        obs: Optional[Any] = None,
+                        obs_state: Optional[Dict[str, Any]] = None,
+                        obs_round=None,
                         ) -> Tuple[PyTree, HierPlan, Dict[str, Any]]:
     """Aggregate a stacked pytree (or wire container) hierarchically.
 
@@ -73,7 +76,24 @@ def hier_aggregate_tree(grads: PyTree, f: int, cfg: GroupConfig, *,
     leader hop has no persistent residual slot).  ``needs_dists=True``
     forces per-group distance matrices even for distance-free rules (the
     trainers' telemetry wants the score spectrum regardless of rule).
+
+    ``obs``/``obs_state``/``obs_round`` thread the trainers' span ring
+    (DESIGN.md §14) through the tree: with an enabled+tracing
+    ``repro.obs.ObsConfig`` each level records its stats/plan/apply spans
+    (payload = group count of the level) and the updated carry is
+    returned as ``info["obs_state"]`` — otherwise ``obs_state`` passes
+    through untouched.
     """
+    from repro import obs as OBS
+    obs_trace = (OBS.obs_on(obs) and obs.trace and obs_state is not None
+                 and obs_state.get("t") is not None)
+
+    def span(st, phase, payload):
+        if not obs_trace:
+            return st
+        rnd = 0 if obs_round is None else obs_round
+        return {**st, "t": OBS.record(st["t"], phase, rnd, payload)}
+
     enc = api._as_encoded(grads)
     if enc is not None:
         n = enc.n
@@ -106,8 +126,16 @@ def hier_aggregate_tree(grads: PyTree, f: int, cfg: GroupConfig, *,
         inner_plans.append(p)
         inner_stats.append(st)
 
+    # inner level: one span triple (payload = group count), recorded after
+    # the per-group loop so it depends on every group's work in program
+    # order
+    obs_state = span(obs_state, OBS.PH_STATS, budget.n_groups)
+    obs_state = span(obs_state, OBS.PH_PLAN, budget.n_groups)
+    obs_state = span(obs_state, OBS.PH_APPLY, budget.n_groups)
+
     info: Dict[str, Any] = {"inner_stats": tuple(inner_stats),
-                            "outer_stats": None, "leader_wire_bytes": 0}
+                            "outer_stats": None, "leader_wire_bytes": 0,
+                            "obs_state": obs_state}
     if budget.n_groups == 1:
         # g >= n degenerates to the flat rule — no outer level, no second
         # wire hop; the single inner pass above is bitwise the flat path
@@ -141,6 +169,12 @@ def hier_aggregate_tree(grads: PyTree, f: int, cfg: GroupConfig, *,
     op = outer.plan(ost)
     agg = outer.apply(op, inter, coord_chunk=coord_chunk,
                       use_pallas=use_pallas, fused=fused)
+    # outer level: a second triple over the (n_groups, ...) stack
+    # (payload = 1 marks the single outer group)
+    obs_state = span(obs_state, OBS.PH_STATS, 1)
+    obs_state = span(obs_state, OBS.PH_PLAN, 1)
+    obs_state = span(obs_state, OBS.PH_APPLY, 1)
+    info["obs_state"] = obs_state
     info["outer_stats"] = ost
     hplan = HierPlan(inner=tuple(inner_plans), outer=op, n=n, f=f,
                      g=cfg.g, bounds=budget.bounds(),

@@ -33,6 +33,7 @@ from repro.kernels.dequant_stats import dequant_stats_pallas
 from repro.kernels.fused_select import fused_select_pallas
 from repro.kernels.pairwise_sqdist import (pairwise_sqdist_pallas,
                                            pairwise_stats_pallas)
+from repro.obs import profile as _prof
 
 Array = jax.Array
 
@@ -154,6 +155,8 @@ def pairwise_stats(x: Array, *, d_tile: Optional[int] = None,
         n_rows = x.shape[0] + (-x.shape[0]) % 8
         d_tile = autotune_d_tile(n_rows, x.shape[1],
                                  fixed_bytes=n_rows * (n_rows + 8) * 4)
+    _prof.record_kernel("pairwise_stats", n=x.shape[0], d=x.shape[1],
+                        d_tile=d_tile)
     return _pairwise_stats(x, d_tile=d_tile, interpret=_resolve(interpret))
 
 
@@ -181,6 +184,9 @@ def dequant_stats(payload: Array, mult: Array, *,
         n_rows = payload.shape[0] + (-payload.shape[0]) % 8
         d_tile = autotune_d_tile(n_rows, payload.shape[1],
                                  fixed_bytes=n_rows * (n_rows + 8) * 4)
+    _prof.record_kernel("dequant_stats", n=payload.shape[0],
+                        d=payload.shape[1], d_tile=d_tile,
+                        dtype=str(payload.dtype))
     return _dequant_stats(payload, mult, d_tile=d_tile,
                           interpret=_resolve(interpret))
 
@@ -222,5 +228,7 @@ def fused_select(x: Array, w_ext: Array, w_agr: Array, beta: int, *,
     if d_tile is None:
         n_rows = x.shape[0] + (-x.shape[0]) % 8
         d_tile = fused_select_d_tile(n_rows, x.shape[1], w_ext.shape[0])
+    _prof.record_kernel("fused_select", n=x.shape[0], d=x.shape[1],
+                        d_tile=d_tile, theta=w_ext.shape[0])
     return _fused_select(x, w_ext, w_agr, beta=beta, d_tile=d_tile,
                          interpret=_resolve(interpret))

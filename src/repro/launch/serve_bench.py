@@ -9,8 +9,10 @@ through the real gradient buffer:
       --json BENCH_serving.json
 
 ``--smoke`` shrinks to the CI grid (d=4096, 10 rounds, τ=1).  The JSON
-(schema ``serving.v1``) is gated by ``benchmarks/validate_bench.py``:
-async QPS must be strictly above sync on every (τ ≥ 1, f > 0) cell.
+(schema ``serving.v2``) is gated by ``benchmarks/validate_bench.py``:
+async QPS must be strictly above sync on every (τ ≥ 1, f > 0) cell, and
+every cell carries p50/p95/p99 round latency (the tail percentiles the
+v1 schema's per-grid mean could not express).
 """
 from __future__ import annotations
 
@@ -67,7 +69,9 @@ def main(argv: Optional[Tuple[str, ...]] = None) -> int:
                 results[row][f"tau={tau},f={f}"] = cell
                 print(f"[serve_bench] {row} tau={tau} f={f}: "
                       f"qps={cell['qps']:.1f} "
-                      f"round={cell['round_us']:.0f}us "
+                      f"round p50={cell['round_us_p50']:.0f}us "
+                      f"p95={cell['round_us_p95']:.0f}us "
+                      f"p99={cell['round_us_p99']:.0f}us "
                       f"stale_rounds={cell['stale_rounds']} "
                       f"f_defended={cell['f_defended_mean']:.1f}")
     meta = {"n": base.n, "d": base.d, "rounds": base.rounds,

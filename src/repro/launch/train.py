@@ -23,6 +23,7 @@ from repro.data import lm_batches
 from repro.dist import init_train_state, make_train_step, split_workers
 from repro.dist.streaming import make_streaming_train_step
 from repro import models as MD
+from repro import obs as OBS
 from repro.optim import make_optimizer, warmup_cosine
 
 
@@ -67,6 +68,17 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke preset: --reduced, 3 steps, log every "
                          "step")
+    ap.add_argument("--obs", action="store_true",
+                    help="jit-safe runtime observability (DESIGN.md §14): "
+                         "in-graph metrics registry + span ring in the "
+                         "step, host wall-clock spans around it; drains "
+                         "to an obs.v1 snapshot + a Perfetto/Chrome trace "
+                         "after the run")
+    ap.add_argument("--obs-json", default="obs_snapshot.json",
+                    help="obs.v1 snapshot output path (with --obs)")
+    ap.add_argument("--obs-trace", default="obs_trace.json",
+                    help="Chrome-trace output path (with --obs); open at "
+                         "https://ui.perfetto.dev")
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
@@ -140,18 +152,25 @@ def main(argv=None) -> int:
     lr_fn = warmup_cosine(args.lr, warmup=max(args.steps // 20, 1),
                           total_steps=args.steps)
     chunk_q = min(args.seq, 512)
+    # ring sized to retain the whole run (3-4 records/step); the jitted
+    # steps lazily seed TrainerState.mstate at trace time, so no carry
+    # surgery is needed here (unlike the sim engine's scan)
+    obs = OBS.ObsConfig(enabled=True, ring=max(128, 4 * args.steps)) \
+        if args.obs else None
     if args.trainer == "stacked":
         step_fn = make_train_step(cfg, rcfg, opt, lr_fn, chunk_q=chunk_q,
                                   attack=args.attack, codec=args.codec,
-                                  shard_map_mesh=mesh, hier=hier)
+                                  shard_map_mesh=mesh, hier=hier, obs=obs)
     else:
         scope = "global" if args.trainer.endswith("global") else "block"
         step_fn = make_streaming_train_step(cfg, rcfg, opt, lr_fn,
                                             scope=scope, chunk_q=chunk_q,
                                             attack=args.attack,
                                             codec=args.codec,
-                                            shard_map_mesh=mesh, hier=hier)
+                                            shard_map_mesh=mesh, hier=hier,
+                                            obs=obs)
     step_fn = jax.jit(step_fn)
+    tracer = OBS.SpanTracer() if args.obs else None
 
     global_batch = args.workers * args.per_worker_batch
     data = lm_batches(cfg.vocab_size, global_batch, args.seq, seed=args.seed)
@@ -170,8 +189,14 @@ def main(argv=None) -> int:
                 jax.random.fold_in(key, 20_000 + i),
                 (b, cfg.n_patches, cfg.d_model), dtype=jnp.bfloat16)
         wb = split_workers(batch, args.workers)
-        params, state, metrics = step_fn(params, state, wb,
-                                         jax.random.fold_in(key, i))
+        if tracer is not None:
+            with tracer.span("step", round=i):
+                params, state, metrics = step_fn(params, state, wb,
+                                                 jax.random.fold_in(key, i))
+                jax.block_until_ready(metrics["loss"])
+        else:
+            params, state, metrics = step_fn(params, state, wb,
+                                             jax.random.fold_in(key, i))
         if i % args.log_every == 0 or i == args.steps - 1:
             loss = float(metrics["loss"])
             print(f"[train] step {i:5d} loss {loss:.4f} "
@@ -180,6 +205,22 @@ def main(argv=None) -> int:
     if args.ckpt_dir:
         path = save(args.ckpt_dir, args.steps, {"params": params})
         print(f"[train] checkpoint -> {path}")
+    if args.obs and state.mstate is not None:
+        recs = OBS.drain(state.mstate.get("t"))
+        snap = OBS.snapshot(
+            metrics=state.mstate["m"], trace_records=recs,
+            meta={"source": "launch.train", "arch": cfg.name,
+                  "trainer": args.trainer, "steps": args.steps,
+                  "workers": args.workers, "f": args.f, "gar": args.gar,
+                  "attack": args.attack})
+        OBS.write_snapshot(args.obs_json, snap)
+        n_ev = OBS.export_chrome_trace(
+            args.obs_trace, device_records=recs, host_spans=tracer.spans,
+            meta={"source": "launch.train", "arch": cfg.name})
+        print(f"[train] obs: {len(recs)} span records, "
+              f"counters {snap['metrics']['counters']} "
+              f"-> {args.obs_json}, {n_ev} trace events -> "
+              f"{args.obs_trace}")
     print(f"[train] done: final loss {loss:.4f}")
     return 0
 

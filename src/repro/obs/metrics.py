@@ -1,0 +1,254 @@
+"""Device-resident metrics registry (DESIGN.md §14).
+
+The registry is a registered-pytree :class:`MetricsState` of counters,
+gauges and fixed-bucket histograms whose record ops are pure ``jnp``
+updates — legal inside ``lax.scan`` / ``shard_map``, no host callbacks, no
+sync.  What may be recorded in-graph is exactly what a pure function of
+the step's values can be: accumulate now, *drain host-side later*
+(``repro.obs.export``).
+
+Two invariants the tests pin down:
+
+* **disabled is free** — with ``ObsConfig(enabled=False)`` (or no config
+  at all) every instrumented step builder takes the identical code path
+  as the uninstrumented one: no ``MetricsState`` is created, the record
+  helpers pass ``None`` through, and the emitted jaxpr is bitwise the
+  uninstrumented step's (tests/test_obs.py);
+* **names are static** — the metric *set* is fixed by a hashable
+  :class:`MetricsSpec` at build time (it rides in the pytree's meta
+  fields), so recording never changes tree structure and a scan carry
+  stays shape-stable.  Recording an unknown name is a silent no-op by
+  design: producers (trainer / hier / serve) record unconditionally and
+  the spec decides what is kept.
+
+The per-worker suspicion EMA that ``repro.sim`` carries through campaign
+scans lives here too (:func:`update_suspicion` / :func:`update_ema`) —
+``sim/telemetry.py`` re-exports them so campaigns and the live registry
+share one metrics substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Jit-static observability switchboard (frozen, hashable).
+
+    Step builders close over one of these (threaded through
+    ``AggregatorBackend`` so every consumer of a backend sees the same
+    config); ``enabled=False`` — the default — compiles to a bitwise
+    no-op of the uninstrumented step.
+
+    * ``trace`` — also ring-buffer span records of the
+      stats→plan→apply→select_plan pipeline (``repro.obs.trace``);
+    * ``ring`` — span ring capacity (oldest records overwritten);
+    * ``suspicion_ema`` — decay of the per-worker suspicion gauge.
+    """
+
+    enabled: bool = False
+    trace: bool = True
+    ring: int = 128
+    suspicion_ema: float = 0.9
+
+    def __post_init__(self):
+        if self.ring < 1:
+            raise ValueError(f"ring capacity must be >= 1, got {self.ring}")
+        if not 0.0 <= self.suspicion_ema < 1.0:
+            raise ValueError(
+                f"suspicion_ema must be in [0, 1), got {self.suspicion_ema}")
+
+    @property
+    def on(self) -> bool:
+        return self.enabled
+
+
+def obs_on(obs: Optional[ObsConfig]) -> bool:
+    """The one guard every instrumented builder uses."""
+    return obs is not None and obs.enabled
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSpec:
+    """The static metric set: names, gauge shapes, histogram edges.
+
+    Hashable (tuples all the way down) so it can ride in a registered
+    dataclass's meta fields and in jit cache keys.  Histogram ``edges``
+    are the sorted right bucket boundaries; a histogram with ``k`` edges
+    has ``k + 1`` buckets — bucket ``i`` counts values ``v`` with
+    ``edges[i-1] <= v < edges[i]`` under ``searchsorted(side="right")``
+    semantics (bucket 0 is the underflow, bucket ``k`` the overflow).
+    """
+
+    counters: Tuple[str, ...] = ()
+    gauges: Tuple[Tuple[str, Tuple[int, ...]], ...] = ()
+    hists: Tuple[Tuple[str, Tuple[float, ...]], ...] = ()
+
+    def __post_init__(self):
+        # counters/gauges/hists are separate namespaces (separate dicts in
+        # MetricsState) — a gauge and a histogram may share a name
+        for kind, names in (("counters", self.counters),
+                            ("gauges", [n for n, _ in self.gauges]),
+                            ("hists", [n for n, _ in self.hists])):
+            if len(names) != len(set(names)):
+                raise ValueError(
+                    f"duplicate {kind} names in spec: {list(names)}")
+        for name, edges in self.hists:
+            if len(edges) < 1 or list(edges) != sorted(edges):
+                raise ValueError(
+                    f"histogram {name!r}: edges must be non-empty and "
+                    f"sorted, got {edges}")
+
+    def hist_edges(self, name: str) -> Tuple[float, ...]:
+        for n, edges in self.hists:
+            if n == name:
+                return edges
+        raise KeyError(f"no histogram {name!r} in spec")
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("counters", "gauges", "hists"),
+    meta_fields=("spec",))
+@dataclasses.dataclass(frozen=True)
+class MetricsState:
+    """The device-resident registry: one array per metric.
+
+    * ``counters[name]`` — () float32 monotone accumulator;
+    * ``gauges[name]``   — float32 array of the spec's shape, last-write;
+    * ``hists[name]``    — (len(edges) + 1,) int32 bucket counts.
+
+    A plain pytree of dicts — flattens by sorted name, checkpoints
+    through ``checkpoint/store.py`` under ``...|counters|<name>`` keys,
+    and scans/shard_maps like any other carry.
+    """
+
+    spec: MetricsSpec
+    counters: Dict[str, Array]
+    gauges: Dict[str, Array]
+    hists: Dict[str, Array]
+
+
+def init_metrics(spec: MetricsSpec) -> MetricsState:
+    return MetricsState(
+        spec=spec,
+        counters={n: jnp.zeros((), jnp.float32) for n in spec.counters},
+        gauges={n: jnp.zeros(shape, jnp.float32)
+                for n, shape in spec.gauges},
+        hists={n: jnp.zeros((len(edges) + 1,), jnp.int32)
+               for n, edges in spec.hists})
+
+
+def inc(state: Optional[MetricsState], name: str,
+        value=1.0) -> Optional[MetricsState]:
+    """Counter += value (pure; no-op when disabled or name unknown)."""
+    if state is None or name not in state.counters:
+        return state
+    c = dict(state.counters)
+    c[name] = c[name] + jnp.asarray(value, jnp.float32)
+    return dataclasses.replace(state, counters=c)
+
+
+def set_gauge(state: Optional[MetricsState], name: str,
+              value) -> Optional[MetricsState]:
+    """Gauge = value (last write wins; no-op when disabled/unknown)."""
+    if state is None or name not in state.gauges:
+        return state
+    g = dict(state.gauges)
+    g[name] = jnp.asarray(value, jnp.float32).reshape(g[name].shape)
+    return dataclasses.replace(state, gauges=g)
+
+
+def ema_gauge(state: Optional[MetricsState], name: str, value,
+              ema: float) -> Optional[MetricsState]:
+    """Gauge = ema·gauge + (1-ema)·value — the suspicion-carry update."""
+    if state is None or name not in state.gauges:
+        return state
+    g = dict(state.gauges)
+    v = jnp.asarray(value, jnp.float32).reshape(g[name].shape)
+    g[name] = ema * g[name] + (1.0 - ema) * v
+    return dataclasses.replace(state, gauges=g)
+
+
+def observe(state: Optional[MetricsState], name: str,
+            value) -> Optional[MetricsState]:
+    """Histogram: count every element of ``value`` into its bucket.
+
+    Bucket index is ``searchsorted(edges, v, side="right")`` on the
+    spec's static edges — exactly ``np.searchsorted``, which is what the
+    numpy-reference test checks bucket counts against.
+    """
+    if state is None or name not in state.hists:
+        return state
+    edges = jnp.asarray(state.spec.hist_edges(name), jnp.float32)
+    v = jnp.asarray(value, jnp.float32).ravel()
+    idx = jnp.searchsorted(edges, v, side="right")
+    h = dict(state.hists)
+    h[name] = h[name].at[idx].add(1)
+    return dataclasses.replace(state, hists=h)
+
+
+# ---------------------------------------------------------- standard specs
+#: log₂-spaced gradient-norm buckets: underflow < 1e-3, overflow >= ~8e3
+GRAD_NORM_EDGES = tuple(float(2.0 ** e) for e in range(-10, 14))
+
+
+def train_spec(n_workers: int, *, telemetry: bool = False) -> MetricsSpec:
+    """The registry both synchronous trainers record into."""
+    gauges = [("loss", ()), ("agg_grad_norm", ())]
+    if telemetry:
+        gauges += [("suspicion", (n_workers,)), ("byz_mass", ())]
+    return MetricsSpec(counters=("rounds",),
+                       gauges=tuple(gauges),
+                       hists=(("agg_grad_norm", GRAD_NORM_EDGES),))
+
+
+def serve_spec(n_workers: int, tau: int, *,
+               telemetry: bool = False) -> MetricsSpec:
+    """The async service registry: staleness accounting on top of train.
+
+    The ``staleness_age`` histogram has one bucket per admissible age
+    ``0..tau`` plus the overstale overflow bucket (edges at ``i + 0.5``),
+    so the drained snapshot reads directly as "how stale were the slots
+    each round" (DESIGN.md §13 / §14).
+    """
+    age_edges = tuple(float(i) + 0.5 for i in range(tau + 1))
+    gauges = [("loss", ()), ("agg_grad_norm", ()), ("f_defended", ())]
+    if telemetry:
+        gauges += [("suspicion", (n_workers,)), ("byz_mass", ())]
+    return MetricsSpec(
+        counters=("rounds", "admitted", "overstale_slots", "degraded"),
+        gauges=tuple(gauges),
+        hists=(("agg_grad_norm", GRAD_NORM_EDGES),
+               ("staleness_age", age_edges)))
+
+
+# ------------------------------------------------- suspicion EMA (campaigns)
+def init_suspicion(n_workers: int) -> Array:
+    return jnp.zeros((n_workers,), jnp.float32)
+
+
+def update_suspicion(susp: Array, selection: Array, ema: float) -> Array:
+    """EMA of per-worker rejection.
+
+    A worker's per-step rejection is ``1 - selection_i / max_j selection_j``
+    (0 for the most-trusted worker, 1 for a fully rejected one) — normalised
+    so weighted rules and uniform rules land on the same scale.
+    """
+    rej = 1.0 - selection / (jnp.max(selection) + 1e-12)
+    return ema * susp + (1.0 - ema) * rej
+
+
+def update_ema(prev: Array, value: Array, ema: float) -> Array:
+    """Plain per-worker EMA — the suspicion-carry pattern for any 0/1
+    indicator (the async service uses it on the per-round overstale mask,
+    so campaigns report *sustained* staleness per worker, not one-round
+    blips)."""
+    return ema * prev + (1.0 - ema) * value.astype(jnp.float32)

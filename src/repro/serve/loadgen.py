@@ -123,12 +123,15 @@ def _make_round(cfg: LoadConfig):
 
 
 def replay_buffer(cfg: LoadConfig, fresh: np.ndarray
-                  ) -> Tuple[Dict[str, float], float]:
+                  ) -> Tuple[Dict[str, float], np.ndarray]:
     """Replay an arrival schedule through the real buffer.
 
-    Returns (accounting dict, measured mean aggregation µs per round).
-    The timing is measured on the same jitted round the accounting comes
-    from (warm-up call excluded, mean of the replay calls).
+    Returns (accounting dict, measured per-round aggregation µs — a
+    ``(rounds,)`` array).  The timing is measured on the same jitted
+    round the accounting comes from (warm-up call excluded); keeping the
+    per-round samples instead of a single mean is what lets the
+    benchmark report honest p50/p95/p99 round latency — a mean hides
+    exactly the tail a staleness bound exists to control.
     """
     import jax
 
@@ -141,15 +144,16 @@ def replay_buffer(cfg: LoadConfig, fresh: np.ndarray
     n_over = np.zeros(cfg.rounds)
     reused = np.zeros(cfg.rounds)
     f_def = np.zeros(cfg.rounds)
-    t0 = time.perf_counter()
+    agg_us = np.zeros(cfg.rounds)
     for r in range(cfg.rounds):
+        t0 = time.perf_counter()
         agg, state, info = round_fn(state, grads_for(r),
                                     jnp.asarray(fresh[r]))
         jax.block_until_ready(agg)
+        agg_us[r] = (time.perf_counter() - t0) * 1e6
         n_over[r] = int(info["n_overstale"])
         reused[r] = bool(info["plan_reused"])
         f_def[r] = int(info["f_defended"])
-    wall_us = (time.perf_counter() - t0) * 1e6 / cfg.rounds
     acct = {
         "stale_rounds": int(np.sum(n_over > 0)),
         "reused_rounds": int(np.sum(reused)),
@@ -157,11 +161,20 @@ def replay_buffer(cfg: LoadConfig, fresh: np.ndarray
         "f_defended_mean": float(np.mean(f_def)),
         "admitted_frac": float(np.mean(fresh)),
     }
-    return acct, wall_us
+    return acct, agg_us
 
 
 def run_closed_loop(cfg: LoadConfig, mode: str) -> Dict[str, float]:
-    """One (mode, tau, f) cell of the serving benchmark."""
+    """One (mode, tau, f) cell of the serving benchmark.
+
+    ``round_us`` is the per-round mean; the ``round_us_p50/p95/p99``
+    fields are percentiles over the *per-round* latency vector — in sync
+    mode each round's wall is its slowest worker plus that round's
+    measured aggregation, in async mode the fixed admission deadline
+    plus the round's measured aggregation, so the tail the percentiles
+    expose is real (the pre-v2 benchmark collapsed the rounds to a mean
+    before any percentile could be taken — the serving.v2 bugfix).
+    """
     if mode not in ("sync", "async"):
         raise ValueError(f"mode must be sync|async, got {mode!r}")
     lat = worker_latencies(cfg)
@@ -176,15 +189,19 @@ def run_closed_loop(cfg: LoadConfig, mode: str) -> Dict[str, float]:
         cut = deadline_ms(cfg, lat)
         # round wall needs agg_us: measure once on an all-fresh replay,
         # then replay the actual arrival schedule for the accounting
-        _, agg_us = replay_buffer(cfg, np.ones((cfg.rounds, cfg.n), bool))
-        wall_ms = cut + agg_us / 1000.0
+        _, warm_us = replay_buffer(cfg, np.ones((cfg.rounds, cfg.n), bool))
+        wall_ms = cut + float(np.mean(warm_us)) / 1000.0
         fresh = arrival_masks(cfg, lat, wall_ms, cut)
         acct, agg_us = replay_buffer(cfg, fresh)
-        round_us = np.full(cfg.rounds, cut * 1000.0 + agg_us)
+        round_us = cut * 1000.0 + agg_us
     total_s = float(np.sum(round_us)) / 1e6
+    p50, p95, p99 = np.percentile(round_us, [50.0, 95.0, 99.0])
     return {
         "qps": cfg.microbatch * cfg.rounds / total_s,
         "round_us": float(np.mean(round_us)),
-        "agg_us": float(agg_us),
+        "round_us_p50": float(p50),
+        "round_us_p95": float(p95),
+        "round_us_p99": float(p99),
+        "agg_us": float(np.mean(agg_us)),
         **acct,
     }

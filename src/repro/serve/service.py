@@ -26,6 +26,7 @@ from repro.configs.base import ArchConfig, RobustConfig
 from repro.core import api
 from repro.core import theory
 from repro import models as MD
+from repro import obs as OBS
 from repro.optim.optimizers import Optimizer
 from repro.serve import buffer as BUF
 from repro.dist.trainer import (TrainerState, _honest_mean_dev,
@@ -52,6 +53,12 @@ class AsyncAggService:
         if self.tau < 0:
             raise ValueError(f"staleness bound tau must be >= 0, "
                              f"got {self.tau}")
+
+    @property
+    def obs(self) -> Optional[OBS.ObsConfig]:
+        """The backend's observability config — one switchboard for every
+        consumer of the pipeline (DESIGN.md §14)."""
+        return self.backend.obs
 
     def budget(self, n: int) -> theory.StalenessBudget:
         return theory.staleness_budget(n, self.backend.f, self.tau,
@@ -96,7 +103,8 @@ def make_async_train_step(cfg: ArchConfig, rcfg: RobustConfig,
                           window: int = 0, chunk_q: int = 1024,
                           attack: str = "none",
                           attack_f: Optional[int] = None,
-                          telemetry: bool = False):
+                          telemetry: bool = False,
+                          obs: Optional[OBS.ObsConfig] = None):
     """Build the bounded-staleness async trainer step.
 
     Signature ``(params, state, batch, key, fresh) -> (params, state,
@@ -111,10 +119,20 @@ def make_async_train_step(cfg: ArchConfig, rcfg: RobustConfig,
     with transforms / codecs / hierarchical aggregation / the mesh-native
     (spmd) path — those raise in the synchronous trainer's richer builder
     and stay synchronous for now.
+
+    ``obs`` (an enabled ``repro.obs.ObsConfig``) records the serve-side
+    registry into ``TrainerState.mstate``: admission / overstale /
+    degradation counters, the per-slot staleness-age histogram, the
+    haircut gauge (``f_defended``), plus the stats→plan→select_plan→apply
+    span ring (DESIGN.md §14).  Disabled/None is the bitwise
+    uninstrumented step.
     """
     rcfg.validate()
-    backend = api.AggregatorBackend.for_config(rcfg, needs_dists=telemetry)
+    backend = api.AggregatorBackend.for_config(rcfg, needs_dists=telemetry,
+                                               obs=obs)
     service = AsyncAggService(backend=backend, tau=tau)
+    obs_live = OBS.obs_on(obs)
+    obs_trace = obs_live and obs.trace
     theory.staleness_budget(rcfg.n_workers, rcfg.f, tau, rule=rcfg.gar)
     f_eff = rcfg.f if attack_f is None else attack_f
     if not 0 <= f_eff <= rcfg.f:
@@ -129,6 +147,11 @@ def make_async_train_step(cfg: ArchConfig, rcfg: RobustConfig,
         if state.bstate is None:
             raise ValueError("async trainer needs TrainerState.bstate; "
                              "seed it with serve.service.with_buffer()")
+        mstate = state.mstate
+        if obs_live and mstate is None:
+            mstate = OBS.init_serve_obs(obs, rcfg.n_workers, tau,
+                                        telemetry=telemetry)
+        obs_round = state.opt.step
         losses, grads = jax.vmap(
             lambda wb: jax.value_and_grad(worker_loss)(params, wb))(batch)
         grads = inject_byzantine(grads, f_eff, attack, key)
@@ -157,8 +180,36 @@ def make_async_train_step(cfg: ArchConfig, rcfg: RobustConfig,
             diag["f_defended"] = info["f_defended"].astype(jnp.float32)
             diag["plan_reused"] = info["plan_reused"].astype(jnp.float32)
             metrics["telemetry"] = diag
+        if obs_live:
+            m = mstate["m"]
+            m = OBS.inc(m, "rounds")
+            m = OBS.inc(m, "admitted", jnp.sum(fresh.astype(jnp.float32)))
+            m = OBS.inc(m, "overstale_slots", info["n_overstale"])
+            m = OBS.inc(m, "degraded", info["plan_reused"])
+            m = OBS.set_gauge(m, "loss", metrics["loss"])
+            m = OBS.set_gauge(m, "agg_grad_norm", gnorm)
+            m = OBS.set_gauge(m, "f_defended", info["f_defended"])
+            m = OBS.observe(m, "agg_grad_norm", gnorm)
+            m = OBS.observe(m, "staleness_age", info["age"])
+            if telemetry:
+                m = OBS.set_gauge(m, "byz_mass", diag["byz_mass"])
+                m = OBS.set_gauge(m, "suspicion", OBS.update_suspicion(
+                    m.gauges["suspicion"], diag["selection"],
+                    obs.suspicion_ema))
+            t = mstate["t"]
+            if obs_trace:
+                # the round's pipeline in program order; select_plan marks
+                # the degradation branch (payload = plan_reused)
+                t = OBS.record(t, OBS.PH_STATS, obs_round)
+                t = OBS.record(t, OBS.PH_PLAN, obs_round,
+                               info["f_defended"])
+                t = OBS.record(t, OBS.PH_SELECT_PLAN, obs_round,
+                               info["plan_reused"])
+                t = OBS.record(t, OBS.PH_APPLY, obs_round, gnorm)
+            mstate = {"m": m, "t": t}
         return (new_params,
-                dataclasses.replace(state, opt=new_opt, bstate=bstate),
+                dataclasses.replace(state, opt=new_opt, bstate=bstate,
+                                    mstate=mstate),
                 metrics)
 
     return step

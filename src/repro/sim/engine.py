@@ -33,6 +33,7 @@ from repro.dist import init_train_state, make_train_step, split_workers
 from repro.dist.streaming import make_streaming_train_step
 from repro.dist.trainer import TrainerState
 from repro import models as MD
+from repro import obs as OBS
 from repro.optim import sgd, warmup_cosine
 from repro.sim import telemetry as TEL
 from repro.sim.scenario import AttackPhase, Scenario
@@ -57,6 +58,9 @@ class CampaignResult:
     ``wire`` is the campaign's :class:`~repro.comm.transport.WireStats`
     accounting as a plain dict (None without a codec) — ``summarize``
     repeats it per phase so the ``sim.campaign.v1`` report carries it.
+    ``obs`` is the drained ``obs.v1`` snapshot when the campaign ran with
+    an enabled :class:`~repro.obs.ObsConfig` (None otherwise — the report
+    stays byte-identical without it).
     """
 
     scenario: Scenario
@@ -65,19 +69,16 @@ class CampaignResult:
     start_step: int = 0
     wall_s: float = 0.0
     wire: Optional[Dict[str, Any]] = None
+    obs: Optional[Dict[str, Any]] = None
 
 
-def _phase_batches(scenario: Scenario, phase: AttackPhase, start: int,
-                   mixture, *, freeze: bool = True) -> PyTree:
-    """Worker-split token batches for one phase: leaves (steps, n, pwb, ...).
+def _make_batch_gen(scenario: Scenario, mixture):
+    """One jitted batch generator per campaign: (steps,) indices -> batches.
 
-    Batch randomness is keyed by the *global* step index (phase layout does
-    not change the data), matching ``launch/train.py``'s per-step fold_in
-    convention.  Stale (churned) workers are frozen to the phase's first
-    batch — they keep resubmitting gradients computed on old data.  On the
-    async path (``freeze=False``) the data stays fresh: staleness is
-    modelled by the real gradient buffer instead (missed deadlines replay
-    the worker's *buffered* gradient, see :func:`_phase_fresh`).
+    Built once and reused by every phase so same-length phases hit the jit
+    cache instead of re-lowering the data scan per phase (the C204
+    contract extends to data generation — the step indices are traced
+    arguments, never baked-in constants).
     """
     n, pwb, seq = scenario.n_workers, scenario.per_worker_batch, scenario.seq
     vocab = scenario.arch.vocab_size
@@ -93,8 +94,22 @@ def _phase_batches(scenario: Scenario, phase: AttackPhase, start: int,
                               seed=scenario.seed + 77)
         return split_workers(b, n)
 
-    steps = jnp.arange(start, start + phase.steps)
-    batches = jax.vmap(one)(steps)
+    return jax.jit(jax.vmap(one))
+
+
+def _phase_batches(gen, phase: AttackPhase, start: int,
+                   *, freeze: bool = True) -> PyTree:
+    """Worker-split token batches for one phase: leaves (steps, n, pwb, ...).
+
+    Batch randomness is keyed by the *global* step index (phase layout does
+    not change the data), matching ``launch/train.py``'s per-step fold_in
+    convention.  Stale (churned) workers are frozen to the phase's first
+    batch — they keep resubmitting gradients computed on old data.  On the
+    async path (``freeze=False``) the data stays fresh: staleness is
+    modelled by the real gradient buffer instead (missed deadlines replay
+    the worker's *buffered* gradient, see :func:`_phase_fresh`).
+    """
+    batches = gen(jnp.arange(start, start + phase.steps))
     if freeze:
         for w in phase.stale_workers:
             batches = jax.tree.map(
@@ -119,8 +134,8 @@ def _phase_fresh(scenario: Scenario, phase: AttackPhase,
 
 
 def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
-                 resume: bool = False, verbose: bool = False
-                 ) -> CampaignResult:
+                 resume: bool = False, verbose: bool = False,
+                 obs: Optional[OBS.ObsConfig] = None) -> CampaignResult:
     """Run a scenario end to end; returns the trace + summary.
 
     ``ckpt_dir`` enables checkpointing at phase boundaries (params,
@@ -128,6 +143,15 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
     step).  With ``resume`` the engine restores the latest phase-boundary
     checkpoint and replays only the remaining phases; the returned trace
     then starts at ``start_step``.
+
+    ``obs`` (an enabled :class:`~repro.obs.ObsConfig`) seeds the in-graph
+    metrics registry + span ring into ``TrainerState.mstate`` *before*
+    the phase scans (the scan carry structure is fixed, so the engine
+    cannot rely on the steps' lazy trace-time seeding), threads the
+    config through every step builder, and drains the registry into
+    ``CampaignResult.obs`` as an ``obs.v1`` snapshot.  The registry
+    rides the phase-boundary checkpoints with the rest of the state, so
+    resumed campaigns keep their counters.
     """
     t0 = time.time()
     cfg = scenario.arch
@@ -169,6 +193,12 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
             backend=api.AggregatorBackend.for_config(rcfg, needs_dists=True),
             tau=scenario.async_tau)
         tstate = SRV.with_buffer(tstate, svc, params, scenario.n_workers)
+    if OBS.obs_on(obs):
+        ms = OBS.init_serve_obs(obs, scenario.n_workers, scenario.async_tau,
+                                telemetry=True) \
+            if scenario.async_tau > 0 else \
+            OBS.init_train_obs(obs, scenario.n_workers, telemetry=True)
+        tstate = dataclasses.replace(tstate, mstate=ms)
     susp = TEL.init_suspicion(scenario.n_workers)
     stale_ema = TEL.init_suspicion(scenario.n_workers)
     gsusp = None
@@ -210,6 +240,7 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
 
     chunk_q = min(scenario.seq, 512)
     phase_traces = []
+    batch_gen = _make_batch_gen(scenario, mixture)
 
     # one jitted scan runner per distinct (attack, f) config: a second
     # phase with an identical config reuses the runner and hits its trace
@@ -225,19 +256,19 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
             step_fn = make_async_train_step(
                 cfg, rcfg, opt, lr_fn, tau=scenario.async_tau,
                 chunk_q=chunk_q, attack=attack, attack_f=f_eff,
-                telemetry=True)
+                telemetry=True, obs=obs)
         elif scenario.trainer == "stacked":
             step_fn = make_train_step(
                 cfg, rcfg, opt, lr_fn, chunk_q=chunk_q, attack=attack,
                 attack_f=f_eff, transforms=transforms,
-                codec=scenario.codec, telemetry=True, hier=hier)
+                codec=scenario.codec, telemetry=True, hier=hier, obs=obs)
         else:
             scope = "global" if scenario.trainer.endswith("global") else \
                 "block"
             step_fn = make_streaming_train_step(
                 cfg, rcfg, opt, lr_fn, scope=scope, chunk_q=chunk_q,
                 attack=attack, attack_f=f_eff,
-                codec=scenario.codec, telemetry=True, hier=hier)
+                codec=scenario.codec, telemetry=True, hier=hier, obs=obs)
 
         def body(carry, xs):
             p, st, sp, gsp, stale, pi = carry
@@ -278,7 +309,7 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
         # phase-local, everything else carries across phases
         state = dataclasses.replace(tstate, astate=astate)
 
-        batches = _phase_batches(scenario, phase, start, mixture,
+        batches = _phase_batches(batch_gen, phase, start,
                                  freeze=not is_async)
         keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
             jnp.arange(start, stop))
@@ -308,6 +339,15 @@ def run_campaign(scenario: Scenario, *, ckpt_dir: Optional[str] = None,
     trace = TEL.concat_traces(phase_traces)
     summary = TEL.summarize(trace, scenario, start_step, wire=wire) \
         if trace else {}
+    obs_snap = None
+    if OBS.obs_on(obs) and tstate.mstate is not None:
+        t = tstate.mstate.get("t")
+        obs_snap = OBS.snapshot(
+            metrics=tstate.mstate["m"],
+            trace_records=OBS.drain(t) if t is not None else (),
+            meta={"source": "sim.engine", "scenario": scenario.name,
+                  "trainer": scenario.trainer,
+                  "async_tau": scenario.async_tau})
     return CampaignResult(scenario=scenario, trace=trace, summary=summary,
                           start_step=start_step, wall_s=time.time() - t0,
-                          wire=wire)
+                          wire=wire, obs=obs_snap)

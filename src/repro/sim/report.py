@@ -33,7 +33,7 @@ def result_to_json(result, *, full_trace: bool = False) -> Dict[str, Any]:
         arr = np.asarray(v)
         if arr.ndim == 1 or full_trace:
             per_step[k] = np.round(arr.astype(np.float64), 6).tolist()
-    return {
+    out = {
         "schema": SCHEMA,
         "scenario": result.scenario.to_json(),
         "start_step": int(result.start_step),
@@ -41,6 +41,11 @@ def result_to_json(result, *, full_trace: bool = False) -> Dict[str, Any]:
         "summary": result.summary,
         "per_step": per_step,
     }
+    # observability snapshot rides along only when the campaign ran with
+    # --obs: reports without it stay byte-identical to pre-obs output
+    if getattr(result, "obs", None) is not None:
+        out["obs"] = result.obs
+    return out
 
 
 def write_json(path: str, result, *, full_trace: bool = False) -> str:

@@ -3,10 +3,12 @@
 The per-step plan diagnostics come from ``AggPlan.diagnostics`` through the
 trainer's ``telemetry=True`` metrics (``selection``, ``byz_mass``,
 ``score_spectrum``, ``score_gap``, ``mean_dist``, ``honest_dev``).  This
-module owns what a single plan cannot: the *suspicion EMA* — a per-worker
-exponential moving average of rejection — carried through the campaign scan,
-and the host-side summarisation of a finished trace into the per-phase
-numbers the reports and acceptance assertions read.
+module owns the campaign-scan *record schema* (``step_record``) and the
+host-side trace concatenation; the accumulator math itself — the suspicion
+EMA and the per-phase digest — lives in ``repro.obs`` (metrics registry /
+export) and is re-exported here so campaign code keeps its historical
+import path while the obs registry is the single implementation
+(DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -16,30 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.export import phase_summary as _phase_summary
+from repro.obs.metrics import (init_suspicion, update_ema,  # noqa: F401
+                               update_suspicion)
+
 Array = jax.Array
-
-
-def init_suspicion(n_workers: int) -> Array:
-    return jnp.zeros((n_workers,), jnp.float32)
-
-
-def update_suspicion(susp: Array, selection: Array, ema: float) -> Array:
-    """EMA of per-worker rejection.
-
-    A worker's per-step rejection is ``1 - selection_i / max_j selection_j``
-    (0 for the most-trusted worker, 1 for a fully rejected one) — normalised
-    so weighted rules and uniform rules land on the same scale.
-    """
-    rej = 1.0 - selection / (jnp.max(selection) + 1e-12)
-    return ema * susp + (1.0 - ema) * rej
-
-
-def update_ema(prev: Array, value: Array, ema: float) -> Array:
-    """Plain per-worker EMA — the suspicion-carry pattern for any 0/1
-    indicator (the async service uses it on the per-round overstale mask,
-    so campaigns report *sustained* staleness per worker, not one-round
-    blips)."""
-    return ema * prev + (1.0 - ema) * value.astype(jnp.float32)
 
 
 def step_record(metrics: Dict[str, Any], susp: Array,
@@ -97,65 +80,9 @@ def summarize(trace: Dict[str, np.ndarray], scenario,
     (which only covers executed steps).  ``wire`` (a
     ``repro.comm.WireStats`` dict) is repeated per phase — byte accounting
     is shape-static, so every phase of a campaign pays the same wire.
+
+    Delegates to ``repro.obs.export.phase_summary`` — the digest logic
+    moved with the rest of the accumulators; the ``sim.campaign.v1``
+    output is byte-identical (tests/test_obs.py golden fixture).
     """
-    phases = []
-    for i, ((start, stop), p) in enumerate(
-            zip(scenario.schedule.bounds(), scenario.schedule.phases)):
-        start, stop = start - start_step, stop - start_step
-        if stop <= 0:
-            continue  # phase ran before the resume point
-        stop = min(stop, len(trace["loss"]))
-        if start >= stop:
-            break
-        sl = slice(start, stop)
-        ph: Dict[str, Any] = {
-            "phase": i,
-            "attack": p.attack,
-            "f": scenario.phase_f(p),
-            "steps": stop - start,
-            "loss_first": float(trace["loss"][start]),
-            "loss_last": float(trace["loss"][stop - 1]),
-            "loss_mean": float(np.mean(trace["loss"][sl])),
-        }
-        for k in ("honest_dev", "byz_mass", "score_gap", "mean_dist",
-                  "n_overstale", "f_defended", "plan_reused"):
-            if k in trace:
-                ph[f"{k}_mean"] = float(np.mean(trace[k][sl]))
-                ph[f"{k}_max"] = float(np.max(trace[k][sl]))
-        if "selection" in trace:
-            ph["selection_mean"] = np.mean(
-                trace["selection"][sl], axis=0).tolist()
-        # async staleness accounting: which workers were admitted on time
-        # vs sat overstale (haircut) this phase — repro.serve telemetry
-        if "admitted" in trace:
-            ph["admitted_mean"] = np.mean(
-                trace["admitted"][sl], axis=0).tolist()
-        if "overstale" in trace:
-            ph["overstale_mean"] = np.mean(
-                trace["overstale"][sl], axis=0).tolist()
-        if "staleness_ema" in trace:
-            ph["staleness_ema_last"] = \
-                trace["staleness_ema"][stop - 1].tolist()
-        if "suspicion" in trace:
-            ph["suspicion_last"] = trace["suspicion"][stop - 1].tolist()
-        if "group_selection" in trace:
-            ph["group_selection_mean"] = np.mean(
-                trace["group_selection"][sl], axis=0).tolist()
-        if "group_suspicion" in trace:
-            ph["group_suspicion_last"] = \
-                trace["group_suspicion"][stop - 1].tolist()
-        if wire is not None:
-            ph["wire"] = wire
-        phases.append(ph)
-    out: Dict[str, Any] = {
-        "total_steps": int(len(trace["loss"])),
-        "final_loss": float(trace["loss"][-1]),
-        "phases": phases,
-    }
-    if "honest_dev" in trace:
-        out["honest_dev_max"] = float(np.max(trace["honest_dev"]))
-    if "byz_mass" in trace:
-        out["byz_mass_mean"] = float(np.mean(trace["byz_mass"]))
-    if wire is not None:
-        out["wire"] = wire
-    return out
+    return _phase_summary(trace, scenario, start_step, wire=wire)

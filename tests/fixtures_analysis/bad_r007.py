@@ -1,0 +1,17 @@
+"""R007 fixture: host debug I/O inside jitted step functions."""
+import jax
+
+
+@jax.jit
+def jitted_step_bad(x):
+    jax.debug.print("loss = {}", x)      # R007: host round-trip per step
+    return x
+
+
+def make_train_step():
+    def step(params, state, batch):
+        print("step!", params)           # R007: bare print in a step
+        jax.debug.callback(lambda v: v, state)   # R007: host callback
+        return params, state, batch
+
+    return step

@@ -219,7 +219,9 @@ def test_phase_batches_freeze_stale_workers():
     sc = Scenario(name="churn", schedule=AttackSchedule(
         (AttackPhase(steps=4, stale_workers=(1, 3)),)),
         n_workers=5, f=0, gar="average", arch=SMALL, seq=16)
-    batches = _phase_batches(sc, sc.schedule.phases[0], 0, None)
+    from repro.sim.engine import _make_batch_gen
+    batches = _phase_batches(_make_batch_gen(sc, None),
+                             sc.schedule.phases[0], 0)
     toks = np.asarray(batches["tokens"])           # (steps, n, pwb, seq)
     assert toks.shape[:2] == (4, 5)
     for w in (1, 3):                               # frozen to phase entry
