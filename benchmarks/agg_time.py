@@ -42,17 +42,21 @@ NS = (7, 11, 15, 19, 23)
 DS = (100_000, 1_000_000)
 RULES = ("median", "multi_krum", "multi_bulyan")
 # apply-substrate comparison rows (the fused-path trajectory).  Timed on
-# the paper's centre point n=15 only: interpret-mode Pallas costs seconds
-# per call at d=1e6, so the full (n, d) product would dwarf the Fig-2 grid.
+# a reduced (n, d) product — n ∈ {11, 15} × d ∈ {4096, 1e5, 1e6}:
+# interpret-mode Pallas costs hundreds of ms per call at d=1e6, so the
+# full Fig-2 grid would dwarf the rule rows.  The d=4096 cell anchors the
+# small-d end of the dispatch table; the deep cells are the monotonicity
+# evidence (us_per_call/d non-increasing — validate_bench gates on it).
 PATHS = (
     ("multi_bulyan[xla]", dict(use_pallas=False, fused=False)),
     ("multi_bulyan[pallas]", dict(use_pallas=True, fused=False)),
-    # "force" pins the fused kernel past the measured crossover — these
-    # rows ARE the crossover measurement kernels.dispatch reads
+    # "force" pins the fused kernel regardless of the dispatch table —
+    # these rows ARE the crossover measurement kernels.dispatch reads
     ("multi_bulyan[fused]", dict(use_pallas=True, fused="force")),
     ("multi_bulyan[sharded]", dict(sharded=True)),
 )
-PATH_NS = (15,)
+PATH_NS = (11, 15)
+PATH_DS = (4096,) + DS
 BENCH_JSON = "BENCH_agg_time.json"
 
 SMOKE_NS = (11,)
@@ -120,8 +124,11 @@ def run(csv_rows: List[str], *, smoke: bool = False,
                 csv_rows.append(
                     f"agg_time/{name}/n={n}/d={d},{mean*1e6:.1f},"
                     f"std_us={std*1e6:.1f}")
-            if n not in path_ns:
-                continue
+    path_ds = ds if smoke else PATH_DS
+    for d in path_ds:
+        for n in path_ns:
+            G = jnp.asarray(rng.uniform(size=(n, d)).astype(np.float32))
+            f = _f_for(n)
             for name, kw in PATHS:
                 mean, std = _timed(_path_fn(f, **kw), G,
                                    reps=path_reps, drop=path_drop)
@@ -144,7 +151,7 @@ def run(csv_rows: List[str], *, smoke: bool = False,
                 f"agg_time/median_over_multibulyan/d={d},{adv:.3f},"
                 "higher_means_mb_faster")
         # fusion win: fused vs two-step pallas apply at the largest point
-        big = (max(path_ns), max(ds))
+        big = (max(path_ns), max(path_ds))
         speedup = (results["multi_bulyan[pallas]"][big]
                    / max(results["multi_bulyan[fused]"][big], 1e-9))
         csv_rows.append(f"agg_time/fused_over_pallas_speedup,{speedup:.2f},"

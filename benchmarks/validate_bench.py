@@ -7,7 +7,10 @@ the payload's ``schema`` field:
 
 * agg_time (``rule -> 'n=<n>,d=<d>' -> us_per_call``) — must contain the
   four apply substrate rows (multi_bulyan[xla|pallas|fused|sharded]) the
-  perf trajectory exists to track;
+  perf trajectory exists to track, each at the full n ∈ {11, 15} ×
+  d ∈ {4096, 1e5, 1e6} substrate grid; the fused row must be *monotone*:
+  us_per_call/d non-increasing along d past 1e5 for every n (no deep-grid
+  cliff) and within 1.1× the XLA row at the deepest point (n=15, d=1e6);
 * resilience (``sim.resilience.v1``) — rule × attack campaign cells from
   ``benchmarks/resilience.py``, each with finite honest-mean deviation,
   byzantine selection mass in [0, 1] and a finite final loss;
@@ -34,9 +37,12 @@ the payload's ``schema`` field:
   of its uninstrumented baseline;
 * analysis (``analysis.v1``) — the static-contract report from
   ``repro.launch.analyze``: zero committed lint violations, every
-  sharding contract proven, kernel estimates present at the committed
-  grid points, the d=1e6 fused_select cliff flagged grid-bound, and the
-  predicted fused-vs-XLA crossover within 2× of the dispatch table.
+  sharding contract proven, two-level kernel estimates present at the
+  committed grid points, the d=1e6 fused_select launch tiling under a
+  budget-fitting multi-window macro block, the traffic-linearity
+  diagnosis holding (the deep-grid cliff stays closed), and the
+  predicted fused-vs-XLA crossover calibrated against the dispatch
+  table (one-sided where the table is censored — no measured loss).
 
 Fails (exit 1) when a file is missing, is not JSON, or deviates from its
 schema.
@@ -50,6 +56,17 @@ import sys
 
 REQUIRED_ROWS = ("multi_bulyan[xla]", "multi_bulyan[pallas]",
                  "multi_bulyan[fused]", "multi_bulyan[sharded]")
+#: the substrate (n, d) grid every REQUIRED_ROWS row must cover
+#: (benchmarks/agg_time.py PATH_NS × PATH_DS)
+REQUIRED_CELLS = tuple(f"n={n},d={d}" for n in (11, 15)
+                       for d in (4096, 100_000, 1_000_000))
+#: d past which the fused row's us_per_call/d must be non-increasing —
+#: the two-level kernel's residency claim (below it, fixed plan/launch
+#: costs still amortise, so per-coordinate cost legitimately falls)
+MONOTONE_MIN_D = 100_000
+#: fused must stay within this factor of the XLA substrate at the
+#: deepest committed point (n=15, d=1e6) — the cliff-is-closed headline
+FUSED_VS_XLA_MAX = 1.1
 _KEY_RE = re.compile(r"^n=\d+,d=\d+$")
 _BATCH_RE = re.compile(r"^b=\d+$")
 
@@ -103,9 +120,68 @@ def _check_agg_time(path: str, results: dict) -> "list[str]":
                     or us <= 0:
                 problems.append(f"rule {rule!r} [{key}]: us_per_call must be "
                                 f"a positive finite number, got {us!r}")
+    # the grid-coverage and residency gates apply to full-grid payloads
+    # only: a CI smoke run rewrites this file with a single shallow cell
+    # (benchmarks/agg_time.py SMOKE_*), where a depth gate is vacuous —
+    # same split as BENCH_obs.json.  Any fused cell at d >=
+    # MONOTONE_MIN_D marks the payload full-grid.
+    fused_cells = _cells_by_n(results.get("multi_bulyan[fused]", {}))
+    full_grid = any(d >= MONOTONE_MIN_D
+                    for pts in fused_cells.values() for d, _ in pts)
     for row in REQUIRED_ROWS:
         if row not in results:
             problems.append(f"missing required substrate row {row!r}")
+            continue
+        missing = [c for c in REQUIRED_CELLS if c not in results[row]]
+        if missing and full_grid:
+            problems.append(f"substrate row {row!r}: missing grid "
+                            f"cell(s) {missing}")
+    if full_grid:
+        problems += _check_fused_monotone(results)
+    return problems
+
+
+def _cells_by_n(grid: dict) -> "dict[int, list[tuple[int, float]]]":
+    by_n: dict = {}
+    for key, us in grid.items():
+        if not (_KEY_RE.match(key) and isinstance(us, (int, float))):
+            continue
+        kv = dict(p.split("=") for p in key.split(","))
+        by_n.setdefault(int(kv["n"]), []).append((int(kv["d"]), us))
+    return by_n
+
+
+def _check_fused_monotone(results: dict) -> "list[str]":
+    """The two-level residency gates on the measured fused row.
+
+    * us_per_call/d non-increasing along d past ``MONOTONE_MIN_D`` for
+      every n — per-coordinate cost must not degrade with depth (the
+      single-level kernel failed exactly this: 0.79 us/coord at d=1e5
+      vs 3.0 at d=1e6);
+    * fused within ``FUSED_VS_XLA_MAX`` × the XLA substrate at the
+      deepest point, n=15, d=1e6 — the fused path may never again be
+      the reason to route deep applies to XLA.
+    """
+    problems = []
+    fused = results.get("multi_bulyan[fused]", {})
+    for n, pts in sorted(_cells_by_n(fused).items()):
+        pts.sort()
+        deep = [(d, us) for d, us in pts if d >= MONOTONE_MIN_D]
+        for (d1, us1), (d2, us2) in zip(deep, deep[1:]):
+            if us2 / d2 > us1 / d1:
+                problems.append(
+                    f"multi_bulyan[fused] n={n}: us_per_call/d grows from "
+                    f"{us1 / d1:.3f} (d={d1}) to {us2 / d2:.3f} (d={d2}) "
+                    "— the fused apply path is not monotone in d")
+    xla = results.get("multi_bulyan[xla]", {})
+    deepest = "n=15,d=1000000"
+    f_us, x_us = fused.get(deepest), xla.get(deepest)
+    if isinstance(f_us, (int, float)) and isinstance(x_us, (int, float)) \
+            and x_us > 0 and f_us > FUSED_VS_XLA_MAX * x_us:
+        problems.append(
+            f"multi_bulyan[fused] [{deepest}]: {f_us:.0f} us > "
+            f"{FUSED_VS_XLA_MAX}x the XLA substrate ({x_us:.0f} us) — "
+            "the deep-grid cliff is back")
     return problems
 
 
@@ -415,26 +491,31 @@ def _check_analysis(path: str, results: dict) -> "list[str]":
         for key, est in grid.items():
             if not _KEY_RE.match(key):
                 problems.append(f"{kernel}: bad grid key {key!r}")
-            for f in ("d_tile", "grid_steps", "vmem_bytes",
-                      "hbm_read_bytes"):
+            for f in ("d_tile", "macro_tile", "windows", "grid_steps",
+                      "vmem_bytes", "hbm_read_bytes"):
                 v = est.get(f)
                 if not isinstance(v, int) or v <= 0:
                     problems.append(f"{kernel}/{key}: {f} must be a "
                                     f"positive int, got {v!r}")
-    cliff = analysis.get("cliff", {})
-    if not cliff.get("holds"):
-        problems.append("vmem cliff diagnosis does not hold: "
-                        f"{cliff.get('detail')!r}")
+    traffic = analysis.get("traffic_linearity", {})
+    if not traffic.get("holds"):
+        problems.append("vmem traffic-linearity diagnosis does not hold: "
+                        f"{traffic.get('detail')!r}")
     d1e6 = analysis.get("kernels", {}).get("fused_select", {}) \
         .get("n=15,d=1000000")
-    if not (d1e6 and d1e6.get("grid_bound") and d1e6.get("over_budget")):
-        problems.append("fused_select n=15,d=1e6 not flagged grid-bound "
-                        "+ over-budget — the measured cliff is unexplained")
+    if not (d1e6 and d1e6.get("over_budget")
+            and not d1e6.get("tile_over_budget")
+            and d1e6.get("macro_tile", 0) > d1e6.get("d_tile", 0)):
+        problems.append("fused_select n=15,d=1e6 must tile (over_budget), "
+                        "fit per macro step, and run a multi-window macro "
+                        "block — the two-level residency claim fails")
     for key, x in analysis.get("crossover", {}).items():
-        r = x.get("ratio")
-        if not (isinstance(r, (int, float)) and 0.5 <= r <= 2.0):
-            problems.append(f"crossover {key}: predicted/measured ratio "
-                            f"{r!r} outside [0.5, 2]")
+        if not x.get("calibrated"):
+            problems.append(
+                f"crossover {key}: predicted {x.get('predicted_numel')!r} "
+                f"vs measured {x.get('measured_numel')!r} "
+                f"(ratio {x.get('ratio')!r}, censored={x.get('censored')!r})"
+                " — static model uncalibrated against the dispatch table")
     return problems
 
 

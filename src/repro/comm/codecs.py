@@ -474,6 +474,33 @@ def encoded_leaf_contrib(codec: Codec, payload: Array,
     return api._leaf_stats_contrib(g)
 
 
+def encoded_leaf_block_contrib(codec: Codec, p_loc: Array,
+                               s_loc: Optional[Array], p_full: Array,
+                               s_full: Optional[Array],
+                               shape: Tuple[int, ...], *, row_start,
+                               n_loc: int) -> Tuple[Array, Array]:
+    """Row-block partial of :func:`encoded_leaf_contrib` (Pallas path).
+
+    ``p_loc``/``s_loc`` are one device's worker rows of the payload/
+    sidecar, ``p_full``/``s_full`` the gathered container — the §10 shard
+    seam.  Dequant-form codecs go through the rectangular
+    ``dequant_stats_rect`` kernel (O(n_loc·n·d) per device, fp32 rows
+    never in HBM); everything else decodes the gathered payload once and
+    takes ``pairwise_stats_rect`` on the row slice at ``row_start``.
+    Either way the block is bitwise-identical to the matching rows of the
+    square kernels the replicated path runs (tests/test_spmd.py).
+    """
+    from repro.kernels import ops as kops
+    form_full = codec.dequant_form(p_full, s_full)
+    if form_full is not None:
+        pf2, mf = form_full
+        pl2, ml = codec.dequant_form(p_loc, s_loc)
+        return kops.dequant_stats_rect(pl2, ml, pf2, mf)
+    g2 = _leaf2d(codec.decode_leaf(p_full, s_full, shape))
+    g_loc = jax.lax.dynamic_slice_in_dim(g2, row_start, n_loc, 0)
+    return kops.pairwise_stats_rect(g_loc, g2)
+
+
 def encoded_raw_stats(enc: EncodedGrads, *, use_pallas: bool = False
                       ) -> Tuple[Array, Array]:
     """Raw accumulation over a wire container: ((n, n) unfinalised

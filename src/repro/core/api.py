@@ -318,9 +318,12 @@ def sharded_raw_stats(grads: PyTree, *, mesh_ctx: MeshContext,
 
     n not divisible by the worker-shard count is zero-row padded; padded
     rows decode/contract to exact zeros and are sliced away.  Under
-    ``use_pallas`` each device runs the existing square ``pairwise_stats``
-    / ``dequant_stats`` kernel on the gathered rows and keeps its block —
-    redundant flops pending a rectangular kernel variant, same wire cost.
+    ``use_pallas`` each device runs the *rectangular* stats kernels
+    (``pairwise_stats_rect`` / ``dequant_stats_rect``) — its own row block
+    against the gathered stack, O(n_loc·n·d) instead of the square
+    kernel's redundant O(n²·d) per device — bitwise-identical to the
+    square kernels' matching rows at the shared autotuned ``d_tile``
+    (kernels/pairwise_sqdist.py header), same wire cost.
     """
     enc = _as_encoded(grads)
     W = mesh_ctx.worker_size
@@ -356,10 +359,9 @@ def sharded_raw_stats(grads: PyTree, *, mesh_ctx: MeshContext,
                 s_full = None if s_loc is None else \
                     jax.lax.all_gather(s_loc, axes_names, axis=0, tiled=True)
                 if use_pallas:
-                    dd, sq = CC.encoded_leaf_contrib(
-                        codec, p_full, s_full, shape, use_pallas=True)
-                    dd = jax.lax.dynamic_slice_in_dim(dd, idx * n_loc,
-                                                      n_loc, 0)
+                    dd, sq = CC.encoded_leaf_block_contrib(
+                        codec, p_loc, s_loc, p_full, s_full, shape,
+                        row_start=idx * n_loc, n_loc=n_loc)
                 else:
                     g_full = codec.decode_leaf(
                         _leaf2d(p_full), s_full, shape).reshape(shape)
@@ -385,15 +387,14 @@ def sharded_raw_stats(grads: PyTree, *, mesh_ctx: MeshContext,
     in_specs = tuple(P(*((lead,) + (None,) * (x.ndim - 1))) for x in padded)
 
     def local(*loc_leaves):
-        idx = _worker_index(mesh_ctx)
         total_d = jnp.zeros((n_loc, n_pad), jnp.float32)
         total_s = jnp.zeros((n_pad,), jnp.float32)
         for xl in loc_leaves:
             full = jax.lax.all_gather(xl, axes_names, axis=0, tiled=True)
             if use_pallas:
                 from repro.kernels import ops as kops
-                dd, sq = kops.pairwise_stats(_leaf2d(full))
-                dd = jax.lax.dynamic_slice_in_dim(dd, idx * n_loc, n_loc, 0)
+                dd, sq = kops.pairwise_stats_rect(_leaf2d(xl),
+                                                  _leaf2d(full))
             else:
                 dd, sq = _block_stats_contrib(xl, full)
             total_d = total_d + dd
@@ -402,6 +403,67 @@ def sharded_raw_stats(grads: PyTree, *, mesh_ctx: MeshContext,
 
     fn = _shard_map(local, mesh_ctx, in_specs, (P(lead, None), P(None)))
     dd, sq = fn(*padded)
+    return dd[:n, :n], sq[:n]
+
+
+def sharded_raw_stats_model_axis(grads: PyTree, *, mesh_ctx: MeshContext,
+                                 use_pallas: bool = False
+                                 ) -> Tuple[Array, Array]:
+    """Model-axis-sharded single pass: raw ((n, n) sq-dists, (n,) norms)
+    from (n/W, d/M) leaf tiles — the §10 tensor-parallel stats seam.
+
+    Where :func:`sharded_raw_stats` keeps every leaf's d axis replicated,
+    this variant shards it over ``mesh_ctx.model_axis`` as well: each
+    device all-gathers only its *column shard*'s worker rows, runs the
+    rectangular stats kernel on the (n_loc, d/M) × (n, d/M) tile pair,
+    and the per-shard partial contributions ``psum`` over the model axis.
+    No replicated-leaf round-trip: a tensor-parallel trainer can feed its
+    grads without first all-gathering d.
+
+    Float caveat: the model-axis ``psum`` is a different summation order
+    than the replicated full-d contraction, so parity with the replicated
+    path is bitwise at M = 1 (plain CI) and ~1e-6 at M > 1 — unlike the
+    worker-axis sharding, which is bitwise at any W.  Leaf columns pad to
+    a multiple of M with exact zeros.
+    """
+    leaves = jax.tree.leaves(grads)
+    if not leaves:
+        raise ValueError("empty gradient pytree")
+    n = leaves[0].shape[0]
+    W = mesh_ctx.worker_size
+    M = mesh_ctx.model_size
+    lead = mesh_ctx.worker_entry
+    axes_names = mesh_ctx.worker_axes
+    n_pad = -(-n // W) * W
+    n_loc = n_pad // W
+    flat = []
+    for x in leaves:
+        x2 = _leaf2d(x)
+        m_pad = (-x2.shape[1]) % M
+        if m_pad:
+            x2 = jnp.pad(x2, ((0, 0), (0, m_pad)))
+        flat.append(_pad_rows(x2, n_pad))
+    in_specs = tuple(P(lead, mesh_ctx.model_axis) for _ in flat)
+
+    def local(*loc_leaves):
+        total_d = jnp.zeros((n_loc, n_pad), jnp.float32)
+        total_s = jnp.zeros((n_pad,), jnp.float32)
+        for xl in loc_leaves:
+            full = jax.lax.all_gather(xl, axes_names, axis=0, tiled=True)
+            if use_pallas:
+                from repro.kernels import ops as kops
+                dd, sq = kops.pairwise_stats_rect(xl, full)
+            else:
+                dd, sq = _block_stats_contrib(xl, full)
+            total_d = total_d + dd
+            total_s = total_s + sq
+        if mesh_ctx.model_axis is not None:
+            total_d = jax.lax.psum(total_d, mesh_ctx.model_axis)
+            total_s = jax.lax.psum(total_s, mesh_ctx.model_axis)
+        return total_d, total_s
+
+    fn = _shard_map(local, mesh_ctx, in_specs, (P(lead, None), P(None)))
+    dd, sq = fn(*flat)
     return dd[:n, :n], sq[:n]
 
 

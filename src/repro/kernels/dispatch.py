@@ -1,31 +1,33 @@
 """Measured-crossover dispatch between apply substrates (ROADMAP stopgap).
 
-``BENCH_agg_time.json`` (committed full grid) shows the fused Pallas select
-kernel winning the bulyan apply below ~1e5 coordinates per leaf but losing
-~2x to the plain XLA substrate at d = 1e6 — the fused-select large-d cliff
-(the kernel re-reads its extraction tiles once per output tile).  The
-deep-grid tile lift (``ops.fused_select_d_tile``) cut the d = 1e6 point
-from ~8.6 s to ~3.0 s by re-autotuning with a larger tile cap when the
-grid exceeds ``ops.DEEP_GRID_STEPS`` steps, but the re-read term still
-dominates there, so ``use_pallas=True`` must not blindly take the fused
-path: :func:`fused_wins` consults a dispatch table of the *measured*
-crossover points and the apply phase falls back to the XLA substrate
-above them (``core.api._bulyan_leaf``; pass ``fused="force"`` to pin the
-kernel regardless, which the substrate benchmarks do).
+``use_pallas=True`` must not blindly take the fused kernel:
+:func:`fused_wins` consults a dispatch table of *measured* crossover
+points read off the committed ``BENCH_agg_time.json`` substrate grid, and
+the apply phase falls back to the XLA substrate above them
+(``core.api._bulyan_leaf``; pass ``fused="force"`` to pin the kernel
+regardless, which the substrate benchmarks do).
 
-The baked-in table is read off the committed BENCH_agg_time.json grid:
+In the single-level era this table existed to route d = 1e6 applies
+*away* from the fused kernel: the kernel re-fetched its replicated
+extraction operands once per ``d_tile``-wide grid step, so at n=15 it won
+d=1e5 but lost ~2× at d=1e6.  The two-level operand-resident kernel
+(``kernels/fused_select.py``) reads those operands once per macro block
+and the measured loss is gone — the refreshed grid shows fused winning
+every committed cell, so the table is right-censored:
 
 ===  ==========================  ==========================
  n    largest d fused won (us)    smallest d fused lost (us)
 ===  ==========================  ==========================
- 11   4096   (1434 vs 4341)       —
- 15   100000 (79286 vs 143981)    1000000 (3042569 vs 1425535)
+ 11   1000000                     —
+ 15   1000000                     —
 ===  ==========================  ==========================
 
 Per-n thresholds are the geometric midpoint of the bracketing measured
-points; n values without a measured loss point inherit the most
-conservative (smallest) threshold observed.  :func:`load_measured`
-recomputes the table from a fresh benchmark JSON.
+points where a loss exists; with no measured loss anywhere the table
+falls back to the measured win frontier — the benchmark's evidence stops
+there, so the dispatch does too (deeper applies take the XLA substrate
+until a benchmark measures them).  :func:`load_measured` recomputes the
+table from a fresh benchmark JSON.
 """
 from __future__ import annotations
 
@@ -36,8 +38,8 @@ from typing import Dict, Optional, Tuple
 # (largest numel where fused won, smallest where it lost or None) per n,
 # from the committed BENCH_agg_time.json multi_bulyan[fused|xla] rows
 MEASURED_POINTS: Dict[int, Tuple[int, Optional[int]]] = {
-    11: (4096, None),
-    15: (100_000, 1_000_000),
+    11: (1_000_000, None),
+    15: (1_000_000, None),
 }
 
 
@@ -53,7 +55,12 @@ def _build_table(points: Dict[int, Tuple[int, Optional[int]]]
                  ) -> Tuple[Dict[int, int], int]:
     bracketed = [_threshold(w, l, 0) for w, l in points.values()
                  if l is not None]
-    default = min(bracketed) if bracketed else 1 << 18
+    if bracketed:
+        default = min(bracketed)
+    else:
+        # right-censored table (no measured loss anywhere): the win
+        # frontier is as far as the evidence goes
+        default = max((w for w, _ in points.values()), default=1 << 18)
     table = {n: _threshold(w, l, default) for n, (w, l) in points.items()}
     return table, default
 

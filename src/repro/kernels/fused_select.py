@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fully fused BULYAN apply phase.
+"""Pallas TPU kernel: fully fused BULYAN apply phase (two-level grid).
 
 The unfused pipeline materialises both (θ, d) intermediates in HBM:
 
@@ -8,17 +8,35 @@ The unfused pipeline materialises both (θ, d) intermediates in HBM:
 
 — three O(θ·d) HBM round-trips that dominate the memory-bound roofline
 (kernels/coord_select.py header).  This kernel fuses the whole apply phase
-over d-tiles: each grid step streams one (n, d_tile) block of the gradient
-stack HBM→VMEM, contracts it with the small replicated (θ, n) extraction /
-aggregate weight matrices on the MXU, and runs median → β-selection → mean
-on the VPU while the tile is still in VMEM.  The only HBM traffic is the
-one read of the stack and the (d,) output write — the same traffic plain
-averaging pays, which is the paper's m/n-slowdown claim made literal.
+so the only HBM traffic is the one read of the stack and the (d,) output
+write — the same traffic plain averaging pays, which is the paper's
+m/n-slowdown claim made literal.
 
-VMEM per grid step: (n + 2θ)·d_tile·4 B for the tile and the two einsum
-outputs, ~3·θ²·d_tile·4 B for the rank-counting broadcasts, plus
-2·θ·n·4 B for the replicated weights (θ ≤ n ≤ 64 on our meshes → ≤ 32 KB).
-``kernels/ops.py`` autotunes d_tile against this budget.
+Two-level grid
+--------------
+The outer Pallas grid walks **macro-tiles** of ``macro_tile`` lanes.  Each
+macro step brings one (n, macro_tile) block of the gradient stack plus the
+small replicated (θ, n) extraction / aggregate weight matrices into VMEM,
+then an inner ``fori_loop`` sweeps ``macro_tile // d_tile`` lane windows of
+``d_tile`` each, running the einsum → median → β-selection → mean pipeline
+per window.  The weights are read from their VMEM refs **once per macro
+step**, not once per window — the per-step operand re-fetch plus dispatch
+overhead is exactly the term that made the single-level kernel lose to XLA
+past ~40 grid steps (the BENCH_agg_time.json d=1e6 cliff).  The inner loop
+is a single traced body, so its per-window cost is pure compute.
+
+Bitwise invariance: every pipeline stage is **column-independent** — the
+einsums contract over the worker axis and the median / rank-by-counting /
+masked mean act per coordinate — so any (macro_tile, d_tile) partition of
+the lane axis produces bit-identical output to any other, including the
+single-level ``macro_tile == d_tile`` layout.  Tested over the PR-2 edge
+grid in tests/test_kernels.py.
+
+VMEM per macro step: 2 · n·macro_tile·4 B for the double-buffered stack
+block, (2θ + ~3θ²)·d_tile·4 B for the per-window einsum outputs and
+rank-counting broadcasts, plus 2·θ·n·4 B for the resident weights.
+``kernels/ops.two_level_tiles`` sizes (macro_tile, d_tile) against this
+budget.
 
 Numerics match ``core.gar.bulyan_coordinate_phase`` composed with the
 weight einsums bit-for-bit in interpret mode (tested in
@@ -38,10 +56,9 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 
-def _kernel(x_ref, we_ref, wa_ref, o_ref, *, beta: int):
-    x = x_ref[...].astype(jnp.float32)               # (n_pad, dt)
-    we = we_ref[...]                                 # (theta, n_pad) fp32
-    wa = wa_ref[...]
+def _select_tile(x, we, wa, *, beta: int):
+    """The per-window pipeline: (n_pad, dt) fp32 tile + resident weights
+    -> (dt,) aggregate.  Column-independent — see module header."""
     theta = we.shape[0]
 
     # extraction einsums — MXU, contraction over the worker axis.  HIGHEST:
@@ -72,13 +89,66 @@ def _kernel(x_ref, we_ref, wa_ref, o_ref, *, beta: int):
     eq_lower = eq * (col < row).astype(jnp.int32)    # ties -> smaller index first
     rank = jnp.sum(lt + eq_lower, axis=1)            # (theta, dt)
     sel = rank < beta
-    o_ref[...] = (jnp.sum(jnp.where(sel, agr, 0.0), axis=0)
-                  / float(beta))[None, :]
+    return jnp.sum(jnp.where(sel, agr, 0.0), axis=0) / float(beta)
+
+
+def _kernel(x_ref, we_ref, wa_ref, o_ref, *, beta: int, d_tile: int,
+            windows: int):
+    # One read of the replicated weight pair per MACRO step; the inner
+    # windows all close over the loaded values.
+    we = we_ref[...]                                 # (theta, n_pad) fp32
+    wa = wa_ref[...]
+
+    def window(j, carry):
+        x = x_ref[:, pl.ds(j * d_tile, d_tile)].astype(jnp.float32)
+        o_ref[0, pl.ds(j * d_tile, d_tile)] = _select_tile(
+            x, we, wa, beta=beta)
+        return carry
+
+    if windows == 1:
+        # single-window macro: skip the loop machinery entirely — this is
+        # the exact single-level kernel body, kept as the trace for small d
+        window(0, 0)
+    else:
+        jax.lax.fori_loop(0, windows, window, 0)
+
+
+@functools.lru_cache(maxsize=256)
+def _build_call(np_: int, dp: int, theta: int, beta: int, d_tile: int,
+                macro_tile: int, interpret: bool):
+    """Cached pallas_call builder keyed on the fully resolved launch config.
+
+    Building the call (closing the BlockSpecs over the padded geometry) is
+    pure Python; caching it means repeat launches at the same geometry —
+    every trainer step — skip the spec construction and reuse one callable
+    identity, which also keeps the surrounding jit caches warm.
+    """
+    windows = macro_tile // d_tile
+    return pl.pallas_call(
+        functools.partial(_kernel, beta=beta, d_tile=d_tile,
+                          windows=windows),
+        grid=(dp // macro_tile,),
+        in_specs=[
+            pl.BlockSpec((np_, macro_tile), lambda i: (0, i)),
+            pl.BlockSpec((theta, np_), lambda i: (0, 0)),
+            pl.BlockSpec((theta, np_), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, macro_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        interpret=interpret,
+    )
 
 
 def fused_select_pallas(x: Array, w_ext: Array, w_agr: Array, beta: int, *,
-                        d_tile: int = 2048, interpret: bool = False) -> Array:
-    """(n, d) stack + (θ, n) plan weights -> (d,) fp32 Bulyan aggregate."""
+                        d_tile: int = 2048, macro_tile: int | None = None,
+                        interpret: bool = False) -> Array:
+    """(n, d) stack + (θ, n) plan weights -> (d,) fp32 Bulyan aggregate.
+
+    ``macro_tile`` (a multiple of ``d_tile``; default ``d_tile`` — the
+    single-level layout) sets the outer-grid block width; the lane axis is
+    padded to a ``macro_tile`` multiple.  Output is bitwise-invariant to
+    the choice (column independence — module header).
+    """
     if x.ndim != 2:
         raise ValueError(f"x must be (n, d), got shape {x.shape}")
     n, d = x.shape
@@ -93,25 +163,29 @@ def fused_select_pallas(x: Array, w_ext: Array, w_agr: Array, beta: int, *,
         raise ValueError(f"need 1 <= beta <= theta, got beta={beta}, "
                          f"theta={theta}")
     d_tile = min(d_tile, max(128, ((d - 1) // 128 + 1) * 128))
+    if macro_tile is None:
+        macro_tile = d_tile
+    if macro_tile % d_tile:
+        raise ValueError(f"macro_tile {macro_tile} must be a multiple of "
+                         f"d_tile {d_tile}")
+    # never carry more macro than the (padded) operand has lanes — d_cap is
+    # a d_tile multiple, so the clamp preserves the divisibility invariant
+    d_cap = ((d - 1) // d_tile + 1) * d_tile
+    macro_tile = min(macro_tile, d_cap)
     n_pad = (-n) % 8
-    d_pad = (-d) % d_tile
+    d_pad = (-d) % macro_tile
     if n_pad or d_pad:
         x = jnp.pad(x, ((0, n_pad), (0, d_pad)))
     if n_pad:
         w_ext = jnp.pad(w_ext, ((0, 0), (0, n_pad)))
         w_agr = jnp.pad(w_agr, ((0, 0), (0, n_pad)))
+    # pad/cast hoisted: only cast when the dtype actually differs — a fp32
+    # caller (every plan produced by core.gar) pays no per-call convert op
+    if w_ext.dtype != jnp.float32:
+        w_ext = w_ext.astype(jnp.float32)
+    if w_agr.dtype != jnp.float32:
+        w_agr = w_agr.astype(jnp.float32)
     np_, dp = x.shape
-    grid = (dp // d_tile,)
-    out = pl.pallas_call(
-        functools.partial(_kernel, beta=beta),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((np_, d_tile), lambda i: (0, i)),
-            pl.BlockSpec((theta, np_), lambda i: (0, 0)),
-            pl.BlockSpec((theta, np_), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, d_tile), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
-        interpret=interpret,
-    )(x, w_ext.astype(jnp.float32), w_agr.astype(jnp.float32))
+    call = _build_call(np_, dp, theta, beta, d_tile, macro_tile, interpret)
+    out = call(x, w_ext, w_agr)
     return out[0, :d]

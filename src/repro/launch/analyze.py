@@ -18,8 +18,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.analyze --strict   # CI gate
 
 ``--strict`` exits nonzero on any lint violation, any violated contract,
-a failed cliff diagnosis, or an uncalibrated crossover — the gate every
-kernel/sharding PR must pass.
+a failed traffic-linearity diagnosis, or an uncalibrated crossover — the
+gate every kernel/sharding PR must pass.
 """
 import argparse
 import json
@@ -88,10 +88,11 @@ def run_kernels(bench_path: str) -> Dict:
     if os.path.isfile(bench_path):
         with open(bench_path) as fh:
             bench = json.load(fh)
-        out["cliff"] = vmem.diagnose_cliff(bench.get("results", bench))
+        out["traffic_linearity"] = vmem.diagnose_traffic_linearity(
+            bench.get("results", bench))
     else:
-        out["cliff"] = {"points": [], "holds": False,
-                        "detail": f"{bench_path} not found"}
+        out["traffic_linearity"] = {"points": [], "holds": False,
+                                    "detail": f"{bench_path} not found"}
     return out
 
 
@@ -106,21 +107,22 @@ def gate_problems(report: Dict) -> List[str]:
         if res["status"] != "proven":
             problems.append(f"contract {name} violated: "
                             + "; ".join(res["violations"]))
-    cliff = report["analysis"]["cliff"]
-    if not cliff.get("holds"):
-        problems.append(
-            f"vmem cliff diagnosis does not hold: {cliff.get('detail')}")
+    traffic = report["analysis"]["traffic_linearity"]
+    if not traffic.get("holds"):
+        problems.append("vmem traffic-linearity diagnosis does not hold: "
+                        f"{traffic.get('detail')}")
     for key, x in report["analysis"]["crossover"].items():
-        if not 0.5 <= x["ratio"] <= 2.0:
+        if not x["calibrated"]:
             problems.append(
                 f"crossover {key}: predicted {x['predicted_numel']} vs "
-                f"measured {x['measured_numel']} (ratio {x['ratio']:.2f} "
-                "outside [0.5, 2])")
+                f"measured {x['measured_numel']} (ratio {x['ratio']:.2f}, "
+                f"censored={x['censored']}) — model uncalibrated")
     d1e6 = report["analysis"]["kernels"]["fused_select"].get("n=15,d=1000000")
-    if d1e6 and not (d1e6["grid_bound"] and d1e6["over_budget"]):
-        problems.append("fused_select n=15,d=1e6 is not flagged "
-                        "grid-bound + over-budget — the measured cliff "
-                        "is no longer explained")
+    if d1e6 and not (d1e6["over_budget"] and not d1e6["tile_over_budget"]
+                     and d1e6["macro_tile"] > d1e6["d_tile"]):
+        problems.append("fused_select n=15,d=1e6 must tile (over_budget), "
+                        "fit per macro step, and run a multi-window macro "
+                        "block — the two-level residency claim fails")
     return problems
 
 
@@ -159,12 +161,12 @@ def main(argv=None) -> int:
     print(f"lint: {nlint} violation(s) over {res_['lint']['paths']}")
     for name, res in sorted(res_["contracts"].items()):
         print(f"{name}: {res['status']} — {res['detail']}")
-    cliff = res_["analysis"]["cliff"]
-    print(f"vmem cliff diagnosis: holds={cliff.get('holds')}")
+    traffic = res_["analysis"]["traffic_linearity"]
+    print(f"vmem traffic linearity: holds={traffic.get('holds')}")
     for key, x in sorted(res_["analysis"]["crossover"].items()):
         print(f"crossover {key}: predicted numel {x['predicted_numel']:,} "
               f"vs measured {x['measured_numel']:,} "
-              f"(ratio {x['ratio']:.2f})")
+              f"(ratio {x['ratio']:.2f}, censored={x['censored']})")
     if problems:
         print(f"\n{len(problems)} problem(s):")
         for p in problems:

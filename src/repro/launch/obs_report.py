@@ -68,8 +68,8 @@ def _kernel_report(points: Tuple[Tuple[int, int], ...]) -> None:
         meas = rec["vmem_measured"]
         print(f"[obs_report] kernel {rec['kernel']:<15} "
               f"n={rec['n']:<4} d={rec['d']:<8} "
-              f"d_tile={rec['d_tile']:<6} grid={rec['grid_steps']:<3} "
-              f"deep={rec['deep_grid']} "
+              f"d_tile={rec['d_tile']:<6} macro={rec['macro_tile']:<6} "
+              f"grid={rec['grid_steps']:<3} "
               f"vmem_pred={'-' if pred is None else pred} "
               f"vmem_meas={'-' if meas is None else meas} "
               f"over_budget={rec['over_budget']}")

@@ -40,9 +40,10 @@ class KernelRecord:
     kernel: str              # fused_select | pairwise_stats | dequant_stats
     n: int                   # stack rows (unpadded)
     d: int
-    d_tile: int              # the tile the wrapper actually launched with
-    grid_steps: int
-    deep_grid: bool          # fused_select only: deep-grid lift engaged
+    d_tile: int              # inner compute window the wrapper launched with
+    macro_tile: int          # outer macro block (== d_tile -> single-level)
+    grid_steps: int          # OUTER grid steps (macro blocks)
+    windows: int             # inner d_tile windows per macro block
     vmem_predicted: Optional[int]   # analysis/vmem per-step working set
     vmem_budget: Optional[int]
     over_budget: Optional[bool]
@@ -67,20 +68,20 @@ class KernelProfiler:
 
 
 def record_kernel(kernel: str, *, n: int, d: int, d_tile: int,
+                  macro_tile: Optional[int] = None,
                   theta: Optional[int] = None,
-                  dtype: Optional[str] = None) -> None:
+                  dtype: Optional[str] = None,
+                  n_loc: Optional[int] = None) -> None:
     """Called by the ops wrappers after tile resolution; cheap no-op
     unless a profiler is installed."""
     if not _ACTIVE:
         return
-    est = _predict(kernel, n=n, d=d, d_tile=d_tile, theta=theta,
-                   dtype=dtype)
-    # deep-grid lift: the chosen tile exceeds the base autotune cap
-    from repro.kernels import ops
+    macro = d_tile if macro_tile is None else macro_tile
+    est = _predict(kernel, n=n, d=d, d_tile=d_tile, macro_tile=macro,
+                   theta=theta, dtype=dtype)
     rec = KernelRecord(
-        kernel=kernel, n=n, d=d, d_tile=d_tile,
-        grid_steps=-(-d // d_tile),
-        deep_grid=(kernel == "fused_select" and d_tile > ops._MAX_D_TILE),
+        kernel=kernel, n=n, d=d, d_tile=d_tile, macro_tile=macro,
+        grid_steps=-(-d // macro), windows=macro // d_tile,
         vmem_predicted=None if est is None else est.vmem_bytes,
         vmem_budget=None if est is None else est.vmem_budget,
         over_budget=None if est is None else est.over_budget)
@@ -88,7 +89,7 @@ def record_kernel(kernel: str, *, n: int, d: int, d_tile: int,
         profiler.records.append(rec)
 
 
-def _predict(kernel: str, *, n: int, d: int, d_tile: int,
+def _predict(kernel: str, *, n: int, d: int, d_tile: int, macro_tile: int,
              theta: Optional[int], dtype: Optional[str]):
     # lazy import: vmem imports kernels.ops at module load, and ops
     # imports this module — resolving the estimate at record time keeps
@@ -99,12 +100,15 @@ def _predict(kernel: str, *, n: int, d: int, d_tile: int,
             if theta is None or (n - theta - 2) % 2:
                 return None
             return vmem.estimate_fused_select(
-                n, d, f=(n - theta - 2) // 2, d_tile=d_tile)
+                n, d, f=(n - theta - 2) // 2, d_tile=d_tile,
+                macro_tile=macro_tile)
         if kernel == "pairwise_stats":
-            return vmem.estimate_pairwise_stats(n, d, d_tile=d_tile)
+            return vmem.estimate_pairwise_stats(
+                n, d, d_tile=d_tile, macro_tile=macro_tile)
         if kernel == "dequant_stats":
             return vmem.estimate_dequant_stats(
-                n, d, dtype=dtype or "int8", d_tile=d_tile)
+                n, d, dtype=dtype or "int8", d_tile=d_tile,
+                macro_tile=macro_tile)
     except ValueError:
         return None
     return None

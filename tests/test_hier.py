@@ -200,8 +200,11 @@ def test_encoded_input_and_leader_reencode():
 def test_fused_wins_measured_points():
     from repro.kernels import dispatch
     assert dispatch.fused_wins(15, 100_000)          # measured win
-    assert not dispatch.fused_wins(15, 1_000_000)    # measured loss
-    # unmeasured n inherits the most conservative bracketed crossover
+    # two-level kernel: the d=1e6 cell flipped from the single-level
+    # era's 2x loss to a measured win — deep applies route to fused now
+    assert dispatch.fused_wins(15, 1_000_000)
+    assert dispatch.fused_wins(11, 1_000_000)
+    # unmeasured n inherits the win frontier (no measured loss remains)
     assert dispatch.fused_wins(23, dispatch.DEFAULT_FUSED_MAX_NUMEL)
     assert not dispatch.fused_wins(23, dispatch.DEFAULT_FUSED_MAX_NUMEL + 1)
 
@@ -220,6 +223,17 @@ def test_load_measured_rebuilds_table(tmp_path):
         assert dispatch.MEASURED_POINTS == {9: (100, 10000)}
         assert dispatch.fused_wins(9, 999)       # geomean(100,1e4) = 1000
         assert not dispatch.fused_wins(9, 1001)
+        # all-wins payload: the censored table falls back to the frontier
+        p2 = tmp_path / "bench_wins.json"
+        p2.write_text(json.dumps({"results": {
+            "multi_bulyan[fused]": {"n=9,d=100": 1.0, "n=9,d=10000": 2.0},
+            "multi_bulyan[xla]": {"n=9,d=100": 2.0, "n=9,d=10000": 3.0},
+        }}))
+        dispatch.load_measured(str(p2))
+        assert dispatch.MEASURED_POINTS == {9: (10000, None)}
+        assert dispatch.DEFAULT_FUSED_MAX_NUMEL == 10000
+        assert dispatch.fused_wins(9, 10000)
+        assert not dispatch.fused_wins(9, 10001)
     finally:
         dispatch.MEASURED_POINTS = saved
         dispatch.FUSED_MAX_NUMEL, dispatch.DEFAULT_FUSED_MAX_NUMEL = \
@@ -242,6 +256,10 @@ def test_apply_dispatch_falls_back_past_crossover(monkeypatch):
     assert calls, "below the crossover the fused kernel must be used"
     calls.clear()
     from repro.kernels import dispatch
+    # pin a small threshold: the real refreshed table routes everything
+    # measured to fused, which would make this exercise a d > 1e6 apply
+    monkeypatch.setattr(dispatch, "FUSED_MAX_NUMEL", {})
+    monkeypatch.setattr(dispatch, "DEFAULT_FUSED_MAX_NUMEL", 4096)
     big_d = dispatch.DEFAULT_FUSED_MAX_NUMEL + 1
     big = jax.random.normal(KEY, (23, big_d), jnp.float32)
     api.aggregate_tree({"w": big}, 2, name="multi_bulyan", use_pallas=True)

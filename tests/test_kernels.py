@@ -144,6 +144,110 @@ def test_fused_select_rejects_bad_shapes():
         ops.fused_select(x, w, jnp.zeros((4, 8)), 1)
 
 
+# ------------------------------------------------------ two-level invariance
+@pytest.mark.parametrize("n,f", [(7, 1), (11, 2), (15, 3), (12, 2)])
+def test_fused_select_two_level_bitwise_vs_single_level(n, f):
+    """The macro grid is pure launch geometry: any (d_tile, macro_tile)
+    pair — including the policy default — must be bitwise-identical to
+    the single-level launch (fused_select is column-independent)."""
+    _, w_ext, w_agr, beta = _bulyan_plan_weights(n, f)
+    x = jnp.asarray(RNG.normal(size=(n, 257)).astype(np.float32))
+    single = np.asarray(ops.fused_select(x, w_ext, w_agr, beta,
+                                         d_tile=128, macro_tile=128))
+    for macro in (256, 384):
+        two = np.asarray(ops.fused_select(x, w_ext, w_agr, beta,
+                                          d_tile=128, macro_tile=macro))
+        np.testing.assert_array_equal(two, single)
+    np.testing.assert_array_equal(
+        np.asarray(ops.fused_select(x, w_ext, w_agr, beta)), single)
+
+
+def test_fused_select_two_level_bitwise_deep_grid():
+    """>= 2 macro blocks, each sweeping many inner windows — the d=1e6
+    launch shape in miniature, against the windows=1 launch."""
+    n, f = 11, 2
+    _, w_ext, w_agr, beta = _bulyan_plan_weights(n, f)
+    d = 120_000
+    dt, macro = ops.fused_select_tiles(16, d, w_ext.shape[0])
+    assert macro > dt and -(-d // macro) >= 2   # the regime under test
+    x = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    two = np.asarray(ops.fused_select(x, w_ext, w_agr, beta))
+    one = np.asarray(ops.fused_select(x, w_ext, w_agr, beta,
+                                      d_tile=dt, macro_tile=dt))
+    np.testing.assert_array_equal(two, one)
+
+
+def test_pairwise_stats_two_level_bitwise():
+    """Macro blocks must not change the accumulation order: the inner
+    d_tile windows run in global order across macro steps (the first-
+    window init + zero-pad tail windows add exact +0.0)."""
+    x = jnp.asarray(RNG.normal(size=(13, 3000)).astype(np.float32))
+    base_d, base_s = ops.pairwise_stats(x, d_tile=512, macro_tile=512)
+    for macro in (1024, 2048):      # 2048 pads d: exercises tail windows
+        dd, ss = ops.pairwise_stats(x, d_tile=512, macro_tile=macro)
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(base_d))
+        np.testing.assert_array_equal(np.asarray(ss), np.asarray(base_s))
+
+
+def test_pairwise_stats_two_level_bitwise_deep_grid():
+    d = 131_072
+    dt, macro = ops._stats_tiles(16, d)
+    assert macro > dt and -(-d // macro) >= 2
+    x = jnp.asarray(RNG.normal(size=(15, d)).astype(np.float32))
+    two_d, two_s = ops.pairwise_stats(x)            # policy launch
+    one_d, one_s = ops.pairwise_stats(x, d_tile=dt, macro_tile=dt)
+    np.testing.assert_array_equal(np.asarray(two_d), np.asarray(one_d))
+    np.testing.assert_array_equal(np.asarray(two_s), np.asarray(one_s))
+
+
+def test_dequant_stats_two_level_bitwise():
+    p = jnp.asarray(RNG.integers(-127, 127, size=(11, 3000)), jnp.int8)
+    m = jnp.asarray(RNG.random(11).astype(np.float32))
+    base_d, base_s = ops.dequant_stats(p, m, d_tile=512, macro_tile=512)
+    dd, ss = ops.dequant_stats(p, m, d_tile=512, macro_tile=2048)
+    np.testing.assert_array_equal(np.asarray(dd), np.asarray(base_d))
+    np.testing.assert_array_equal(np.asarray(ss), np.asarray(base_s))
+
+
+# ------------------------------------------------------- rectangular stats
+def test_pairwise_stats_rect_matches_square_rows():
+    """The §10 shard kernel: each row block of the rect kernel must be
+    bitwise-identical to the matching rows of the square kernel (same
+    inner tile policy + row-subset gemm determinism)."""
+    x = jnp.asarray(RNG.normal(size=(13, 3000)).astype(np.float32))
+    dd, sq = ops.pairwise_stats(x)
+    for start, stop in ((0, 4), (4, 9), (9, 13)):
+        rdd, rsq = ops.pairwise_stats_rect(x[start:stop], x)
+        assert rdd.shape == (stop - start, 13) and rsq.shape == (13,)
+        np.testing.assert_array_equal(np.asarray(rdd),
+                                      np.asarray(dd)[start:stop])
+        np.testing.assert_array_equal(np.asarray(rsq), np.asarray(sq))
+
+
+def test_dequant_stats_rect_matches_square_rows():
+    p = jnp.asarray(RNG.integers(-127, 127, size=(11, 2300)), jnp.int8)
+    m = jnp.asarray(RNG.random(11).astype(np.float32))
+    dd, sq = ops.dequant_stats(p, m)
+    rdd, rsq = ops.dequant_stats_rect(p[3:8], m[3:8], p, m)
+    np.testing.assert_array_equal(np.asarray(rdd), np.asarray(dd)[3:8])
+    np.testing.assert_array_equal(np.asarray(rsq), np.asarray(sq))
+    pb = jnp.asarray(RNG.normal(size=(11, 500)).astype(np.float32)
+                     ).astype(jnp.bfloat16)
+    mb = jnp.ones((11,), jnp.float32)
+    dd2, sq2 = ops.dequant_stats(pb, mb)
+    rdd2, rsq2 = ops.dequant_stats_rect(pb[:5], mb[:5], pb, mb)
+    np.testing.assert_array_equal(np.asarray(rdd2), np.asarray(dd2)[:5])
+    np.testing.assert_array_equal(np.asarray(rsq2), np.asarray(sq2))
+
+
+def test_dequant_stats_rect_rejects_mixed_payloads():
+    p8 = jnp.zeros((8, 256), jnp.int8)
+    pb = jnp.zeros((8, 256), jnp.bfloat16)
+    m = jnp.ones((8,), jnp.float32)
+    with pytest.raises(ValueError):
+        ops.dequant_stats_rect(p8[:4], m[:4], pb, m)
+
+
 # ---------------------------------------------------------------- autotuner
 def test_autotune_d_tile_lane_aligned_and_budgeted():
     for rows in (8, 24, 64, 200):
@@ -162,6 +266,34 @@ def test_autotune_d_tile_monotone_in_rows():
     assert narrow <= wide
     with pytest.raises(ValueError):
         ops.autotune_d_tile(0, 128)
+
+
+def test_two_level_tiles_aligned_budgeted_and_never_deeper():
+    for rows, d in ((16, 257), (16, 100_000), (16, 1_000_000),
+                    (64, 500_000)):
+        dt, macro = ops.two_level_tiles(rows, d, out_rows=1,
+                                        scratch_rows=100, fixed_bytes=4096)
+        assert dt % 128 == 0 and macro % dt == 0
+        if (dt, macro) != (128, 128):   # above the degenerate floor
+            assert (2 * (rows + 1) * 4 * macro + (100 + rows) * 4 * dt
+                    + 4096) <= ops.VMEM_BUDGET_BYTES
+        # the whole point: never more outer steps than single-level
+        assert -(-d // macro) <= -(-d // dt)
+        # never wider than the padded operand
+        assert macro <= ((d - 1) // dt + 1) * dt
+
+
+def test_two_level_tiles_deep_launch_is_macro_resident():
+    # the d=1e6 launch runs a multi-window macro block with a wide inner
+    # window (the _MIN_D_TILE floor: tiny windows lose to loop overhead)
+    dt, macro = ops.fused_select_tiles(16, 1_000_000, 7)
+    assert dt >= ops._MIN_D_TILE
+    assert macro >= 4 * dt
+    # stats keep their PR-2 inner tile and only grow the macro block
+    sdt, smacro = ops._stats_tiles(16, 1_000_000)
+    assert sdt == ops.autotune_d_tile(16, 1_000_000,
+                                      fixed_bytes=16 * 24 * 4)
+    assert smacro > sdt and smacro % sdt == 0
 
 
 def test_ops_interpret_resolved_outside_jit(monkeypatch):

@@ -77,6 +77,30 @@ def test_sharded_raw_stats_matches_streaming_accumulation():
                                   np.asarray(ref))
 
 
+@pytest.mark.parametrize("n,f", [(11, 2), (12, 2)])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_model_axis_raw_stats_matches_replicated(n, f, use_pallas):
+    """The §10 tensor-parallel stats seam: leaves sharded over the model
+    axis too.  At M = 1 (plain CI host mesh) the psum is a no-op and
+    parity with the replicated path is bitwise; at M > 1 the per-column-
+    shard psum reassociates the d sum (~1e-6)."""
+    grads = _tree(n, D_EDGE, seed=7 * n)
+    ctx = _ctx()
+    ref_d, ref_s = api.raw_pairwise_stats(grads, use_pallas=use_pallas)
+    dd, sq = api.sharded_raw_stats_model_axis(grads, mesh_ctx=ctx,
+                                              use_pallas=use_pallas)
+    assert dd.shape == (n, n) and sq.shape == (n,)
+    if ctx.model_size == 1:
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(ref_d))
+        np.testing.assert_array_equal(np.asarray(sq), np.asarray(ref_s))
+    else:
+        scale = max(float(jnp.max(ref_d)), 1.0)
+        np.testing.assert_allclose(np.asarray(dd), np.asarray(ref_d),
+                                   rtol=0, atol=1e-5 * scale)
+        np.testing.assert_allclose(np.asarray(sq), np.asarray(ref_s),
+                                   rtol=0, atol=1e-5 * scale)
+
+
 # ------------------------------------------------------------------ apply
 @pytest.mark.parametrize("rule", ["multi_krum", "multi_bulyan"])
 @pytest.mark.parametrize("n,f", EDGE_GRID)
